@@ -1,0 +1,71 @@
+"""Shared benchmark scaffolding: a scaled-down-but-faithful instance of the
+paper's experimental setting (100 clients -> configurable), CSV emission."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import FLTrainer, TopologyConfig, make_algo
+from repro.data.dirichlet import dirichlet_partition, stack_client_data
+from repro.data.synthetic import make_dataset
+from repro.models.small import get_model
+
+
+def build_setting(
+    dataset: str = "mnist",
+    n_clients: int = 16,
+    alpha: float = 0.3,  # Dirichlet; <=0 means IID
+    n_train: int = 4000,
+    n_test: int = 1000,
+    samples_per_client: int = 256,
+    model: str | None = None,
+    seed: int = 0,
+):
+    train, test = make_dataset(dataset, n_train, n_test, seed=seed)
+    parts = dirichlet_partition(train["y"], n_clients, alpha, seed=seed)
+    cdata = stack_client_data(train, parts, pad_to=samples_per_client)
+    cdata = {k: jnp.asarray(v) for k, v in cdata.items()}
+    testj = {k: jnp.asarray(v) for k, v in test.items()}
+    model = model or ("mnist_2nn" if dataset == "mnist" else "cifar_cnn")
+    n_classes = 100 if dataset == "cifar100" else 10
+    image = (784,) if dataset == "mnist" else (32, 32, 3)
+    net = get_model(model, n_classes, image)
+    return net, cdata, testj
+
+
+def run_algo(
+    name: str,
+    net,
+    cdata,
+    testj,
+    rounds: int = 30,
+    n_clients: int = 16,
+    participation: float = 0.25,
+    local_steps: int = 5,
+    seed: int = 0,
+    eval_every: int = 0,
+    **overrides,
+):
+    from repro.core import ALGORITHMS
+
+    # D-PSGD/SGP are one-step methods in the paper (K=1); keep that.
+    if ALGORITHMS[name].local_steps == 1:
+        local_steps = 1
+    algo = make_algo(name, local_steps=local_steps, batch_size=32, **overrides)
+    topo = TopologyConfig(kind="kout", n_clients=n_clients,
+                          k_out=max(int(participation * n_clients), 1))
+    tr = FLTrainer(net.loss, net.init, cdata, algo, topo, seed=seed,
+                   participation=participation)
+    t0 = time.time()
+    hist = tr.fit(rounds, test_data=testj if eval_every else None,
+                  eval_every=eval_every)
+    wall = time.time() - t0
+    loss, acc = tr.evaluate(testj)
+    return {"algo": name, "acc": acc, "loss": loss, "wall_s": wall,
+            "us_per_round": 1e6 * wall / rounds, "history": hist}
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,33 @@
+"""Paper Figure 1: test-accuracy-vs-round convergence curves.
+
+CSV: name,us_per_call,derived (derived = acc@25%,50%,100% of rounds),
+plus per-round curves written to benchmarks/out/fig1_<algo>.csv.
+"""
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import build_setting, emit, run_algo
+
+ALGOS = ["dfedavgm", "dfedsam", "osgp", "dfedsgpsm"]
+OUT = os.path.join(os.path.dirname(__file__), "out")
+
+
+def main(fast: bool = False):
+    rounds = 12 if fast else 30
+    net, cdata, testj = build_setting("mnist", n_clients=16, alpha=0.3)
+    os.makedirs(OUT, exist_ok=True)
+    for algo in ALGOS:
+        r = run_algo(algo, net, cdata, testj, rounds=rounds, n_clients=16,
+                     eval_every=max(rounds // 6, 1))
+        curve = [(h["round"], h["test_acc"]) for h in r["history"]
+                 if "test_acc" in h]
+        with open(os.path.join(OUT, f"fig1_{algo}.csv"), "w") as f:
+            f.write("round,test_acc\n")
+            f.writelines(f"{r0},{a:.4f}\n" for r0, a in curve)
+        marks = ",".join(f"{100 * a:.1f}" for _, a in curve[:3])
+        emit(f"fig1/{algo}", r["us_per_round"], f"acc_curve%={marks}")
+
+
+if __name__ == "__main__":
+    main()

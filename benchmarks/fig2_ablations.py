@@ -1,0 +1,32 @@
+"""Paper Figure 2: hyperparameter sensitivity of DFedSGPSM —
+(a) momentum coefficient alpha, (b) client participation ratio,
+(c) SAM perturbation radius rho.
+"""
+from __future__ import annotations
+
+from benchmarks.common import build_setting, emit, run_algo
+
+
+def main(fast: bool = False):
+    rounds = 10 if fast else 20
+    net, cdata, testj = build_setting("mnist", n_clients=16, alpha=0.3)
+
+    for a in (0.1, 0.5, 0.7, 0.9):
+        r = run_algo("dfedsgpsm", net, cdata, testj, rounds=rounds,
+                     n_clients=16, alpha=a)
+        emit(f"fig2a/alpha={a}", r["us_per_round"], f"acc={100 * r['acc']:.2f}%")
+
+    for ratio in (0.125, 0.25, 0.5):
+        r = run_algo("dfedsgpsm", net, cdata, testj, rounds=rounds,
+                     n_clients=16, participation=ratio)
+        emit(f"fig2b/participation={ratio}", r["us_per_round"],
+             f"acc={100 * r['acc']:.2f}%")
+
+    for rho in (0.05, 0.1, 0.2, 0.3):
+        r = run_algo("dfedsgpsm", net, cdata, testj, rounds=rounds,
+                     n_clients=16, rho=rho)
+        emit(f"fig2c/rho={rho}", r["us_per_round"], f"acc={100 * r['acc']:.2f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Kernel microbenchmarks: Pallas (interpret on CPU / Mosaic on TPU) vs the
+pure-jnp oracle, plus derived roofline bytes for the fused update.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core import topology as topo
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else None
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return 1e6 * (time.perf_counter() - t0) / iters
+
+
+def main(fast: bool = False):
+    n, d = 128, 1 << (16 if fast else 20)
+    P = topo.sample_kout(jax.random.PRNGKey(0), n, 10)
+    X = jax.random.normal(jax.random.PRNGKey(1), (n, d), jnp.float32)
+    us_ref = _time(jax.jit(ref.gossip_matmul_ref), P, X)
+    emit("kernel/gossip_matmul/ref", us_ref,
+         f"n={n},D={d},GB={2 * n * d * 4 / 1e9:.2f}")
+    us_pal = _time(lambda p, x: ops.gossip_matmul(p, x), P, X)
+    emit("kernel/gossip_matmul/pallas", us_pal, "interpret" if not ops.on_tpu() else "mosaic")
+
+    D = 1 << (18 if fast else 22)
+    x = jax.random.normal(jax.random.PRNGKey(0), (D,))
+    v = jnp.zeros((D,))
+    g = jax.random.normal(jax.random.PRNGKey(1), (D,))
+    us_ref = _time(jax.jit(lambda *a: ref.fused_update_ref(*a, 0.9, 0.1, 1.1)), x, v, g)
+    hbm_bytes = 6 * D * 4
+    emit("kernel/fused_update/ref", us_ref, f"D={D},bytes={hbm_bytes}")
+    us_pal = _time(lambda *a: ops.fused_update(*a, 0.9, 0.1, 1.1), x, v, g)
+    emit("kernel/fused_update/pallas", us_pal,
+         f"roofline_us@819GBps={1e6 * hbm_bytes / 819e9:.1f}")
+
+    B, H, S, hd = 1, 4, 512 if fast else 1024, 64
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, H, S, hd), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, H, S, hd), jnp.float32)
+    vv = jax.random.normal(jax.random.PRNGKey(2), (B, H, S, hd), jnp.float32)
+    us_ref = _time(jax.jit(lambda a, b, c: ref.flash_attention_ref(a, b, c)), q, k, vv)
+    flops = 4 * B * H * S * S * hd
+    emit("kernel/flash_attention/ref", us_ref, f"S={S},GFLOP={flops / 1e9:.1f}")
+    us_pal = _time(lambda a, b, c: ops.flash_attention(a, b, c), q, k, vv)
+    emit("kernel/flash_attention/pallas", us_pal,
+         "interpret-mode-correctness" if not ops.on_tpu() else "mosaic")
+
+
+if __name__ == "__main__":
+    main()

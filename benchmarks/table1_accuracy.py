@@ -1,0 +1,35 @@
+"""Paper Table 1: top-1 test accuracy of all 9 algorithms across datasets and
+non-IID levels (Dir-0.3 / Dir-0.6 / IID) — scaled-down synthetic setting.
+
+CSV: name,us_per_call,derived  (derived = final test accuracy %).
+"""
+from __future__ import annotations
+
+from benchmarks.common import build_setting, emit, run_algo
+
+ALGOS = ["fedavg", "dpsgd", "dfedavg", "dfedavgm", "dfedsam", "sgp", "osgp",
+         "dfedsgpsm", "dfedsgpsm_s"]
+
+
+def main(fast: bool = False, datasets=("mnist",), alphas=(0.3, 0.6, 0.0)):
+    # 16 clients in both modes: at 8 clients the per-client label skew is
+    # extreme enough that momentum(0.9) x 5 local steps at lr 0.1 diverges
+    # (measured; the paper's setting is 100 clients).
+    rounds = 12 if fast else 25
+    n_clients = 16
+    results = {}
+    for ds in datasets:
+        for alpha in alphas:
+            net, cdata, testj = build_setting(ds, n_clients=n_clients, alpha=alpha)
+            split = f"dir{alpha}" if alpha > 0 else "iid"
+            for algo in ALGOS:
+                r = run_algo(algo, net, cdata, testj, rounds=rounds,
+                             n_clients=n_clients)
+                results[(ds, split, algo)] = r["acc"]
+                emit(f"table1/{ds}/{split}/{algo}", r["us_per_round"],
+                     f"acc={100 * r['acc']:.2f}%")
+    return results
+
+
+if __name__ == "__main__":
+    main()

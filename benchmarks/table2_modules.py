@@ -1,0 +1,23 @@
+"""Paper Table 2: module-augmentation ablation —
+OSGP -> +Momentum (DFedSGPM) -> +SAM (DFedSGPSM) -> +Selection (DFedSGPSM-S).
+"""
+from __future__ import annotations
+
+from benchmarks.common import build_setting, emit, run_algo
+
+LADDER = ["osgp", "dfedsgpm", "dfedsgpsm", "dfedsgpsm_s"]
+
+
+def main(fast: bool = False):
+    rounds = 12 if fast else 25
+    net, cdata, testj = build_setting("mnist", n_clients=16, alpha=0.3)
+    accs = {}
+    for algo in LADDER:
+        r = run_algo(algo, net, cdata, testj, rounds=rounds, n_clients=16)
+        accs[algo] = r["acc"]
+        emit(f"table2/{algo}", r["us_per_round"], f"acc={100 * r['acc']:.2f}%")
+    return accs
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Quickstart: train DFedSGPSM (the paper's algorithm) on a synthetic
+non-IID MNIST-shaped task with 16 clients over a directed time-varying
+topology, and compare against OSGP (the asymmetric baseline it extends).
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+
+from repro.core import FLTrainer, TopologyConfig, make_algo
+from repro.data.dirichlet import dirichlet_partition, stack_client_data
+from repro.data.synthetic import make_dataset
+from repro.models.small import mnist_2nn
+
+
+def main():
+    n_clients, rounds = 16, 20
+    train, test = make_dataset("mnist", 4000, 1000, seed=0)
+    parts = dirichlet_partition(train["y"], n_clients, alpha=0.3, seed=0)
+    cdata = {k: jnp.asarray(v) for k, v in
+             stack_client_data(train, parts, pad_to=256).items()}
+    testj = {k: jnp.asarray(v) for k, v in test.items()}
+    model = mnist_2nn()
+    topo = TopologyConfig(kind="kout", n_clients=n_clients, k_out=4)
+
+    for name in ("osgp", "dfedsgpsm"):
+        algo = make_algo(name, local_steps=5, batch_size=32)
+        tr = FLTrainer(model.loss, model.init, cdata, algo, topo, seed=0,
+                       participation=0.25)
+        tr.fit(rounds, test_data=testj, eval_every=5,
+               log=lambda r: print(f"  [{name}] round {r['round']:3d} "
+                                   f"loss={r['loss']:.3f}"
+                                   + (f" test_acc={r['test_acc']:.3f}"
+                                      if "test_acc" in r else "")))
+        loss, acc = tr.evaluate(testj)
+        w = tr.state.w
+        print(f"{name}: final test acc={acc:.3f} loss={loss:.3f} "
+              f"(push-sum mass {float(w.sum()):.3f} == n_clients)")
+
+
+if __name__ == "__main__":
+    main()

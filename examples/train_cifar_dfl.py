@@ -1,0 +1,80 @@
+"""End-to-end driver: the paper's CIFAR-10 experiment.
+
+CNN backbone, Dirichlet non-IID partition, 9 selectable algorithms,
+checkpointing, and JSON logging.  Scaled to CPU by default (~1 min/round on
+a 1-core container); --paper approaches the paper's setting (100 clients,
+500 rounds, ResNet-18-GN) on real hardware.
+
+  PYTHONPATH=src python examples/train_cifar_dfl.py --algo dfedsgpsm --rounds 15
+"""
+import argparse
+import json
+import os
+
+import jax.numpy as jnp
+
+from repro import checkpoint
+from repro.core import ALGORITHMS, FLTrainer, TopologyConfig, make_algo
+from repro.data.dirichlet import dirichlet_partition, partition_summary, stack_client_data
+from repro.data.synthetic import make_dataset
+from repro.models.small import get_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--algo", default="dfedsgpsm", choices=sorted(ALGORITHMS))
+    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--alpha", type=float, default=0.3, help="Dirichlet (<=0 = IID)")
+    ap.add_argument("--model", default="cifar_cnn",
+                    choices=["cifar_cnn", "resnet18_gn", "mnist_2nn"])
+    ap.add_argument("--local-steps", type=int, default=3)
+    ap.add_argument("--participation", type=float, default=0.25)
+    ap.add_argument("--paper", action="store_true",
+                    help="paper scale: 100 clients, 500 rounds, resnet18_gn")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    if args.paper:
+        args.clients, args.rounds, args.model = 100, 500, "resnet18_gn"
+        args.participation = 0.1
+
+    train, test = make_dataset("cifar10", 4000, 1000, seed=0)
+    parts = dirichlet_partition(train["y"], args.clients, args.alpha, seed=0)
+    print("partition:", partition_summary(train["y"], parts))
+    cdata = {k: jnp.asarray(v) for k, v in
+             stack_client_data(train, parts, pad_to=256).items()}
+    testj = {k: jnp.asarray(v) for k, v in test.items()}
+
+    model = get_model(args.model, n_classes=10)
+    algo = make_algo(args.algo, local_steps=args.local_steps, batch_size=32)
+    topo = TopologyConfig(
+        kind="kout", n_clients=args.clients,
+        k_out=max(int(args.participation * args.clients), 1))
+    tr = FLTrainer(model.loss, model.init, cdata, algo, topo, seed=0,
+                   participation=args.participation)
+
+    history = []
+    for r in range(args.rounds):
+        metrics = tr.run_round()
+        rec = {"round": r, "train_loss": float(metrics["loss"]),
+               "train_acc": float(metrics["acc"])}
+        if (r + 1) % 5 == 0 or r == args.rounds - 1:
+            tl, ta = tr.evaluate(testj)
+            rec.update(test_loss=tl, test_acc=ta)
+            checkpoint.save(args.ckpt_dir, r, tr.state.params)
+            print(f"round {r:4d} loss={rec['train_loss']:.3f} "
+                  f"test_acc={ta:.3f} (ckpt saved)")
+        else:
+            print(f"round {r:4d} loss={rec['train_loss']:.3f}")
+        history.append(rec)
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(history, f, indent=1)
+    print("final:", history[-1])
+    print("latest ckpt:", checkpoint.latest_checkpoint(args.ckpt_dir))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Dependency-free pytree checkpointing (npz payload + msgpack treedef).
+
+Good enough for FL simulation state and pod-replica snapshots; atomic via
+rename, with round-robin retention.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+
+import jax
+import numpy as np
+
+__all__ = ["save", "restore", "latest_checkpoint"]
+
+_STEP_RE = re.compile(r"ckpt_(\d+)\.npz$")
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree.flatten_with_path(tree)
+    paths = ["/".join(str(k) for k in path) for path, _ in flat]
+    leaves = [np.asarray(v) for _, v in flat]
+    return paths, leaves, treedef
+
+
+def save(directory: str, step: int, tree, keep: int = 3) -> str:
+    os.makedirs(directory, exist_ok=True)
+    paths, leaves, _ = _flatten_with_paths(tree)
+    payload = {f"leaf_{i}": leaf for i, leaf in enumerate(leaves)}
+    payload["__paths__"] = np.array(json.dumps(paths))
+    final = os.path.join(directory, f"ckpt_{step}.npz")
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, **payload)
+    os.replace(tmp, final)
+    _retain(directory, keep)
+    return final
+
+
+def _retain(directory: str, keep: int):
+    ckpts = sorted(
+        (int(m.group(1)), f)
+        for f in os.listdir(directory)
+        if (m := _STEP_RE.search(f))
+    )
+    for _, f in ckpts[:-keep] if keep else []:
+        os.remove(os.path.join(directory, f))
+
+
+def latest_checkpoint(directory: str) -> str | None:
+    if not os.path.isdir(directory):
+        return None
+    ckpts = sorted(
+        (int(m.group(1)), f)
+        for f in os.listdir(directory)
+        if (m := _STEP_RE.search(f))
+    )
+    return os.path.join(directory, ckpts[-1][1]) if ckpts else None
+
+
+def restore(path: str, like=None):
+    """Restore a pytree. With ``like`` given, leaves are reshaped into the
+    example's treedef (validating paths); otherwise a nested dict is built."""
+    data = np.load(path, allow_pickle=False)
+    paths = json.loads(str(data["__paths__"]))
+    leaves = [data[f"leaf_{i}"] for i in range(len(paths))]
+    if like is not None:
+        ex_paths, _, treedef = _flatten_with_paths(like)
+        if ex_paths != paths:
+            raise ValueError("checkpoint structure mismatch")
+        return jax.tree.unflatten(treedef, leaves)
+    out: dict = {}
+    for path, leaf in zip(paths, leaves):
+        keys = [k.strip("[]'\".") for k in path.split("/")]
+        node = out
+        for k in keys[:-1]:
+            node = node.setdefault(k, {})
+        node[keys[-1]] = leaf
+    return out

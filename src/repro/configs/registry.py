@@ -1,0 +1,91 @@
+"""Architecture registry: ``--arch <id>`` resolution + input_specs().
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of the given input-shape — weak-type-correct, shardable, no
+device allocation — used by the multi-pod dry-run and smoke tests alike.
+"""
+from __future__ import annotations
+
+import importlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import INPUT_SHAPES, ArchConfig, InputShape, reduced
+
+__all__ = ["ARCH_IDS", "get_config", "input_specs", "make_batch", "INPUT_SHAPES"]
+
+_MODULES = {
+    "hubert-xlarge": "hubert_xlarge",
+    "gemma3-12b": "gemma3_12b",
+    "phi3-medium-14b": "phi3_medium_14b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "glm4-9b": "glm4_9b",
+    "dbrx-132b": "dbrx_132b",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "codeqwen1.5-7b": "codeqwen15_7b",
+    "xlstm-350m": "xlstm_350m",
+    "hymba-1.5b": "hymba_1_5b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch: str, smoke: bool = False) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    cfg = mod.CONFIG
+    return reduced(cfg) if smoke else cfg
+
+
+def _batch_shapes(cfg: ArchConfig, batch: int, seq: int) -> dict:
+    """Input name -> (shape, dtype) for a full-sequence (train/prefill) step."""
+    if cfg.task == "masked_lm":
+        return {
+            "features": ((batch, seq, cfg.frontend_dim), jnp.float32),
+            "mask": ((batch, seq), jnp.bool_),
+            "targets": ((batch, seq), jnp.int32),
+        }
+    if cfg.task == "vlm":
+        n_img = min(cfg.n_frontend_tokens, max(seq // 2, 1))
+        return {
+            "tokens": ((batch, seq - n_img), jnp.int32),
+            "image_feats": ((batch, n_img, cfg.frontend_dim), jnp.float32),
+        }
+    return {"tokens": ((batch, seq), jnp.int32)}
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape | str, sharding_fn=None) -> dict:
+    """ShapeDtypeStructs for one input shape.  For decode shapes this is the
+    per-step request batch {tokens (B,), pos ()}; the KV cache is produced by
+    the model's ``abstract_cache``."""
+    if isinstance(shape, str):
+        shape = INPUT_SHAPES[shape]
+    if shape.kind == "decode":
+        specs = {
+            "tokens": ((shape.global_batch,), jnp.int32),
+            "pos": ((), jnp.int32),
+        }
+    else:
+        specs = _batch_shapes(cfg, shape.global_batch, shape.seq_len)
+
+    def make(name, sh, dt):
+        sharding = sharding_fn(name, sh) if sharding_fn else None
+        return jax.ShapeDtypeStruct(sh, dt, sharding=sharding)
+
+    return {k: make(k, sh, dt) for k, (sh, dt) in specs.items()}
+
+
+def make_batch(cfg: ArchConfig, batch: int, seq: int, seed: int = 0) -> dict:
+    """Concrete random batch (smoke tests / examples)."""
+    rng = np.random.default_rng(seed)
+    out: dict = {}
+    for name, (sh, dt) in _batch_shapes(cfg, batch, seq).items():
+        if dt == jnp.int32:
+            hi = cfg.vocab_size if name in ("tokens", "targets") else 2
+            out[name] = jnp.asarray(rng.integers(0, hi, size=sh), jnp.int32)
+        elif dt == jnp.bool_:
+            out[name] = jnp.asarray(rng.random(sh) < 0.3)
+        else:
+            out[name] = jnp.asarray(rng.standard_normal(sh), jnp.float32)
+    return out

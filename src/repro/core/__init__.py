@@ -1,0 +1,19 @@
+"""Core contribution of the paper: asymmetric decentralized FL (DFedSGPSM).
+
+Public surface:
+  - topology: directed / symmetric, time-varying mixing-matrix samplers.
+  - pushsum: gossip + push-sum de-biasing primitives.
+  - sam: SAM perturbation & local-momentum transforms (Algorithm 1 inner loop).
+  - engine: stacked-client simulation engine + the 10-algorithm registry.
+"""
+from repro.core.engine import ALGORITHMS, AlgoConfig, FLState, FLTrainer, make_algo
+from repro.core.topology import TopologyConfig
+
+__all__ = [
+    "ALGORITHMS",
+    "AlgoConfig",
+    "FLState",
+    "FLTrainer",
+    "TopologyConfig",
+    "make_algo",
+]

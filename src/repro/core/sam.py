@@ -1,0 +1,87 @@
+"""Sharpness-Aware Minimization + local momentum primitives.
+
+These implement lines 5–11 of Algorithm 1 as pure pytree transforms so the
+same code drives the n-client simulation engine (via vmap), the small-model
+paper backbones, and the pod-scale distributed runtime.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "global_norm",
+    "sam_perturb",
+    "sam_gradient",
+    "momentum_update",
+    "apply_update",
+]
+
+_EPS = 1e-12
+
+
+def global_norm(tree) -> jnp.ndarray:
+    """Euclidean norm over a whole pytree (float32 accumulation)."""
+    sq = jax.tree.map(lambda x: jnp.sum(jnp.square(x.astype(jnp.float32))), tree)
+    return jnp.sqrt(jax.tree.reduce(jnp.add, sq))
+
+
+def sam_perturb(params, grads, rho: float):
+    """z̆ = z + rho * g / ||g||  (Algorithm 1 line 7)."""
+    norm = global_norm(grads)
+    scale = (rho / (norm + _EPS)).astype(jnp.float32)
+    return jax.tree.map(
+        lambda p, g: (p.astype(jnp.float32) + scale * g.astype(jnp.float32))
+        .astype(p.dtype),
+        params,
+        grads,
+    )
+
+
+def sam_gradient(
+    loss_fn: Callable, params, batch, rho: float, has_aux: bool = True
+):
+    """Two-pass SAM gradient at ``params`` with the *same* minibatch.
+
+    Returns ``(grads, (loss, aux))`` of the first (unperturbed) pass.  With
+    rho == 0 this degrades to a single vanilla gradient (no second pass).
+    """
+    vg = jax.value_and_grad(loss_fn, has_aux=has_aux)
+    if has_aux:
+        (loss, aux), g1 = vg(params, batch)
+    else:
+        loss, g1 = vg(params, batch)
+        aux = None
+    if rho == 0.0:
+        return g1, (loss, aux)
+    perturbed = sam_perturb(params, g1, rho)
+    grad_fn = jax.grad(loss_fn, has_aux=has_aux)
+    if has_aux:
+        g2, _ = grad_fn(perturbed, batch)
+    else:
+        g2 = grad_fn(perturbed, batch)
+    return g2, (loss, aux)
+
+
+def momentum_update(v, grads, alpha: float):
+    """v' = alpha * v + g  (Algorithm 1 line 9; alpha=0 -> plain SGD)."""
+    if alpha == 0.0:
+        return grads
+    return jax.tree.map(
+        lambda vi, gi: (alpha * vi.astype(jnp.float32)
+                        + gi.astype(jnp.float32)).astype(vi.dtype),
+        v,
+        grads,
+    )
+
+
+def apply_update(params, v, lr):
+    """x' = x - lr * v  (Algorithm 1 line 10)."""
+    return jax.tree.map(
+        lambda p, vi: (p.astype(jnp.float32)
+                       - lr * vi.astype(jnp.float32)).astype(p.dtype),
+        params,
+        v,
+    )

@@ -1,0 +1,198 @@
+"""Communication topologies for decentralized FL.
+
+Convention (matches the paper): ``P[i, j]`` is the weight of the directed
+link *from client j to client i* (j sends, i receives).  A sender ``j``
+divides its message by its out-degree (self-loop included), hence every
+*column* of ``P`` sums to 1 — ``P`` is **column-stochastic** but in general
+not row-stochastic.  The gossip step is ``x_i' = sum_j P[i, j] x_j`` i.e.
+``X' = P @ X`` for client-stacked ``X``; mass ``sum_i x_i`` is conserved.
+
+Symmetric (undirected) baselines use doubly-stochastic Metropolis-Hastings
+weights on an undirected graph.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "TopologyConfig",
+    "column_stochastic_from_adjacency",
+    "metropolis_weights",
+    "directed_ring",
+    "directed_exponential",
+    "sample_kout",
+    "sample_kout_selective",
+    "sample_symmetric_k_regular",
+    "sample_mixing",
+    "is_column_stochastic",
+    "union_strongly_connected",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class TopologyConfig:
+    """Static description of the communication graph family."""
+
+    kind: str = "kout"  # kout | ring | exponential | symmetric | full
+    n_clients: int = 100
+    # Number of out-neighbors each client picks (excluding the self-loop).
+    k_out: int = 10
+    time_varying: bool = True
+
+    def __post_init__(self):
+        if self.k_out >= self.n_clients:
+            raise ValueError("k_out must be < n_clients")
+
+
+# ---------------------------------------------------------------------------
+# Mixing-matrix constructors.
+# ---------------------------------------------------------------------------
+
+def column_stochastic_from_adjacency(adj: jnp.ndarray) -> jnp.ndarray:
+    """adj[i, j] = 1 iff j sends to i.  Self-loops are forced on.
+
+    Returns the column-stochastic P with P[i, j] = adj[i, j] / out_degree(j).
+    """
+    n = adj.shape[0]
+    adj = jnp.asarray(adj, jnp.float32)
+    adj = jnp.maximum(adj, jnp.eye(n, dtype=jnp.float32))  # self-loops
+    out_degree = adj.sum(axis=0)  # column sums = number of receivers of j
+    return adj / out_degree[None, :]
+
+
+def metropolis_weights(adj: jnp.ndarray) -> jnp.ndarray:
+    """Doubly-stochastic weights for a symmetric adjacency (undirected)."""
+    n = adj.shape[0]
+    adj = jnp.asarray(adj, jnp.float32)
+    adj = jnp.maximum(adj, adj.T)  # symmetrize
+    adj = adj * (1.0 - jnp.eye(n))  # strip self loops; re-added via residual
+    deg = adj.sum(axis=1)
+    # W[i,j] = 1 / (1 + max(deg_i, deg_j)) on edges.
+    denom = 1.0 + jnp.maximum(deg[:, None], deg[None, :])
+    w = adj / denom
+    diag = 1.0 - w.sum(axis=1)
+    return w + jnp.diag(diag)
+
+
+def directed_ring(n: int) -> jnp.ndarray:
+    """Static directed ring: i -> (i+1) mod n."""
+    adj = np.eye(n, dtype=np.float32)
+    for j in range(n):
+        adj[(j + 1) % n, j] = 1.0
+    return column_stochastic_from_adjacency(jnp.asarray(adj))
+
+
+def directed_exponential(n: int, t: int = 0) -> jnp.ndarray:
+    """One-peer exponential graph (time-varying): i -> i + 2^(t mod log n)."""
+    hops = max(int(np.ceil(np.log2(max(n, 2)))), 1)
+    step = 2 ** (t % hops)
+    adj = np.eye(n, dtype=np.float32)
+    for j in range(n):
+        adj[(j + step) % n, j] = 1.0
+    return column_stochastic_from_adjacency(jnp.asarray(adj))
+
+
+# ---------------------------------------------------------------------------
+# Random time-varying graphs (jit-friendly samplers).
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnums=(1, 2))
+def sample_kout(key: jax.Array, n: int, k: int) -> jnp.ndarray:
+    """Each client picks k distinct out-neighbors uniformly (plus self).
+
+    Returns the column-stochastic mixing matrix P (n, n).
+    """
+    # Per-sender random scores; top-k of scores excluding self.
+    scores = jax.random.uniform(key, (n, n))
+    scores = scores - 2.0 * jnp.eye(n)  # self never in top-k (picked later)
+    # adj_out[j, i] = 1 if j sends to i.
+    _, idx = jax.lax.top_k(scores, k)  # (n, k) receivers per sender
+    adj_out = jnp.zeros((n, n), jnp.float32)
+    adj_out = adj_out.at[jnp.arange(n)[:, None], idx].set(1.0)
+    adj = adj_out.T  # adj[i, j] = j sends to i
+    return column_stochastic_from_adjacency(adj)
+
+
+@partial(jax.jit, static_argnums=(2, 3))
+def sample_kout_selective(
+    key: jax.Array, losses: jnp.ndarray, n: int, k: int, temp: float = 1.0
+) -> jnp.ndarray:
+    """Neighbor-selection strategy of DFedSGPSM-S (paper Eq. 2).
+
+    Sender i picks out-neighbors j with probability proportional to
+    ``exp(|f_i - f_j|)`` — favoring neighbors whose loss differs most.
+    Sampling without replacement via the Gumbel-top-k trick.
+    """
+    diff = jnp.abs(losses[:, None] - losses[None, :]) / temp  # (n, n) sender i
+    logits = diff - 1e9 * jnp.eye(n)
+    gumbel = jax.random.gumbel(key, (n, n))
+    _, idx = jax.lax.top_k(logits + gumbel, k)  # receivers per sender
+    adj_out = jnp.zeros((n, n), jnp.float32)
+    adj_out = adj_out.at[jnp.arange(n)[:, None], idx].set(1.0)
+    return column_stochastic_from_adjacency(adj_out.T)
+
+
+@partial(jax.jit, static_argnums=(1, 2))
+def sample_symmetric_k_regular(key: jax.Array, n: int, k: int) -> jnp.ndarray:
+    """Random undirected graph with ~k neighbors each; Metropolis weights."""
+    scores = jax.random.uniform(key, (n, n))
+    scores = jnp.triu(scores, 1)
+    scores = scores + scores.T - 2.0 * jnp.eye(n)
+    _, idx = jax.lax.top_k(scores, k)
+    adj = jnp.zeros((n, n), jnp.float32)
+    adj = adj.at[jnp.arange(n)[:, None], idx].set(1.0)
+    adj = jnp.maximum(adj, adj.T)
+    return metropolis_weights(adj)
+
+
+def sample_mixing(
+    key: jax.Array,
+    cfg: TopologyConfig,
+    t: int = 0,
+    losses: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Sample the round-t mixing matrix for the configured family."""
+    n, k = cfg.n_clients, cfg.k_out
+    if cfg.kind == "ring":
+        return directed_ring(n)
+    if cfg.kind == "exponential":
+        return directed_exponential(n, t if cfg.time_varying else 0)
+    if cfg.kind == "full":
+        return jnp.full((n, n), 1.0 / n, jnp.float32)
+    if cfg.kind == "symmetric":
+        return sample_symmetric_k_regular(key, n, k)
+    if cfg.kind == "kout":
+        if losses is not None:
+            return sample_kout_selective(key, losses, n, k)
+        return sample_kout(key, n, k)
+    raise ValueError(f"unknown topology kind: {cfg.kind}")
+
+
+# ---------------------------------------------------------------------------
+# Verification helpers (used by tests & theory checks).
+# ---------------------------------------------------------------------------
+
+def is_column_stochastic(P, atol: float = 1e-5) -> bool:
+    P = np.asarray(P)
+    return bool(
+        np.all(P >= -atol) and np.allclose(P.sum(axis=0), 1.0, atol=atol)
+    )
+
+
+def union_strongly_connected(mats) -> bool:
+    """Check the union graph of a window of mixing matrices is strongly
+    connected (Assumption 1, B-bounded strong connectivity)."""
+    adj = np.zeros_like(np.asarray(mats[0]))
+    for m in mats:
+        adj = np.maximum(adj, (np.asarray(m) > 0).astype(np.float32))
+    n = adj.shape[0]
+    reach = adj > 0
+    # transitive closure by repeated squaring
+    for _ in range(int(np.ceil(np.log2(n))) + 1):
+        reach = reach | (reach @ reach)
+    return bool(reach.all())

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+  gossip_matmul   — push-sum mixing P @ X (MXU-tiled; the paper's comm step)
+  fused_update    — Algorithm-1 inner loop (de-bias + momentum + descent)
+  flash_attention — VMEM-tiled online-softmax attention (causal/SW/GQA)
+
+``ops`` holds the jit'd wrappers (interpret mode on CPU), ``ref`` the
+pure-jnp oracles every kernel is validated against.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: flash attention (online softmax), causal + sliding
+window + GQA, VMEM-tiled.
+
+Grid is (batch, q_heads, q_blocks, k_blocks); the output block is indexed by
+(b, h, qi) only, so it stays resident in VMEM across the k_blocks sweep while
+running max/denominator/accumulator live in VMEM scratch.  GQA is handled in
+the k/v BlockSpec index maps (kv head = h // group) — no materialized
+repeat_kv.  Block shapes default to (128, 128): MXU-aligned and a working
+set of ~4 * 128 * head_dim * 4B per step, comfortably inside the ~16 MB VMEM
+budget of a v5e core.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+_NEG = -1.0e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, scale, causal, window, block_q, block_k, n_kb):
+    qi, kj = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # (bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)  # (bk, hd)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bk)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    ok = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        ok = k_pos <= q_pos
+    if window > 0:
+        ok = ok & (q_pos - k_pos < window)
+    s = jnp.where(ok, s, _NEG)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_cur = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+    v = v_ref[0, 0].astype(jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(kj == n_kb - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention_pallas(
+    q: jax.Array,  # (B, H, S, hd)
+    k: jax.Array,  # (B, KV, S, hd)
+    v: jax.Array,  # (B, KV, S, hd)
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+):
+    b, h, s, hd = q.shape
+    kv = k.shape[1]
+    group = h // kv
+    assert s % block_q == 0 and s % block_k == 0, "pad seq to block multiple"
+    n_qb, n_kb = s // block_q, s // block_k
+    scale = hd ** -0.5
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, n_kb=n_kb)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, n_qb, n_kb),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, qi, kj: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, qi, kj: (b, h // group, kj, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, qi, kj: (b, h // group, kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b, h, qi, kj: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,72 @@
+"""Pallas TPU kernel: fused DFedSGPSM inner-loop update (Algorithm 1, 9-11 + 5).
+
+    v' = alpha * v + g          (momentum)
+    x' = x  - eta * v'          (descent)
+    z' = x' / w                 (push-sum de-bias for the next iteration)
+
+Unfused, these are 3 elementwise passes = 5 HBM reads + 3 writes of the full
+model; fused it is 3 reads + 3 writes in a single pass — the update becomes
+strictly HBM-bandwidth-bound at its floor.  Scalars (alpha, eta, 1/w) ride in
+as a tiny (3,) operand broadcast to every grid step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["fused_update_pallas"]
+
+
+def _kernel(s_ref, x_ref, v_ref, g_ref, xo_ref, vo_ref, zo_ref):
+    alpha, eta, w_inv = s_ref[0], s_ref[1], s_ref[2]
+    v_new = alpha * v_ref[...] + g_ref[...].astype(jnp.float32)
+    x_new = x_ref[...].astype(jnp.float32) - eta * v_new
+    vo_ref[...] = v_new
+    xo_ref[...] = x_new.astype(xo_ref.dtype)
+    zo_ref[...] = (x_new * w_inv).astype(zo_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def fused_update_pallas(
+    x: jax.Array,  # (D,) current client params (flat)
+    v: jax.Array,  # (D,) momentum buffer, float32
+    g: jax.Array,  # (D,) perturbed gradient
+    alpha,
+    eta,
+    w,
+    block: int = 65536,
+    interpret: bool = False,
+):
+    (d,) = x.shape
+    d_pad = max(((d + block - 1) // block) * block, block)
+
+    def pad(t, dt):
+        return jnp.zeros((d_pad,), dt).at[:d].set(t.astype(dt))
+
+    scalars = jnp.stack(
+        [jnp.float32(alpha), jnp.float32(eta), 1.0 / jnp.float32(w)])
+    x_new, v_new, z_new = pl.pallas_call(
+        _kernel,
+        grid=(d_pad // block,),
+        in_specs=[
+            pl.BlockSpec((3,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d_pad,), x.dtype),
+            jax.ShapeDtypeStruct((d_pad,), jnp.float32),
+            jax.ShapeDtypeStruct((d_pad,), x.dtype),
+        ],
+        interpret=interpret,
+    )(scalars, pad(x, x.dtype), pad(v, jnp.float32), pad(g, x.dtype))
+    return x_new[:d], v_new[:d], z_new[:d]

@@ -1,0 +1,51 @@
+"""Pallas TPU kernel: push-sum gossip mixing  Y = P @ X.
+
+P is the (n, n) column-stochastic mixing matrix, X the client-stacked flat
+parameter matrix (n, D).  n is small (#clients, padded to the 128 MXU lane
+width) while D is huge (model size), so the tiling keeps the full P row-band
+resident in VMEM and streams X in (n, block_d) column panels — one MXU
+matmul per grid step, no accumulation loop needed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["gossip_matmul_pallas"]
+
+
+def _kernel(p_ref, x_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        p_ref[...], x_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_d", "interpret"))
+def gossip_matmul_pallas(
+    P: jax.Array,
+    X: jax.Array,
+    block_n: int = 128,
+    block_d: int = 512,
+    interpret: bool = False,
+):
+    n, D = X.shape
+    n_pad = max(((n + block_n - 1) // block_n) * block_n, block_n)
+    d_pad = max(((D + block_d - 1) // block_d) * block_d, block_d)
+    Pp = jnp.zeros((n_pad, n_pad), P.dtype).at[:n, :n].set(P)
+    Xp = jnp.zeros((n_pad, d_pad), X.dtype).at[:n, :D].set(X)
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(n_pad // block_n, d_pad // block_d),
+        in_specs=[
+            pl.BlockSpec((block_n, n_pad), lambda i, j: (i, 0)),
+            pl.BlockSpec((n_pad, block_d), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_n, block_d), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, d_pad), X.dtype),
+        interpret=interpret,
+    )(Pp, Xp)
+    return out[:n, :D]

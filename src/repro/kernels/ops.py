@@ -1,0 +1,34 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode — the kernel
+body runs as traced jnp on the host, validating the exact TPU program logic;
+on a real TPU backend the same call sites compile to Mosaic.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.fused_update import fused_update_pallas
+from repro.kernels.gossip_matmul import gossip_matmul_pallas
+
+__all__ = ["gossip_matmul", "fused_update", "flash_attention", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def gossip_matmul(P, X, **kw):
+    kw.setdefault("interpret", not on_tpu())
+    return gossip_matmul_pallas(P, X, **kw)
+
+
+def fused_update(x, v, g, alpha, eta, w, **kw):
+    kw.setdefault("interpret", not on_tpu())
+    return fused_update_pallas(x, v, g, alpha, eta, w, **kw)
+
+
+def flash_attention(q, k, v, causal=True, window=0, **kw):
+    kw.setdefault("interpret", not on_tpu())
+    return flash_attention_pallas(q, k, v, causal=causal, window=window, **kw)

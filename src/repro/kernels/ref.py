@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["gossip_matmul_ref", "fused_update_ref", "flash_attention_ref"]
+
+
+def gossip_matmul_ref(P, X):
+    return jnp.einsum(
+        "ij,jd->id", P.astype(jnp.float32), X.astype(jnp.float32),
+        precision=jax.lax.Precision.HIGHEST).astype(X.dtype)
+
+
+def fused_update_ref(x, v, g, alpha, eta, w):
+    v_new = jnp.float32(alpha) * v.astype(jnp.float32) + g.astype(jnp.float32)
+    x_new = x.astype(jnp.float32) - jnp.float32(eta) * v_new
+    z_new = x_new / jnp.float32(w)
+    return x_new.astype(x.dtype), v_new, z_new.astype(x.dtype)
+
+
+def flash_attention_ref(q, k, v, causal: bool = True, window: int = 0):
+    """q: (B,H,S,hd), k/v: (B,KV,S,hd) -> (B,H,S,hd)."""
+    b, h, s, hd = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+    scores = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * (hd ** -0.5)
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(s)[None, :]
+    ok = jnp.ones((s, s), bool)
+    if causal:
+        ok = ki <= qi
+    if window > 0:
+        ok = ok & (qi - ki < window)
+    scores = jnp.where(ok, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,354 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT-lower + compile every (arch x input-shape x mesh)
+against the production mesh with ShapeDtypeStruct stand-ins (no allocation),
+record memory / cost / collective analysis for the roofline report.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-12b \
+      --shape train_4k --mesh single,multi
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs.base import INPUT_SHAPES  # noqa: E402
+from repro.configs.registry import ARCH_IDS, get_config, input_specs  # noqa: E402
+from repro.launch import sharding as shlib  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import StepConfig, make_round_step, make_serve_step, make_train_step  # noqa: E402
+from repro.models.pdefs import PDef, abstract_tree, tree_num_params  # noqa: E402
+from repro.models.registry import get_model_api  # noqa: E402
+from repro.roofline.analysis import model_flops, parse_collectives, roofline_terms  # noqa: E402
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "experiments", "dryrun")
+
+
+def _skip_reason(cfg, shape) -> str | None:
+    if shape.kind == "decode":
+        if not cfg.supports_decode():
+            return "encoder-only architecture: no autoregressive decode"
+        if shape.name == "long_500k" and not cfg.supports_long_context():
+            return "pure full-attention arch: long_500k needs sub-quadratic decode"
+    return None
+
+
+def _pod_spec(spec: P, batch_dims: tuple, shape_tuple: tuple, n_pods: int) -> P:
+    """Widen a single-pod spec: shard batch over ("pod","data") when it
+    divides; leave everything else untouched (=> replicated over pod)."""
+    if n_pods <= 1:
+        return spec
+    out = list(spec) + [None] * (len(shape_tuple) - len(spec))
+    for i in batch_dims:
+        if out[i] == "data" and shape_tuple[i] % (16 * n_pods) == 0:
+            out[i] = ("pod", "data")
+    return P(*out)
+
+
+def _model_axes(cfg):
+    if cfg.attn_fallback == "replicate":
+        return tuple(a for a in shlib.MODEL_AXES if a != "head_dim")
+    return shlib.MODEL_AXES
+
+
+def _abstract_params(api, mesh, multi_pod: bool, replicate_pods: bool):
+    n_pods = mesh.shape.get("pod", 1)
+    maxes = _model_axes(api.cfg)
+
+    def sharding_fn(pdef: PDef):
+        spec = shlib.spec_for(pdef, mesh, fsdp=api.cfg.fsdp, model_axes=maxes)
+        if multi_pod and not replicate_pods:
+            spec = P("pod", *spec)  # leading replica axis
+        return NamedSharding(mesh, spec)
+
+    defs = api.param_defs()
+    if multi_pod and not replicate_pods:
+        defs = jax.tree.map(
+            lambda d: PDef((n_pods,) + d.shape, ("pod_rep",) + d.axes,
+                           d.dtype, d.init, d.fan_in),
+            defs, is_leaf=lambda x: isinstance(x, PDef))
+
+        def sharding_fn(pdef: PDef):  # noqa: F811
+            inner = PDef(pdef.shape[1:], pdef.axes[1:], pdef.dtype)
+            spec = shlib.spec_for(inner, mesh, fsdp=api.cfg.fsdp,
+                                  model_axes=maxes)
+            return NamedSharding(mesh, P("pod", *spec))
+
+    return abstract_tree(defs, sharding_fn)
+
+
+def _abstract_batch(cfg, shape, mesh, multi_pod: bool, stacked: bool):
+    """Returns abstract batch pytree for train/prefill kinds."""
+    n_pods = mesh.shape.get("pod", 1)
+    specs = input_specs(cfg, shape)
+    out = {}
+    for name, sds in specs.items():
+        sh = sds.shape
+        spec = ["data" if sh[0] % 16 == 0 else None] + [None] * (len(sh) - 1)
+        if multi_pod and stacked:
+            # (n_pods, K=1, local_batch, ...) for the round_step scan
+            local = (sh[0] // n_pods,) + sh[1:]
+            full = (n_pods, 1) + local
+            pspec = P("pod", None, "data" if local[0] % 16 == 0 else None,
+                      *([None] * (len(sh) - 1)))
+            out[name] = jax.ShapeDtypeStruct(full, sds.dtype,
+                                             sharding=NamedSharding(mesh, pspec))
+        elif multi_pod:
+            pspec = _pod_spec(P(*spec), (0,), sh, n_pods)
+            out[name] = jax.ShapeDtypeStruct(sh, sds.dtype,
+                                             sharding=NamedSharding(mesh, pspec))
+        else:
+            out[name] = jax.ShapeDtypeStruct(
+                sh, sds.dtype, sharding=NamedSharding(mesh, P(*spec)))
+    return out
+
+
+def _abstract_cache(api, mesh, batch: int, length: int, multi_pod: bool):
+    n_pods = mesh.shape.get("pod", 1)
+    maxes = _model_axes(api.cfg)
+    seq_shard = api.cfg.serve_cache_shard == "seq"
+
+    def sharding_fn(pdef: PDef):
+        if seq_shard and "seq" in pdef.axes:
+            # distributed flash-decode layout: batch->data, seq->model
+            spec = P(*["data" if a == "batch" and d % 16 == 0
+                       else "model" if a == "seq" and d % 16 == 0
+                       else None
+                       for a, d in zip(pdef.axes, pdef.shape)])
+        else:
+            spec = shlib.spec_for(pdef, mesh, fsdp=False, model_axes=maxes)
+        if multi_pod:
+            bdims = tuple(i for i, a in enumerate(pdef.axes) if a == "batch")
+            spec = _pod_spec(spec, bdims, pdef.shape, n_pods)
+        return NamedSharding(mesh, spec)
+
+    return abstract_tree(api.cache_defs(batch, length), sharding_fn)
+
+
+def _trip_count(cfg) -> int:
+    """Iterations of the layer-stack scan (xlstm scans over groups)."""
+    if cfg.block_kind == "xlstm" and cfg.slstm_every:
+        return cfg.n_layers // cfg.slstm_every
+    return cfg.n_layers
+
+
+def _lower_one(cfg, shape, mesh_kind: str, step_cfg):
+    """Build abstract args + lower + compile one combination."""
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    api = get_model_api(cfg)
+    with shlib.use_mesh(mesh, fsdp=cfg.fsdp):
+        if shape.kind == "train" and multi:
+            n_pods = mesh.shape["pod"]
+            params = _abstract_params(api, mesh, True, replicate_pods=False)
+            v = params
+            w = jax.ShapeDtypeStruct((n_pods,), jnp.float32,
+                                     sharding=NamedSharding(mesh, P("pod")))
+            batch = _abstract_batch(cfg, shape, mesh, True, stacked=True)
+            P_pod = jax.ShapeDtypeStruct((n_pods, n_pods), jnp.float32)
+            fn = jax.jit(make_round_step(api, step_cfg), donate_argnums=(0, 1))
+            lowered = fn.lower(params, v, w, batch, P_pod)
+        elif shape.kind == "train":
+            params = _abstract_params(api, mesh, False, False)
+            v = params
+            w = jax.ShapeDtypeStruct((), jnp.float32)
+            batch = _abstract_batch(cfg, shape, mesh, False, stacked=False)
+            fn = jax.jit(make_train_step(api, step_cfg), donate_argnums=(0, 1))
+            lowered = fn.lower(params, v, w, batch)
+        elif shape.kind == "prefill":
+            params = _abstract_params(api, mesh, multi, replicate_pods=True)
+            batch = _abstract_batch(cfg, shape, mesh, multi, stacked=False)
+            fn = jax.jit(lambda p, b: api.forward(p, b))
+            lowered = fn.lower(params, batch)
+        else:  # decode
+            params = _abstract_params(api, mesh, multi, replicate_pods=True)
+            cache = _abstract_cache(api, mesh, shape.global_batch,
+                                    shape.seq_len, multi)
+            toks = jax.ShapeDtypeStruct(
+                (shape.global_batch,), jnp.int32,
+                sharding=NamedSharding(
+                    mesh,
+                    _pod_spec(P("data" if shape.global_batch % 16 == 0 else None),
+                              (0,), (shape.global_batch,),
+                              mesh.shape.get("pod", 1))))
+            pos = jax.ShapeDtypeStruct((), jnp.int32)
+            fn = jax.jit(make_serve_step(api), donate_argnums=(1,))
+            lowered = fn.lower(params, cache, toks, pos)
+
+        return lowered.compile(), mesh
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str, step_cfg=None,
+            overrides: dict = None) -> dict:
+    import dataclasses
+
+    base_cfg = get_config(arch)
+    if overrides:
+        base_cfg = dataclasses.replace(base_cfg, **overrides)
+    shape = INPUT_SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "kind": shape.kind, "status": "ok"}
+    reason = _skip_reason(base_cfg, shape)
+    if reason:
+        rec.update(status="skip", reason=reason)
+        return rec
+
+    step_cfg = step_cfg or StepConfig()
+    t0 = time.time()
+    # XLA's cost_analysis counts a while-loop body once regardless of trip
+    # count.  Lower twice (unroll=1 and unroll=2): the delta is one layer's
+    # cost, extrapolated across the layer-stack trip count.  (For odd L the
+    # remainder iteration is peeled; (c2-c1)/2 blends both bodies, ~15% noise
+    # — fine for bottleneck identification.)
+    cfg1 = dataclasses.replace(base_cfg, scan_unroll=1)
+    cfg2 = dataclasses.replace(base_cfg, scan_unroll=2)
+    compiled, mesh = _lower_one(cfg1, shape, mesh_kind, step_cfg)
+    compiled2, _ = _lower_one(cfg2, shape, mesh_kind, step_cfg)
+    n_chips = mesh.size
+    cfg = base_cfg
+    api = get_model_api(cfg)
+
+    L = _trip_count(cfg)
+    copies2 = 2 + (L % 2 if L > 1 else 0)
+
+    def _extrap(x1, x2):
+        if L <= 1:
+            return x1
+        body = max(x2 - x1, 0.0) / (copies2 - 1)
+        return x1 + (L - 1) * body
+
+    mem = compiled.memory_analysis()
+    cost1 = compiled.cost_analysis() or {}
+    cost2 = compiled2.cost_analysis() or {}
+    cost = {
+        "flops": _extrap(float(cost1.get("flops", 0) or 0),
+                         float(cost2.get("flops", 0) or 0)),
+        "bytes accessed": _extrap(
+            float(cost1.get("bytes accessed", 0) or 0),
+            float(cost2.get("bytes accessed", 0) or 0)),
+    }
+    coll1 = parse_collectives(compiled.as_text())
+    coll2 = parse_collectives(compiled2.as_text())
+    coll = coll1
+    for kind in set(coll1.bytes_by_kind) | set(coll2.bytes_by_kind):
+        b1 = coll1.bytes_by_kind.get(kind, 0)
+        b2 = coll2.bytes_by_kind.get(kind, 0)
+        c1 = coll1.count_by_kind.get(kind, 0)
+        c2 = coll2.count_by_kind.get(kind, 0)
+        coll.bytes_by_kind[kind] = int(_extrap(b1, b2))
+        coll.count_by_kind[kind] = int(round(_extrap(c1, c2)))
+    terms = roofline_terms(cost, coll)
+
+    n_params = tree_num_params(api.param_defs())
+    if cfg.n_experts:
+        per_layer = 3 * cfg.d_model * cfg.d_ff
+        active = n_params - cfg.n_layers * (cfg.n_experts - cfg.top_k) * per_layer
+    else:
+        active = n_params
+    tokens = shape.global_batch * (1 if shape.kind == "decode" else shape.seq_len)
+    mf = model_flops(active, tokens,
+                     "train" if shape.kind == "train" else "fwd")
+    hlo_total = terms["flops_per_device"] * n_chips
+    rec.update(
+        compile_s=round(time.time() - t0, 1),
+        n_chips=n_chips,
+        n_params=n_params,
+        n_params_active=active,
+        bytes_per_device={
+            "argument": mem.argument_size_in_bytes,
+            "output": mem.output_size_in_bytes,
+            "temp": mem.temp_size_in_bytes,
+            "alias": mem.alias_size_in_bytes,
+            "peak_estimate": mem.argument_size_in_bytes
+            + mem.output_size_in_bytes + mem.temp_size_in_bytes
+            - mem.alias_size_in_bytes,
+        },
+        roofline=terms,
+        collectives={"bytes": coll.bytes_by_kind, "count": coll.count_by_kind},
+        model_flops=mf,
+        useful_flops_ratio=(mf / hlo_total) if hlo_total else None,
+    )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id or comma list")
+    ap.add_argument("--shape", default=None, help="shape name or comma list")
+    ap.add_argument("--mesh", default="single,multi")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=os.environ.get("DRYRUN_OUT", DEFAULT_OUT))
+    ap.add_argument("--set", default=None, dest="overrides",
+                    help="cfg overrides for perf variants, e.g. "
+                         "attn_fallback=replicate,fsdp=false")
+    ap.add_argument("--tag", default=None, help="suffix for variant records")
+    args = ap.parse_args()
+
+    overrides = {}
+    step_overrides = {}
+    if args.overrides:
+        for kv in args.overrides.split(","):
+            k, v = kv.split("=")
+            if v.lower() in ("true", "false"):
+                v = v.lower() == "true"
+            elif v.replace(".", "", 1).isdigit():
+                v = float(v) if "." in v else int(v)
+            if k in ("microbatches", "lr", "alpha", "rho", "local_steps"):
+                step_overrides[k] = v
+            else:
+                overrides[k] = v
+    step_cfg = StepConfig(**step_overrides) if step_overrides else None
+
+    archs = list(ARCH_IDS) if (args.all or not args.arch) else args.arch.split(",")
+    shapes = (list(INPUT_SHAPES) if (args.all or not args.shape)
+              else args.shape.split(","))
+    meshes = args.mesh.split(",")
+    os.makedirs(args.out, exist_ok=True)
+
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                tag = f"{arch}__{shape}__{mesh_kind}"
+                if args.tag:
+                    tag += f"__{args.tag}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    print(f"[dryrun] {tag}: cached", flush=True)
+                    continue
+                print(f"[dryrun] {tag}: lowering...", flush=True)
+                try:
+                    rec = run_one(arch, shape, mesh_kind, step_cfg=step_cfg,
+                                  overrides=overrides or None)
+                except Exception as e:  # record failures — they are bugs
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                           "variant": args.tag,
+                           "status": "error", "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+                if args.tag:
+                    rec["variant"] = args.tag
+                    rec["overrides"] = {**overrides, **step_overrides}
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (f" bottleneck={r['bottleneck']}"
+                             f" tc={r['t_compute_s']:.3e}"
+                             f" tm={r['t_memory_s']:.3e}"
+                             f" tx={r['t_collective_s']:.3e}"
+                             f" compile={rec['compile_s']}s")
+                elif status == "error":
+                    extra = " " + rec["error"][:160]
+                print(f"[dryrun] {tag}: {status}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""Sharded train / round / serve step builders for the pod runtime.
+
+  train_step  — one paper-faithful DFedSGPSM inner iteration (de-bias by the
+                push-sum weight, SAM two-pass gradient, local momentum,
+                descent) for a single client (= pod), GSPMD-sharded
+                (FSDP over "data", tensor/expert parallel over "model").
+  round_step  — multi-pod: every pod runs a local step on its own replica
+                (vmap with spmd_axis_name="pod"), then the directed
+                column-stochastic push-sum gossip mixes replicas & weights
+                across the "pod" axis.  No global all-reduce crosses pods.
+  serve_step  — one-token decode against the sharded KV cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.sam import apply_update, momentum_update, sam_gradient
+from repro.models.registry import ModelApi
+
+__all__ = ["StepConfig", "make_train_step", "make_round_step", "make_serve_step",
+           "pod_mixing_matrix"]
+
+
+@dataclasses.dataclass(frozen=True)
+class StepConfig:
+    """Local-optimizer hyperparameters for the pod runtime (Algorithm 1)."""
+
+    lr: float = 1e-2
+    alpha: float = 0.9  # local momentum
+    rho: float = 0.05  # SAM radius (0 disables the second grad pass)
+    local_steps: int = 1  # K inner iterations per communication round
+    # Gradient-accumulation microbatches per step: the loss is evaluated as
+    # a checkpointed scan over batch chunks, so the live activation set is
+    # one chunk (peak memory / microbatches), at no extra HBM traffic.
+    microbatches: int = 1
+
+
+def _microbatched_loss(loss_fn, n_micro: int):
+    def loss(params, batch):
+        chunks = jax.tree.map(
+            lambda x: x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:]),
+            batch)
+
+        def body(acc, chunk):
+            l, _ = loss_fn(params, chunk)
+            return acc + l, None
+
+        total, _ = jax.lax.scan(jax.checkpoint(body), jnp.float32(0.0), chunks)
+        return total / n_micro, (total / n_micro, jnp.float32(0.0))
+
+    return loss
+
+
+def pod_mixing_matrix(n_pods: int) -> jnp.ndarray:
+    """Directed-ring column-stochastic mixing over pods: each pod sends to
+    its successor and keeps a self-loop (out-degree 2 -> weights 1/2)."""
+    eye = jnp.eye(n_pods, dtype=jnp.float32)
+    ring = jnp.roll(eye, 1, axis=0)
+    return 0.5 * (eye + ring) if n_pods > 1 else eye
+
+
+def make_train_step(api: ModelApi, step_cfg: StepConfig) -> Callable:
+    """Single-client sharded local step: (params, v, w, batch) ->
+    (params, v, metrics)."""
+
+    loss_fn = (api.loss if step_cfg.microbatches <= 1
+               else _microbatched_loss(api.loss, step_cfg.microbatches))
+
+    def train_step(params, v, w, batch):
+        z = jax.tree.map(lambda p: (p / w).astype(p.dtype), params)  # de-bias
+        g, (loss, _) = sam_gradient(loss_fn, z, batch, step_cfg.rho)
+        v = momentum_update(v, g, step_cfg.alpha)
+        params = apply_update(params, v, step_cfg.lr)
+        return params, v, loss
+
+    return train_step
+
+
+def make_round_step(api: ModelApi, step_cfg: StepConfig) -> Callable:
+    """Multi-pod DFL round: (stacked params, stacked v, w (n_pods,),
+    batch (n_pods, ...), P_pod (n_pods, n_pods)) -> updated + mean loss.
+
+    Every leaf carries a leading replica axis sharded over "pod";
+    ``spmd_axis_name`` threads that axis through all internal sharding
+    constraints so each pod's replica stays pod-local during local compute.
+    """
+    local = make_train_step(api, step_cfg)
+
+    def one_pod(params, v, w, batches):
+        def body(carry, batch):
+            p, vv = carry
+            p, vv, loss = local(p, vv, w, batch)
+            return (p, vv), loss
+
+        (params, v), losses = jax.lax.scan(body, (params, v), batches)
+        return params, v, losses.mean()
+
+    def round_step(params, v, w, batch, P_pod):
+        params, v, loss = jax.vmap(one_pod, spmd_axis_name="pod")(
+            params, v, w, batch)
+
+        def mix(x):
+            return jnp.einsum(
+                "ij,j...->i...", P_pod, x.astype(jnp.float32)).astype(x.dtype)
+
+        params = jax.tree.map(mix, params)  # push-sum gossip over "pod"
+        w = P_pod @ w
+        return params, v, w, loss.mean()
+
+    return round_step
+
+
+def make_serve_step(api: ModelApi) -> Callable:
+    """(params, cache, tokens (B,), pos ()) -> (logits, cache)."""
+
+    def serve_step(params, cache, tokens, pos):
+        return api.decode_step(params, cache, tokens, pos)
+
+    return serve_step

@@ -1,0 +1,235 @@
+"""Attention: GQA (with sliding window / encoder modes) and MLA (DeepSeek).
+
+All functions are cache-functional: full-sequence mode returns no cache;
+decode mode takes one layer's cache slice and returns the updated slice, so
+the layer stack can ``lax.scan`` over (stacked params, stacked cache).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import apply_rope, rms_norm, rope, shard_act
+from repro.models.pdefs import PDef
+
+__all__ = [
+    "gqa_defs",
+    "mla_defs",
+    "gqa_cache_defs",
+    "mla_cache_defs",
+    "gqa_forward",
+    "gqa_decode",
+    "mla_forward",
+    "mla_decode",
+]
+
+_NEG = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# Parameter / cache definitions.
+# ---------------------------------------------------------------------------
+
+def gqa_defs(cfg: ArchConfig, stacked: tuple = ()) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    L, Lax = (stacked, ("layers",) * len(stacked)) if stacked else ((), ())
+    dt = cfg.dtype
+    defs = {
+        "wq": PDef(L + (d, h, hd), Lax + ("embed", "heads", "head_dim"), dt, fan_in=d),
+        "wk": PDef(L + (d, kv, hd), Lax + ("embed", "kv_heads", "head_dim"), dt, fan_in=d),
+        "wv": PDef(L + (d, kv, hd), Lax + ("embed", "kv_heads", "head_dim"), dt, fan_in=d),
+        "wo": PDef(L + (h, hd, d), Lax + ("heads", "head_dim", "embed"), dt, fan_in=h * hd),
+    }
+    if cfg.qk_norm:
+        defs["q_norm"] = PDef(L + (hd,), Lax + (None,), jnp.float32, "zeros")
+        defs["k_norm"] = PDef(L + (hd,), Lax + (None,), jnp.float32, "zeros")
+    return defs
+
+
+def mla_defs(cfg: ArchConfig, stacked: tuple = ()) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    qr, kr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    L, Lax = (stacked, ("layers",) * len(stacked)) if stacked else ((), ())
+    dt = cfg.dtype
+    return {
+        "wq_a": PDef(L + (d, qr), Lax + ("embed", "rank"), dt, fan_in=d),
+        "q_norm": PDef(L + (qr,), Lax + (None,), jnp.float32, "zeros"),
+        "wq_b": PDef(L + (qr, h, dn + dr), Lax + ("rank", "heads", None), dt, fan_in=qr),
+        "wkv_a": PDef(L + (d, kr + dr), Lax + ("embed", "rank"), dt, fan_in=d),
+        "kv_norm": PDef(L + (kr,), Lax + (None,), jnp.float32, "zeros"),
+        "wkv_b": PDef(L + (kr, h, dn + dv), Lax + ("rank", "heads", None), dt, fan_in=kr),
+        "wo": PDef(L + (h, dv, d), Lax + ("heads", None, "embed"), dt, fan_in=h * dv),
+    }
+
+
+def gqa_cache_defs(cfg: ArchConfig, batch: int, length: int, stacked: tuple = ()) -> dict:
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    L, Lax = (stacked, ("layers",) * len(stacked)) if stacked else ((), ())
+    shape = L + (batch, length, kv, hd)
+    axes = Lax + ("batch", "seq", "kv_heads", "head_dim")
+    return {"k": PDef(shape, axes, cfg.dtype, "zeros"),
+            "v": PDef(shape, axes, cfg.dtype, "zeros")}
+
+
+def mla_cache_defs(cfg: ArchConfig, batch: int, length: int, stacked: tuple = ()) -> dict:
+    L, Lax = (stacked, ("layers",) * len(stacked)) if stacked else ((), ())
+    return {
+        "ckv": PDef(L + (batch, length, cfg.kv_lora_rank),
+                    Lax + ("batch", "seq", "rank"), cfg.dtype, "zeros"),
+        "kpe": PDef(L + (batch, length, cfg.qk_rope_head_dim),
+                    Lax + ("batch", "seq", None), cfg.dtype, "zeros"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Masking + core dot-product attention.
+# ---------------------------------------------------------------------------
+
+def _full_mask(q_pos, k_pos, window, causal: bool):
+    """Additive bias (..., Sq, Sk). window may be a traced scalar; 0 = full."""
+    dq = q_pos[..., :, None]
+    dk = k_pos[..., None, :]
+    ok = jnp.ones(jnp.broadcast_shapes(dq.shape, dk.shape), bool)
+    if causal:
+        ok = dk <= dq
+        win = jnp.asarray(window)
+        ok = ok & ((win <= 0) | (dq - dk < win))
+    return jnp.where(ok, 0.0, _NEG).astype(jnp.float32)
+
+
+def _dot_attn(q, k, v, bias, scale):
+    """q: (B,Sq,KV,G,hd)  k,v: (B,Sk,KV,hd)  bias: (B,1,1,Sq,Sk) or None."""
+    qf = (q * scale).astype(jnp.float32)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qf, k.astype(jnp.float32))
+    if bias is not None:
+        scores = scores + bias
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
+    return out.astype(v.dtype)
+
+
+def _split_heads(x, kv, g):
+    b, s = x.shape[:2]
+    return x.reshape(b, s, kv, g, -1)
+
+
+# ---------------------------------------------------------------------------
+# GQA.
+# ---------------------------------------------------------------------------
+
+def _gqa_qkv(p, x, cfg: ArchConfig, positions, theta):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if theta is not None:
+        sin, cos = rope(positions, cfg.resolved_head_dim, theta)
+        q = apply_rope(q, sin, cos)
+        k = apply_rope(k, sin, cos)
+    return q, k, v
+
+
+def gqa_forward(p, x, cfg: ArchConfig, window=0, theta=None, positions=None,
+                return_kv: bool = False):
+    """Full-sequence attention (train / prefill / encoder)."""
+    b, s, _ = x.shape
+    kv, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _gqa_qkv(p, x, cfg, positions, theta)
+    q = shard_act(q, ("batch", "seq", "heads", None))
+    bias = None
+    if cfg.causal or cfg.sliding_window:  # static: window itself may be traced
+        bias = _full_mask(positions, positions, window, cfg.causal)[:, None, None]
+    out = _dot_attn(_split_heads(q, kv, g), k, v, bias, hd ** -0.5)
+    out = out.reshape(b, s, cfg.n_heads, hd)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return (out, (k, v)) if return_kv else out
+
+
+def gqa_decode(p, x, cache, cfg: ArchConfig, pos, window=0, theta=None):
+    """One-token decode. x: (B,1,D); cache slice {"k","v"}: (B,S,kv,hd)."""
+    b = x.shape[0]
+    kv, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    positions = jnp.full((b, 1), pos)
+    q, k_new, v_new = _gqa_qkv(p, x, cfg, positions, theta)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), pos, 1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), pos, 1)
+    k_pos = jnp.broadcast_to(jnp.arange(k.shape[1]), (b, k.shape[1]))
+    bias = _full_mask(positions, k_pos, window, True)[:, None, None]
+    out = _dot_attn(_split_heads(q, kv, g), k, v, bias, hd ** -0.5)
+    out = out.reshape(b, 1, cfg.n_heads, hd)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, DeepSeek-V3).
+# ---------------------------------------------------------------------------
+
+def _mla_q(p, x, cfg: ArchConfig, positions):
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["wq_a"]), p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["wq_b"])
+    q_nope, q_pe = q[..., :dn], q[..., dn:]
+    sin, cos = rope(positions, dr, cfg.rope_theta)
+    return q_nope, apply_rope(q_pe, sin, cos)
+
+
+def _mla_kv_latent(p, x, cfg: ArchConfig, positions):
+    kr, dr = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    a = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    ckv = rms_norm(a[..., :kr], p["kv_norm"], cfg.norm_eps)
+    sin, cos = rope(positions, dr, cfg.rope_theta)
+    kpe = apply_rope(a[..., None, kr:], sin, cos)[..., 0, :]  # shared head
+    return ckv, kpe
+
+
+def _mla_attend(p, q_nope, q_pe, ckv, kpe, cfg: ArchConfig, bias):
+    dn, dv = cfg.qk_nope_head_dim, cfg.v_head_dim
+    kvb = jnp.einsum("bsr,rhk->bshk", ckv, p["wkv_b"])
+    k_nope, v = kvb[..., :dn], kvb[..., dn:]
+    scale = (dn + cfg.qk_rope_head_dim) ** -0.5
+    s1 = jnp.einsum("bqhd,bshd->bhqs", (q_nope * scale).astype(jnp.float32),
+                    k_nope.astype(jnp.float32))
+    s2 = jnp.einsum("bqhd,bsd->bhqs", (q_pe * scale).astype(jnp.float32),
+                    kpe.astype(jnp.float32))
+    scores = s1 + s2
+    if bias is not None:
+        scores = scores + bias
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs, v.astype(jnp.float32)).astype(v.dtype)
+    return jnp.einsum("bqhd,hdo->bqo", out, p["wo"])
+
+
+def mla_forward(p, x, cfg: ArchConfig, window=0, theta=None, positions=None,
+                return_kv: bool = False):
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q_nope, q_pe = _mla_q(p, x, cfg, positions)
+    ckv, kpe = _mla_kv_latent(p, x, cfg, positions)
+    bias = _full_mask(positions, positions, 0, cfg.causal)[:, None]
+    out = _mla_attend(p, q_nope, q_pe, ckv, kpe, cfg, bias)
+    return (out, (ckv, kpe)) if return_kv else out
+
+
+def mla_decode(p, x, cache, cfg: ArchConfig, pos, window=0, theta=None):
+    """Decode against the latent cache (ckv + kpe) — the MLA memory win."""
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos)
+    q_nope, q_pe = _mla_q(p, x, cfg, positions)
+    ckv_new, kpe_new = _mla_kv_latent(p, x, cfg, positions)
+    ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache["ckv"], ckv_new.astype(cache["ckv"].dtype), pos, 1)
+    kpe = jax.lax.dynamic_update_slice_in_dim(
+        cache["kpe"], kpe_new.astype(cache["kpe"].dtype), pos, 1)
+    k_pos = jnp.broadcast_to(jnp.arange(ckv.shape[1]), (b, ckv.shape[1]))
+    bias = _full_mask(positions, k_pos, 0, True)[:, None]
+    out = _mla_attend(p, q_nope, q_pe, ckv, kpe, cfg, bias)
+    return out, {"ckv": ckv, "kpe": kpe}

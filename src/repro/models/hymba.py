@@ -1,0 +1,226 @@
+"""Hymba (arXiv:2411.13676): hybrid-head layers running attention heads and
+Mamba-style SSM heads *in parallel* on the same input, plus learnable meta
+tokens prepended to the sequence and mostly-sliding-window attention.
+
+Per layer: y = 0.5 * (rmsnorm(attn(x)) + rmsnorm(ssm(x))), then SwiGLU MLP.
+Decode state: rolling KV cache (full-length for the few global layers) +
+O(1) SSM state — sub-quadratic long-context decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models.layers import rms_norm, shard_act, softmax_xent
+from repro.models.moe import swiglu_defs, swiglu_forward
+from repro.models.pdefs import PDef
+from repro.models.transformer import _layer_meta
+
+__all__ = ["param_defs", "cache_defs", "forward", "loss", "decode_step"]
+
+
+def _di(cfg: ArchConfig) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def _ssm_defs(cfg: ArchConfig, stacked: tuple) -> dict:
+    d, di, n = cfg.d_model, _di(cfg), cfg.ssm_state
+    L, Lax = stacked, ("layers",) * len(stacked)
+    dt = cfg.dtype
+    return {
+        "w_in": PDef(L + (d, 2 * di), Lax + ("embed", "ssm_inner"), dt, fan_in=d),
+        "w_dt": PDef(L + (di, di), Lax + ("ssm_inner", None), dt, fan_in=di),
+        "b_dt": PDef(L + (di,), Lax + (None,), jnp.float32, "zeros"),
+        "A_log": PDef(L + (di,), Lax + ("ssm_inner",), jnp.float32, "zeros"),
+        "w_B": PDef(L + (di, n), Lax + ("ssm_inner", None), dt, fan_in=di),
+        "w_C": PDef(L + (di, n), Lax + ("ssm_inner", None), dt, fan_in=di),
+        "D": PDef(L + (di,), Lax + ("ssm_inner",), jnp.float32, "ones"),
+        "w_out": PDef(L + (di, d), Lax + ("ssm_inner", "embed"), dt, fan_in=di),
+    }
+
+
+def param_defs(cfg: ArchConfig) -> dict:
+    L, d, v = (cfg.n_layers,), cfg.d_model, cfg.padded_vocab
+    layers = {
+        "attn": attn.gqa_defs(cfg, stacked=L),
+        "ssm": _ssm_defs(cfg, L),
+        "ln1": PDef(L + (d,), ("layers", None), jnp.float32, "zeros"),
+        "ln2": PDef(L + (d,), ("layers", None), jnp.float32, "zeros"),
+        "norm_attn": PDef(L + (d,), ("layers", None), jnp.float32, "zeros"),
+        "norm_ssm": PDef(L + (d,), ("layers", None), jnp.float32, "zeros"),
+        "mlp": swiglu_defs(cfg, stacked=L),
+    }
+    return {
+        "layers": layers,
+        "meta_tokens": PDef((cfg.n_meta_tokens, d), (None, "embed"), cfg.dtype, fan_in=d),
+        "embed": PDef((v, d), ("vocab", "embed"), cfg.dtype, fan_in=d),
+        "lm_head": PDef((d, v), ("embed", "vocab"), cfg.dtype, fan_in=d),
+        "final_norm": PDef((d,), (None,), jnp.float32, "zeros"),
+    }
+
+
+def cache_defs(cfg: ArchConfig, batch: int, length: int) -> dict:
+    """KV cache covers meta tokens + sequence; SSM state is O(1)."""
+    di, n = _di(cfg), cfg.ssm_state
+    kv = attn.gqa_cache_defs(cfg, batch, length + cfg.n_meta_tokens,
+                             stacked=(cfg.n_layers,))
+    kv["ssm_h"] = PDef((cfg.n_layers, batch, di, n),
+                       ("layers", "batch", "ssm_inner", None), jnp.float32, "zeros")
+    return kv
+
+
+# ---------------------------------------------------------------------------
+# SSM branch (diagonal selective state space, S6-style).
+# ---------------------------------------------------------------------------
+
+def _ssm_proj(pl, xn, cfg):
+    di = _di(cfg)
+    up = jnp.einsum("bsd,de->bse", xn, pl["w_in"])
+    xm, z = up[..., :di], up[..., di:]
+    dt = jax.nn.softplus(
+        jnp.einsum("bse,ef->bsf", xm.astype(jnp.float32), pl["w_dt"].astype(jnp.float32))
+        + pl["b_dt"])
+    A = -jnp.exp(pl["A_log"])  # (di,) negative
+    decay = jnp.exp(dt * A)  # (B,S,di)
+    Bm = jnp.einsum("bse,en->bsn", xm.astype(jnp.float32), pl["w_B"].astype(jnp.float32))
+    Cm = jnp.einsum("bse,en->bsn", xm.astype(jnp.float32), pl["w_C"].astype(jnp.float32))
+    u = dt * xm.astype(jnp.float32)
+    return xm, z, decay, Bm, Cm, u
+
+
+def _ssm_scan(pl, xn, cfg, state=None):
+    """state: (B,di,N) or None.  Returns (y (B,S,d), new_state)."""
+    xm, z, decay, Bm, Cm, u = _ssm_proj(pl, xn, cfg)
+    contrib = u[..., None] * Bm[:, :, None, :]  # (B,S,di,N)
+    if state is None:
+        a = jnp.broadcast_to(decay[..., None], contrib.shape)
+
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, bl * ar + br
+
+        _, h = jax.lax.associative_scan(combine, (a, contrib), axis=1)
+        new_state = h[:, -1]  # final state (prefill -> decode handoff)
+    else:
+        h = (decay[:, 0, :, None] * state + contrib[:, 0])[:, None]  # (B,1,di,N)
+        new_state = h[:, 0]
+    y = jnp.einsum("bsen,bsn->bse", h, Cm) + pl["D"] * xm.astype(jnp.float32)
+    y = (y.astype(cfg.dtype) * jax.nn.silu(z))
+    return jnp.einsum("bse,ed->bsd", y, pl["w_out"]), new_state
+
+
+# ---------------------------------------------------------------------------
+# Hybrid layer + stack.
+# ---------------------------------------------------------------------------
+
+def _embed(params, tokens, cfg):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    return x * jnp.asarray(np.sqrt(cfg.d_model), cfg.dtype)
+
+
+def forward(params, batch, cfg: ArchConfig):
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    x = _embed(params, tokens, cfg)
+    meta = jnp.broadcast_to(params["meta_tokens"][None],
+                            (b,) + params["meta_tokens"].shape)
+    x = jnp.concatenate([meta, x], axis=1)
+    x = shard_act(x, ("batch", "seq", "embed"))
+    s = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    windows, thetas = _layer_meta(cfg)
+
+    def body(carry, inp):
+        pl, win, th = inp
+        xn = rms_norm(carry, pl["ln1"], cfg.norm_eps)
+        a = attn.gqa_forward(pl["attn"], xn, cfg, window=win, theta=th,
+                             positions=positions)
+        s_out, _ = _ssm_scan(pl["ssm"], xn, cfg)
+        mix = 0.5 * (rms_norm(a, pl["norm_attn"], cfg.norm_eps)
+                     + rms_norm(s_out, pl["norm_ssm"], cfg.norm_eps))
+        x1 = carry + shard_act(mix, ("batch", "seq", "embed"))
+        h2 = rms_norm(x1, pl["ln2"], cfg.norm_eps)
+        return x1 + swiglu_forward(pl["mlp"], h2), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, (params["layers"], windows, thetas),
+                        unroll=cfg.scan_unroll)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x[:, cfg.n_meta_tokens:], params["lm_head"])
+    return shard_act(logits, ("batch", "seq", "vocab")), {}
+
+
+def loss(params, batch, cfg: ArchConfig):
+    logits, _ = forward(params, batch, cfg)
+    ce, acc = softmax_xent(logits[:, :-1], batch["tokens"][:, 1:])
+    return ce, (ce, acc)
+
+
+def prefill(params, batch, cfg: ArchConfig, cache_len: int):
+    """Parallel prefill over [meta tokens + prompt]: returns (logits, cache)
+    with KV padded to n_meta + cache_len and the final SSM state."""
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    x = _embed(params, tokens, cfg)
+    meta = jnp.broadcast_to(params["meta_tokens"][None],
+                            (b,) + params["meta_tokens"].shape)
+    x = jnp.concatenate([meta, x], axis=1)
+    s = x.shape[1]
+    total = cfg.n_meta_tokens + cache_len
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    windows, thetas = _layer_meta(cfg)
+
+    def pad(t):
+        full = jnp.zeros((t.shape[0], total) + t.shape[2:], t.dtype)
+        return jax.lax.dynamic_update_slice_in_dim(full, t, 0, 1)
+
+    def body(carry, inp):
+        pl, win, th = inp
+        xn = rms_norm(carry, pl["ln1"], cfg.norm_eps)
+        a, (k, v) = attn.gqa_forward(pl["attn"], xn, cfg, window=win, theta=th,
+                                     positions=positions, return_kv=True)
+        s_out, h_final = _ssm_scan(pl["ssm"], xn, cfg)
+        mix = 0.5 * (rms_norm(a, pl["norm_attn"], cfg.norm_eps)
+                     + rms_norm(s_out, pl["norm_ssm"], cfg.norm_eps))
+        x1 = carry + mix
+        h2 = rms_norm(x1, pl["ln2"], cfg.norm_eps)
+        return x1 + swiglu_forward(pl["mlp"], h2), {"k": pad(k), "v": pad(v),
+                                                    "ssm_h": h_final}
+
+    x, cache = jax.lax.scan(body, x, (params["layers"], windows, thetas),
+                            unroll=cfg.scan_unroll)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x[:, cfg.n_meta_tokens:], params["lm_head"])
+    return logits, cache
+
+
+def decode_step(params, cache, tokens, pos, cfg: ArchConfig):
+    """pos is the position in the *token* stream; the KV cache additionally
+    holds the meta-token prefix at its head."""
+    x = _embed(params, tokens[:, None], cfg)
+    windows, thetas = _layer_meta(cfg)
+    cache_pos = pos + cfg.n_meta_tokens
+
+    def body(carry, inp):
+        pl, kv, win, th = inp
+        xn = rms_norm(carry, pl["ln1"], cfg.norm_eps)
+        a, new_kv = attn.gqa_decode(pl["attn"], xn, {"k": kv["k"], "v": kv["v"]},
+                                    cfg, cache_pos, window=win, theta=th)
+        s_out, new_h = _ssm_scan(pl["ssm"], xn, cfg, state=kv["ssm_h"])
+        mix = 0.5 * (rms_norm(a, pl["norm_attn"], cfg.norm_eps)
+                     + rms_norm(s_out, pl["norm_ssm"], cfg.norm_eps))
+        x1 = carry + mix
+        h2 = rms_norm(x1, pl["ln2"], cfg.norm_eps)
+        new_kv = {"k": new_kv["k"], "v": new_kv["v"], "ssm_h": new_h}
+        return x1 + swiglu_forward(pl["mlp"], h2), new_kv
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache, windows, thetas),
+                                unroll=cfg.scan_unroll)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])[:, 0]
+    return logits, new_cache

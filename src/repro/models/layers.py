@@ -1,0 +1,77 @@
+"""Shared model layers: norms, rotary embeddings, activations, losses."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "rms_norm",
+    "rope",
+    "apply_rope",
+    "sinusoidal_positions",
+    "softmax_xent",
+    "shard_act",
+]
+
+
+def shard_act(x, logical: tuple):
+    """Activation sharding constraint hook; resolved by repro.launch.sharding
+    when a mesh is active, identity otherwise (import-cycle-free)."""
+    from repro.launch import sharding as shlib
+
+    return shlib.constrain(x, logical)
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def rope(positions, dim: int, theta) -> tuple:
+    """Returns (sin, cos) of shape positions.shape + (dim//2,).
+
+    ``theta`` may be a python float or a traced scalar (per-layer theta is
+    scanned over layers for gemma3's local/global split).
+    """
+    half = dim // 2
+    freqs = jnp.exp(
+        -jnp.log(jnp.asarray(theta, jnp.float32))
+        * jnp.arange(half, dtype=jnp.float32) / half
+    )
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+def apply_rope(x, sin, cos):
+    """x: (..., seq, heads, head_dim); sin/cos: (..., seq, head_dim//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    s = sin[..., None, :].astype(jnp.float32)
+    c = cos[..., None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * c - x2f * s, x2f * c + x1f * s], axis=-1
+    ).astype(x.dtype)
+
+
+def sinusoidal_positions(positions, dim: int):
+    half = dim // 2
+    freqs = jnp.exp(
+        -jnp.log(10_000.0) * jnp.arange(half, dtype=jnp.float32) / half
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def softmax_xent(logits, labels, mask=None):
+    """Mean CE over (optionally masked) positions; returns (loss, acc)."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    correct = (logits.argmax(-1) == labels).astype(jnp.float32)
+    if mask is None:
+        return -ll.mean(), correct.mean()
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return -(ll * mask).sum() / denom, (correct * mask).sum() / denom

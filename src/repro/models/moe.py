@@ -1,0 +1,155 @@
+"""Mixture-of-Experts MLP: exact dense reference + GShard-style capacity
+dispatch (GSPMD-friendly einsum formulation for the dry-run mesh).
+
+Covers DBRX (softmax top-4 of 16) and DeepSeek-V3 (sigmoid gating with
+normalized top-8 of 256 + 1 shared expert).  Aux load-balance loss follows
+Switch/GShard: E * sum_e(frac_tokens_e * mean_prob_e).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import shard_act
+from repro.models.pdefs import PDef
+
+__all__ = ["moe_defs", "moe_forward", "swiglu_defs", "swiglu_forward"]
+
+
+def swiglu_defs(cfg: ArchConfig, stacked: tuple = (), d_ff: int = 0) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    L, Lax = (stacked, ("layers",) * len(stacked)) if stacked else ((), ())
+    dt = cfg.dtype
+    defs = {
+        "wi": PDef(L + (d, f), Lax + ("embed", "mlp"), dt, fan_in=d),
+        "wo": PDef(L + (f, d), Lax + ("mlp", "embed"), dt, fan_in=f),
+    }
+    if cfg.mlp_act == "swiglu":
+        defs["wg"] = PDef(L + (d, f), Lax + ("embed", "mlp"), dt, fan_in=d)
+    return defs
+
+
+def swiglu_forward(p, x):
+    if "wg" in p:
+        h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["wi"]))
+        h = h * jnp.einsum("bsd,df->bsf", x, p["wg"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["wi"]))
+    h = shard_act(h, ("batch", "seq", "mlp"))
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"])
+
+
+def moe_defs(cfg: ArchConfig, stacked: tuple = ()) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    L, Lax = (stacked, ("layers",) * len(stacked)) if stacked else ((), ())
+    dt = cfg.dtype
+    defs = {
+        "router": PDef(L + (d, e), Lax + ("embed", None), jnp.float32, fan_in=d),
+        "wi": PDef(L + (e, d, f), Lax + ("expert", "embed", "mlp"), dt, fan_in=d),
+        "wg": PDef(L + (e, d, f), Lax + ("expert", "embed", "mlp"), dt, fan_in=d),
+        "wo": PDef(L + (e, f, d), Lax + ("expert", "mlp", "embed"), dt, fan_in=f),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        defs["shared"] = swiglu_defs(cfg, stacked, d_ff=fs)
+    return defs
+
+
+def _router_probs(p, x, cfg: ArchConfig):
+    """Returns (weights (B,S,k), sel (B,S,k), probs (B,S,E))."""
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    if cfg.n_shared_experts:  # deepseek: sigmoid gating, normalized top-k
+        probs = jax.nn.sigmoid(logits)
+        w, sel = jax.lax.top_k(probs, cfg.top_k)
+        w = w / (w.sum(-1, keepdims=True) + 1e-9)
+    else:  # dbrx: softmax over experts, renormalized top-k
+        probs = jax.nn.softmax(logits, axis=-1)
+        w, sel = jax.lax.top_k(probs, cfg.top_k)
+        w = w / (w.sum(-1, keepdims=True) + 1e-9)
+    return w, sel, probs
+
+
+def _aux_loss(sel, probs, cfg: ArchConfig):
+    e = cfg.n_experts
+    frac = jnp.mean(jax.nn.one_hot(sel, e, dtype=jnp.float32), axis=(0, 1, 2))
+    imp = probs.mean(axis=(0, 1))
+    return e * jnp.sum(frac * imp)
+
+
+def _moe_dense(p, x, w, sel, cfg: ArchConfig):
+    """Exact reference: every expert on every token, mask-combined."""
+    e = cfg.n_experts
+    gates = jnp.zeros(x.shape[:2] + (e,), jnp.float32)
+    gates = jnp.sum(jax.nn.one_hot(sel, e, dtype=jnp.float32) * w[..., None], axis=2)
+    h = jnp.einsum("bsd,edf->bsef", x, p["wi"])
+    g = jnp.einsum("bsd,edf->bsef", x, p["wg"])
+    h = jax.nn.silu(h) * g
+    out = jnp.einsum("bsef,efd->bsed", h, p["wo"])
+    return jnp.einsum("bsed,bse->bsd", out.astype(jnp.float32), gates).astype(x.dtype)
+
+
+def _positions_cumsum(sel, b, s, k, e):
+    """One-hot cumsum over the (B, S*k, E) flat assignment tensor.  Simple,
+    but materializes O(T*E) f32 — the memory hot spot at deepseek scale."""
+    sel_oh = jax.nn.one_hot(sel, e, dtype=jnp.float32)  # (B,S,k,E)
+    flat = sel_oh.reshape(b, s * k, e)
+    pos = jnp.cumsum(flat, axis=1) - flat  # exclusive cumsum
+    pos = pos.reshape(b, s, k, e)
+    return jnp.sum(pos * sel_oh, axis=-1).astype(jnp.int32)  # (B,S,k)
+
+
+def _positions_sort(sel, b, s, k, e):
+    """O(T) position-in-expert: stable argsort groups assignments by expert
+    while preserving arrival order, so rank-within-group == cumsum position.
+    Avoids the (B, T, E) blow-up entirely."""
+    t = s * k
+    flat_e = sel.reshape(b, t)
+    rows = jnp.arange(b)[:, None]
+    counts = jnp.zeros((b, e), jnp.int32).at[rows, flat_e].add(1)
+    starts = jnp.cumsum(counts, axis=1) - counts  # exclusive, (B,E)
+    order = jnp.argsort(flat_e, axis=1, stable=True)  # (B,T)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    pos_sorted = jnp.arange(t)[None, :] - jnp.take_along_axis(starts, sorted_e, axis=1)
+    pos = jnp.zeros((b, t), jnp.int32).at[rows, order].set(pos_sorted.astype(jnp.int32))
+    return pos.reshape(b, s, k)
+
+
+def _moe_gshard(p, x, w, sel, cfg: ArchConfig):
+    """Capacity-based dispatch/combine einsums (sharded: expert -> "model")."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    capacity = max(int(s * k / e * cfg.capacity_factor), k)
+
+    pos_fn = _positions_sort if cfg.moe_pos == "sort" else _positions_cumsum
+    pos_in_e = pos_fn(sel, b, s, k, e)
+    ddt = jnp.bfloat16 if cfg.moe_dispatch_dtype == "bf16" else jnp.float32
+    sel_oh = jax.nn.one_hot(sel, e, dtype=ddt)  # (B,S,k,E)
+    keep = (pos_in_e < capacity).astype(ddt)
+    pos_oh = jax.nn.one_hot(pos_in_e, capacity, dtype=ddt)  # (B,S,k,C)
+    dispatch = jnp.einsum("bske,bskc->bsec", sel_oh * keep[..., None], pos_oh)
+    combine = jnp.einsum("bske,bskc,bsk->bsec", sel_oh * keep[..., None],
+                         pos_oh, w.astype(ddt))
+    # dispatch/combine are the largest MoE temporaries (B,S,E,C); shard the
+    # expert dim over "model" alongside the expert weights.
+    dispatch = shard_act(dispatch, ("batch", None, "expert", None))
+    combine = shard_act(combine, ("batch", None, "expert", None))
+
+    xin = jnp.einsum("bsec,bsd->becd", dispatch.astype(x.dtype), x)
+    xin = shard_act(xin, ("batch", "expert", None, None))
+    h = jnp.einsum("becd,edf->becf", xin, p["wi"])
+    g = jnp.einsum("becd,edf->becf", xin, p["wg"])
+    h = jax.nn.silu(h) * g
+    out = jnp.einsum("becf,efd->becd", h, p["wo"])
+    out = shard_act(out, ("batch", "expert", None, None))
+    return jnp.einsum("bsec,becd->bsd", combine.astype(x.dtype), out)
+
+
+def moe_forward(p, x, cfg: ArchConfig):
+    """Returns (y, aux_loss)."""
+    w, sel, probs = _router_probs(p, x, cfg)
+    impl = _moe_dense if cfg.moe_impl == "dense" else _moe_gshard
+    y = impl(p, x, w, sel, cfg)
+    if cfg.n_shared_experts:
+        y = y + swiglu_forward(p["shared"], x)
+    return y, _aux_loss(sel, probs, cfg)

@@ -1,0 +1,65 @@
+"""Parameter definitions with logical sharding axes.
+
+Every model declares its parameters (and KV caches) as a pytree of ``PDef``
+— shape + per-dim *logical axis names* + init spec.  From one declaration we
+derive: real initialization (smoke tests / training), ShapeDtypeStructs
+(dry-run, no allocation), and NamedShardings (logical→mesh rules live in
+``repro.launch.sharding``).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["PDef", "init_tree", "abstract_tree", "tree_num_params"]
+
+
+class PDef(NamedTuple):
+    shape: tuple
+    axes: tuple  # logical axis name (str) or None per dim
+    dtype: Any = jnp.float32
+    init: str = "normal"  # normal | zeros | ones
+    fan_in: int = 0  # 0 -> last-but-one dim
+
+    def scale(self) -> float:
+        if self.init != "normal":
+            return 0.0
+        fan = self.fan_in or (self.shape[-2] if len(self.shape) >= 2 else self.shape[-1])
+        return float(1.0 / np.sqrt(max(fan, 1)))
+
+
+def _is_pdef(x):
+    return isinstance(x, PDef)
+
+
+def init_tree(key: jax.Array, defs) -> Any:
+    """Materialize real parameters from a PDef tree."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=_is_pdef)
+    keys = jax.random.split(key, len(leaves))
+
+    def make(k, d: PDef):
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, d.dtype)
+        if d.init == "ones":
+            return jnp.ones(d.shape, d.dtype)
+        return (d.scale() * jax.random.normal(k, d.shape, jnp.float32)).astype(d.dtype)
+
+    return jax.tree.unflatten(treedef, [make(k, d) for k, d in zip(keys, leaves)])
+
+
+def abstract_tree(defs, sharding_fn=None) -> Any:
+    """ShapeDtypeStruct tree (optionally with shardings) — no allocation."""
+
+    def make(d: PDef):
+        sh = sharding_fn(d) if sharding_fn else None
+        return jax.ShapeDtypeStruct(d.shape, d.dtype, sharding=sh)
+
+    return jax.tree.map(make, defs, is_leaf=_is_pdef)
+
+
+def tree_num_params(defs) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=_is_pdef)
+    return int(sum(np.prod(d.shape) for d in leaves))

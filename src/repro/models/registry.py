@@ -1,0 +1,73 @@
+"""Uniform model API: block_kind -> (param_defs, cache_defs, forward, loss,
+decode_step).  Everything downstream (FL engine, pod runtime, dry-run,
+benchmarks) goes through this."""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+
+from repro.configs.base import ArchConfig
+from repro.models import hymba, transformer, xlstm
+from repro.models.pdefs import abstract_tree, init_tree, tree_num_params
+
+__all__ = ["ModelApi", "get_model_api"]
+
+
+class ModelApi(NamedTuple):
+    cfg: ArchConfig
+    param_defs: Callable
+    cache_defs: Callable
+    forward: Callable
+    loss: Callable
+    decode_step: Callable
+    prefill: Callable
+
+    # -- conveniences -------------------------------------------------------
+    def init(self, key: jax.Array):
+        return init_tree(key, self.param_defs(self.cfg))
+
+    def abstract_params(self, sharding_fn=None):
+        return abstract_tree(self.param_defs(self.cfg), sharding_fn)
+
+    def init_cache(self, key, batch: int, length: int):
+        return init_tree(key, self.cache_defs(batch, length))
+
+    def abstract_cache(self, batch: int, length: int, sharding_fn=None):
+        return abstract_tree(self.cache_defs(batch, length), sharding_fn)
+
+    def num_params(self) -> int:
+        return tree_num_params(self.param_defs(self.cfg))
+
+
+_MODULES = {
+    "transformer": transformer,
+    "xlstm": xlstm,
+    "hymba": hymba,
+}
+
+
+def get_model_api(cfg: ArchConfig) -> ModelApi:
+    mod = _MODULES[cfg.block_kind]
+
+    def loss(params, batch):
+        return mod.loss(params, batch, cfg)
+
+    def forward(params, batch):
+        return mod.forward(params, batch, cfg)
+
+    def decode_step(params, cache, tokens, pos):
+        return mod.decode_step(params, cache, tokens, pos, cfg)
+
+    def prefill(params, batch, cache_len: int):
+        return mod.prefill(params, batch, cfg, cache_len)
+
+    return ModelApi(
+        cfg=cfg,
+        param_defs=lambda c=cfg: mod.param_defs(c),
+        cache_defs=lambda batch, length, c=cfg: mod.cache_defs(c, batch, length),
+        forward=forward,
+        loss=loss,
+        decode_step=decode_step,
+        prefill=prefill,
+    )

@@ -1,0 +1,202 @@
+"""The paper's backbones in pure JAX: mnist_2NN, the CIFAR CNN, and
+ResNet-18 with GroupNorm (batch-norm replaced per the paper's Appendix A).
+
+Each model exposes ``init(key) -> params`` and ``apply(params, x) -> logits``
+plus a ready-made ``loss(params, batch) -> (ce_loss, accuracy)`` suitable for
+``repro.core.engine.FLTrainer``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Model", "mnist_2nn", "cifar_cnn", "resnet18_gn", "get_model"]
+
+
+def _dense_init(key, n_in, n_out, scale=None):
+    scale = scale or float(np.sqrt(2.0 / n_in))
+    wk, _ = jax.random.split(key)
+    return {
+        "w": (scale * jax.random.normal(wk, (n_in, n_out))).astype(jnp.float32),
+        "b": jnp.zeros((n_out,), jnp.float32),
+    }
+
+
+def _conv_init(key, kh, kw, c_in, c_out):
+    fan_in = kh * kw * c_in
+    scale = float(np.sqrt(2.0 / fan_in))
+    return {
+        "w": (scale * jax.random.normal(key, (kh, kw, c_in, c_out))).astype(
+            jnp.float32
+        ),
+        "b": jnp.zeros((c_out,), jnp.float32),
+    }
+
+
+def _conv(x, p, stride=1, padding="SAME"):
+    y = jax.lax.conv_general_dilated(
+        x,
+        p["w"],
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + p["b"]
+
+
+def _group_norm(x, p, groups=8, eps=1e-5):
+    n, h, w, c = x.shape
+    g = min(groups, c)
+    xg = x.reshape(n, h, w, g, c // g)
+    mean = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) * jax.lax.rsqrt(var + eps)
+    return xg.reshape(n, h, w, c) * p["scale"] + p["bias"]
+
+
+def _gn_init(c):
+    return {"scale": jnp.ones((c,), jnp.float32), "bias": jnp.zeros((c,), jnp.float32)}
+
+
+def _softmax_xent(logits, labels):
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    ce = -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+    acc = (logits.argmax(-1) == labels).mean()
+    return ce, acc
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    name: str
+    init: Callable
+    apply: Callable
+
+    def loss(self, params, batch):
+        logits = self.apply(params, batch["x"])
+        return _softmax_xent(logits, batch["y"])
+
+
+# ---------------------------------------------------------------------------
+# mnist_2NN: 784 -> 200 -> 200 -> 10 (Sun et al. 2022).
+# ---------------------------------------------------------------------------
+
+def mnist_2nn(n_classes: int = 10, in_dim: int = 784) -> Model:
+    def init(key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "fc1": _dense_init(k1, in_dim, 200),
+            "fc2": _dense_init(k2, 200, 200),
+            "out": _dense_init(k3, 200, n_classes),
+        }
+
+    def apply(params, x):
+        x = x.reshape(x.shape[0], -1)
+        x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+        x = jax.nn.relu(x @ params["fc2"]["w"] + params["fc2"]["b"])
+        return x @ params["out"]["w"] + params["out"]["b"]
+
+    return Model("mnist_2nn", init, apply)
+
+
+# ---------------------------------------------------------------------------
+# CIFAR CNN: conv5x5(64) - pool - conv5x5(64) - pool - fc384 - fc192 - out
+# (paper Appendix A).
+# ---------------------------------------------------------------------------
+
+def cifar_cnn(n_classes: int = 10, image: tuple = (32, 32, 3)) -> Model:
+    h, w, c = image
+    flat = (h // 4) * (w // 4) * 64
+
+    def init(key):
+        ks = jax.random.split(key, 5)
+        return {
+            "conv1": _conv_init(ks[0], 5, 5, c, 64),
+            "conv2": _conv_init(ks[1], 5, 5, 64, 64),
+            "fc1": _dense_init(ks[2], flat, 384),
+            "fc2": _dense_init(ks[3], 384, 192),
+            "out": _dense_init(ks[4], 192, n_classes),
+        }
+
+    def apply(params, x):
+        x = jax.nn.relu(_conv(x, params["conv1"]))
+        x = jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+        )
+        x = jax.nn.relu(_conv(x, params["conv2"]))
+        x = jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+        )
+        x = x.reshape(x.shape[0], -1)
+        x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+        x = jax.nn.relu(x @ params["fc2"]["w"] + params["fc2"]["b"])
+        return x @ params["out"]["w"] + params["out"]["b"]
+
+    return Model("cifar_cnn", init, apply)
+
+
+# ---------------------------------------------------------------------------
+# ResNet-18 with GroupNorm.
+# ---------------------------------------------------------------------------
+
+_STAGES = ((64, 1), (128, 2), (256, 2), (512, 2))  # (width, first stride)
+
+
+def resnet18_gn(n_classes: int = 10, image: tuple = (32, 32, 3), width_mult: float = 1.0) -> Model:
+    widths = [max(int(w * width_mult), 8) for w, _ in _STAGES]
+
+    def init(key):
+        keys = iter(jax.random.split(key, 64))
+        params = {
+            "stem": _conv_init(next(keys), 3, 3, image[2], widths[0]),
+            "stem_gn": _gn_init(widths[0]),
+        }
+        c_in = widths[0]
+        for s, ((_, stride), c_out) in enumerate(zip(_STAGES, widths)):
+            for b in range(2):
+                blk = {
+                    "conv1": _conv_init(next(keys), 3, 3, c_in, c_out),
+                    "gn1": _gn_init(c_out),
+                    "conv2": _conv_init(next(keys), 3, 3, c_out, c_out),
+                    "gn2": _gn_init(c_out),
+                }
+                if c_in != c_out or (b == 0 and stride != 1):
+                    blk["proj"] = _conv_init(next(keys), 1, 1, c_in, c_out)
+                    blk["proj_gn"] = _gn_init(c_out)
+                params[f"s{s}b{b}"] = blk
+                c_in = c_out
+        params["head"] = _dense_init(next(keys), c_in, n_classes)
+        return params
+
+    def block(x, p, stride):
+        y = _conv(x, p["conv1"], stride=stride)
+        y = jax.nn.relu(_group_norm(y, p["gn1"]))
+        y = _conv(y, p["conv2"])
+        y = _group_norm(y, p["gn2"])
+        if "proj" in p:
+            x = _group_norm(_conv(x, p["proj"], stride=stride), p["proj_gn"])
+        return jax.nn.relu(x + y)
+
+    def apply(params, x):
+        x = jax.nn.relu(_group_norm(_conv(x, params["stem"]), params["stem_gn"]))
+        for s, (_, stride) in enumerate(_STAGES):
+            for b in range(2):
+                x = block(x, params[f"s{s}b{b}"], stride if b == 0 else 1)
+        x = x.mean(axis=(1, 2))
+        return x @ params["head"]["w"] + params["head"]["b"]
+
+    return Model("resnet18_gn", init, apply)
+
+
+def get_model(name: str, n_classes: int, image=(32, 32, 3)) -> Model:
+    if name == "mnist_2nn":
+        return mnist_2nn(n_classes, int(np.prod(image)))
+    if name == "cifar_cnn":
+        return cifar_cnn(n_classes, image)
+    if name == "resnet18_gn":
+        return resnet18_gn(n_classes, image)
+    raise ValueError(name)

@@ -1,0 +1,248 @@
+"""Config-driven transformer stack (decoder / encoder / VLM / audio-masked-LM).
+
+Layers are *stacked* on a leading axis and driven by ``lax.scan`` so a
+61-layer model compiles one layer body; per-layer heterogeneity (gemma3's
+5:1 sliding-window pattern, dual rope thetas) rides along as scanned arrays.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models.layers import rms_norm, shard_act, sinusoidal_positions, softmax_xent
+from repro.models.pdefs import PDef
+
+__all__ = [
+    "param_defs",
+    "cache_defs",
+    "forward",
+    "loss",
+    "decode_step",
+]
+
+
+def _layer_meta(cfg: ArchConfig):
+    windows = jnp.asarray(
+        [cfg.window_for_layer(i) for i in range(cfg.n_layers)], jnp.int32
+    )
+    if cfg.global_rope_theta:
+        thetas = jnp.asarray(
+            [
+                cfg.global_rope_theta if cfg.window_for_layer(i) == 0 else cfg.rope_theta
+                for i in range(cfg.n_layers)
+            ],
+            jnp.float32,
+        )
+    else:
+        thetas = jnp.full((cfg.n_layers,), cfg.rope_theta, jnp.float32)
+    return windows, thetas
+
+
+# ---------------------------------------------------------------------------
+# Parameter / cache declarations.
+# ---------------------------------------------------------------------------
+
+def param_defs(cfg: ArchConfig) -> dict:
+    L, d, v = (cfg.n_layers,), cfg.d_model, cfg.padded_vocab
+    attn_defs = (
+        attn.mla_defs(cfg, stacked=L)
+        if cfg.attn_type == "mla"
+        else attn.gqa_defs(cfg, stacked=L)
+    )
+    mlp_defs = (
+        moe_lib.moe_defs(cfg, stacked=L)
+        if cfg.n_experts
+        else moe_lib.swiglu_defs(cfg, stacked=L)
+    )
+    layers = {
+        "attn": attn_defs,
+        "mlp": mlp_defs,
+        "ln1": PDef(L + (d,), ("layers", None), jnp.float32, "zeros"),
+        "ln2": PDef(L + (d,), ("layers", None), jnp.float32, "zeros"),
+    }
+    defs = {
+        "layers": layers,
+        "final_norm": PDef((d,), (None,), jnp.float32, "zeros"),
+    }
+    if cfg.task in ("lm", "vlm"):
+        defs["embed"] = PDef((v, d), ("vocab", "embed"), cfg.dtype, fan_in=d)
+        if not cfg.tie_embeddings:
+            defs["lm_head"] = PDef((d, v), ("embed", "vocab"), cfg.dtype, fan_in=d)
+    if cfg.task == "vlm":
+        fd = cfg.frontend_dim
+        defs["projector"] = {
+            "w1": PDef((fd, d), ("frontend", "embed"), cfg.dtype, fan_in=fd),
+            "w2": PDef((d, d), ("embed", "mlp"), cfg.dtype, fan_in=d),
+        }
+    if cfg.task == "masked_lm":
+        fd = cfg.frontend_dim
+        defs["in_proj"] = PDef((fd, d), ("frontend", "embed"), cfg.dtype, fan_in=fd)
+        defs["mask_emb"] = PDef((d,), (None,), cfg.dtype)
+        defs["lm_head"] = PDef((d, v), ("embed", "vocab"), cfg.dtype, fan_in=d)
+    return defs
+
+
+def cache_defs(cfg: ArchConfig, batch: int, length: int) -> dict:
+    L = (cfg.n_layers,)
+    if cfg.attn_type == "mla":
+        return attn.mla_cache_defs(cfg, batch, length, stacked=L)
+    return attn.gqa_cache_defs(cfg, batch, length, stacked=L)
+
+
+# ---------------------------------------------------------------------------
+# Embedding frontends per task.
+# ---------------------------------------------------------------------------
+
+def _embed_tokens(params, tokens, cfg: ArchConfig):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    return x * jnp.asarray(np.sqrt(cfg.d_model), cfg.dtype)
+
+
+def embed_inputs(params, batch, cfg: ArchConfig):
+    """Returns (x, loss_mask).  Batch layouts:
+      lm:        {"tokens": (B,S)} — next-token LM on all positions.
+      vlm:       {"tokens": (B,St), "image_feats": (B,Ni,Fd)} — image prefix.
+      masked_lm: {"features": (B,S,Fd), "mask": (B,S), "targets": (B,S)}.
+    """
+    if cfg.task == "lm":
+        x = _embed_tokens(params, batch["tokens"], cfg)
+        mask = jnp.ones(batch["tokens"].shape, jnp.float32)
+    elif cfg.task == "vlm":
+        img = jnp.einsum("bnf,fd->bnd", batch["image_feats"].astype(cfg.dtype),
+                         params["projector"]["w1"])
+        img = jnp.einsum("bnd,de->bne", jax.nn.gelu(img), params["projector"]["w2"])
+        txt = _embed_tokens(params, batch["tokens"], cfg)
+        x = jnp.concatenate([img, txt], axis=1)
+        mask = jnp.concatenate(
+            [jnp.zeros(img.shape[:2], jnp.float32),
+             jnp.ones(batch["tokens"].shape, jnp.float32)], axis=1)
+    elif cfg.task == "masked_lm":
+        x = jnp.einsum("bsf,fd->bsd", batch["features"].astype(cfg.dtype),
+                       params["in_proj"])
+        m = batch["mask"].astype(cfg.dtype)[..., None]
+        x = x * (1 - m) + params["mask_emb"] * m
+        pos = sinusoidal_positions(jnp.arange(x.shape[1]), cfg.d_model)
+        x = x + pos[None].astype(cfg.dtype)
+        mask = batch["mask"].astype(jnp.float32)
+    else:
+        raise ValueError(cfg.task)
+    return shard_act(x, ("batch", "seq", "embed")), mask
+
+
+# ---------------------------------------------------------------------------
+# Layer body + stack.
+# ---------------------------------------------------------------------------
+
+def _block(pl, x, cfg: ArchConfig, window, theta, positions):
+    fwd = attn.mla_forward if cfg.attn_type == "mla" else attn.gqa_forward
+    h = fwd(pl["attn"], rms_norm(x, pl["ln1"], cfg.norm_eps), cfg,
+            window=window, theta=theta, positions=positions)
+    x = x + shard_act(h, ("batch", "seq", "embed"))
+    h2 = rms_norm(x, pl["ln2"], cfg.norm_eps)
+    if cfg.n_experts:
+        y, aux = moe_lib.moe_forward(pl["mlp"], h2, cfg)
+    else:
+        y, aux = moe_lib.swiglu_forward(pl["mlp"], h2), jnp.float32(0.0)
+    return x + shard_act(y, ("batch", "seq", "embed")), aux
+
+
+def forward(params, batch, cfg: ArchConfig):
+    """Full-sequence forward -> (logits, aux).  Used by train & prefill."""
+    x, mask = embed_inputs(params, batch, cfg)
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    windows, thetas = _layer_meta(cfg)
+
+    def body(carry, inp):
+        pl, win, th = inp
+        y, aux = _block(pl, carry, cfg, win, th, positions)
+        return y, aux
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, auxs = jax.lax.scan(body, x, (params["layers"], windows, thetas),
+                           unroll=cfg.scan_unroll)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    logits = shard_act(logits, ("batch", "seq", "vocab"))
+    return logits, {"moe_aux": auxs.mean(), "loss_mask": mask}
+
+
+def loss(params, batch, cfg: ArchConfig):
+    """Task-appropriate loss -> (scalar, metrics). The FL/pod train target."""
+    logits, aux = forward(params, batch, cfg)
+    if cfg.task == "masked_lm":
+        ce, acc = softmax_xent(logits, batch["targets"], aux["loss_mask"])
+    else:
+        labels = batch["tokens"]
+        n_prefix = logits.shape[1] - labels.shape[1]  # image tokens (vlm)
+        lg = logits[:, n_prefix:-1] if labels.shape[1] > 1 else logits[:, n_prefix:]
+        ce, acc = softmax_xent(lg, labels[:, 1:], None)
+    total = ce + cfg.router_aux_coef * aux["moe_aux"]
+    return total, (ce, acc)
+
+
+def prefill(params, batch, cfg: ArchConfig, cache_len: int):
+    """Full-sequence forward that also materializes the KV cache (padded to
+    ``cache_len``) -> (logits, cache).  Feeds decode_step for serving."""
+    x, _ = embed_inputs(params, batch, cfg)
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    windows, thetas = _layer_meta(cfg)
+    fwd = attn.mla_forward if cfg.attn_type == "mla" else attn.gqa_forward
+    names = ("ckv", "kpe") if cfg.attn_type == "mla" else ("k", "v")
+
+    def pad(t):
+        full = jnp.zeros((t.shape[0], cache_len) + t.shape[2:], t.dtype)
+        return jax.lax.dynamic_update_slice_in_dim(full, t, 0, 1)
+
+    def body(carry, inp):
+        pl, win, th = inp
+        h, kv = fwd(pl["attn"], rms_norm(carry, pl["ln1"], cfg.norm_eps), cfg,
+                    window=win, theta=th, positions=positions, return_kv=True)
+        x1 = carry + h
+        h2 = rms_norm(x1, pl["ln2"], cfg.norm_eps)
+        if cfg.n_experts:
+            y, _ = moe_lib.moe_forward(pl["mlp"], h2, cfg)
+        else:
+            y = moe_lib.swiglu_forward(pl["mlp"], h2)
+        return x1 + y, tuple(pad(t) for t in kv)
+
+    x, kvs = jax.lax.scan(body, x, (params["layers"], windows, thetas),
+                          unroll=cfg.scan_unroll)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    return logits, dict(zip(names, kvs))
+
+
+def decode_step(params, cache, tokens, pos, cfg: ArchConfig):
+    """One-token decode: tokens (B,), cache from cache_defs -> (logits, cache)."""
+    x = _embed_tokens(params, tokens[:, None], cfg)
+    x = shard_act(x, ("batch", None, "embed"))
+    windows, thetas = _layer_meta(cfg)
+    dec = attn.mla_decode if cfg.attn_type == "mla" else attn.gqa_decode
+
+    def body(carry, inp):
+        pl, cache_l, win, th = inp
+        h = rms_norm(carry, pl["ln1"], cfg.norm_eps)
+        h, new_c = dec(pl["attn"], h, cache_l, cfg, pos, window=win, theta=th)
+        x1 = carry + h
+        h2 = rms_norm(x1, pl["ln2"], cfg.norm_eps)
+        if cfg.n_experts:
+            y, _ = moe_lib.moe_forward(pl["mlp"], h2, cfg)
+        else:
+            y = moe_lib.swiglu_forward(pl["mlp"], h2)
+        return x1 + y, new_c
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache, windows, thetas),
+                                unroll=cfg.scan_unroll)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)[:, 0]
+    return logits, new_cache

@@ -1,0 +1,373 @@
+"""xLSTM (arXiv:2405.04517): mLSTM (matrix memory, parallel/quadratic train
+form + O(1) recurrent decode) and sLSTM (scalar memory, sequential scan with
+block-diagonal recurrent gate connections).
+
+Layer pattern: every ``cfg.slstm_every``-th layer is sLSTM, the rest mLSTM
+(e.g. 24 layers, slstm_every=6 -> 4 groups of [5x mLSTM, 1x sLSTM]).  The
+stack scans over *groups* so the compiled body stays small while preserving
+the interleave.  Exponential gating uses the m-stabilizer from the paper; the
+parallel and recurrent forms are verified equivalent in tests.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import rms_norm, shard_act, softmax_xent
+from repro.models.pdefs import PDef
+
+__all__ = ["param_defs", "cache_defs", "forward", "loss", "decode_step"]
+
+_NEG = -2.0e38
+
+
+def _dims(cfg: ArchConfig):
+    d = cfg.d_model
+    di = 2 * d  # mLSTM projection factor 2 (paper)
+    h = cfg.n_heads
+    return d, di, h, di // h
+
+
+def _groups(cfg: ArchConfig):
+    if not cfg.slstm_every:
+        return cfg.n_layers, 1, 0  # (n_m per group, groups, n_s)
+    p = cfg.slstm_every
+    assert cfg.n_layers % p == 0, "n_layers must divide by slstm_every"
+    return p - 1, cfg.n_layers // p, 1
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions.
+# ---------------------------------------------------------------------------
+
+def _mlstm_defs(cfg: ArchConfig, stacked: tuple) -> dict:
+    d, di, h, hd = _dims(cfg)
+    L, Lax = stacked, ("layers",) * len(stacked)
+    dt = cfg.dtype
+    return {
+        "ln": PDef(L + (d,), Lax + (None,), jnp.float32, "zeros"),
+        "w_up": PDef(L + (d, 2 * di), Lax + ("embed", "mlp"), dt, fan_in=d),
+        "wq": PDef(L + (di, di), Lax + ("ssm_inner", "mlp"), dt, fan_in=di),
+        "wk": PDef(L + (di, di), Lax + ("ssm_inner", "mlp"), dt, fan_in=di),
+        "wv": PDef(L + (di, di), Lax + ("ssm_inner", "mlp"), dt, fan_in=di),
+        "w_if": PDef(L + (di, 2 * h), Lax + ("ssm_inner", None), jnp.float32, fan_in=di),
+        "b_if": PDef(L + (2 * h,), Lax + (None,), jnp.float32, "zeros"),
+        "out_norm": PDef(L + (hd,), Lax + (None,), jnp.float32, "zeros"),
+        "w_down": PDef(L + (di, d), Lax + ("mlp", "embed"), dt, fan_in=di),
+    }
+
+
+def _slstm_defs(cfg: ArchConfig, stacked: tuple) -> dict:
+    d, _, h, _ = _dims(cfg)
+    hd = d // h
+    f = int(math.ceil(4 * d / 3 / 128) * 128)  # post-FFN (pf 4/3)
+    L, Lax = stacked, ("layers",) * len(stacked)
+    dt = cfg.dtype
+    return {
+        "ln": PDef(L + (d,), Lax + (None,), jnp.float32, "zeros"),
+        "wx": PDef(L + (d, 4 * d), Lax + ("embed", "mlp"), dt, fan_in=d),
+        "r": PDef(L + (h, hd, 4 * hd), Lax + ("heads", None, None), dt, fan_in=hd),
+        "b": PDef(L + (4 * d,), Lax + (None,), jnp.float32, "zeros"),
+        "out_norm": PDef(L + (hd,), Lax + (None,), jnp.float32, "zeros"),
+        "ln_ffn": PDef(L + (d,), Lax + (None,), jnp.float32, "zeros"),
+        "ffn_wi": PDef(L + (d, f), Lax + ("embed", "mlp"), dt, fan_in=d),
+        "ffn_wg": PDef(L + (d, f), Lax + ("embed", "mlp"), dt, fan_in=d),
+        "ffn_wo": PDef(L + (f, d), Lax + ("mlp", "embed"), dt, fan_in=f),
+    }
+
+
+def param_defs(cfg: ArchConfig) -> dict:
+    d, v = cfg.d_model, cfg.padded_vocab
+    n_m, g, n_s = _groups(cfg)
+    defs = {
+        "mlstm": _mlstm_defs(cfg, (g, n_m)),
+        "final_norm": PDef((d,), (None,), jnp.float32, "zeros"),
+        "embed": PDef((v, d), ("vocab", "embed"), cfg.dtype, fan_in=d),
+        "lm_head": PDef((d, v), ("embed", "vocab"), cfg.dtype, fan_in=d),
+    }
+    if n_s:
+        defs["slstm"] = _slstm_defs(cfg, (g, n_s))
+    return defs
+
+
+def cache_defs(cfg: ArchConfig, batch: int, length: int) -> dict:
+    """Decode state — O(1) in sequence length (the SSM long-context win)."""
+    del length
+    d, di, h, hd = _dims(cfg)
+    n_m, g, n_s = _groups(cfg)
+    f32 = jnp.float32
+    defs = {
+        "m_C": PDef((g, n_m, batch, h, hd, hd), ("layers", "layers", "batch", "heads", None, None), f32, "zeros"),
+        "m_n": PDef((g, n_m, batch, h, hd), ("layers", "layers", "batch", "heads", None), f32, "zeros"),
+        "m_m": PDef((g, n_m, batch, h), ("layers", "layers", "batch", "heads"), f32, "zeros"),
+    }
+    if n_s:
+        shd = d // h
+        defs.update(
+            s_c=PDef((g, n_s, batch, h, shd), ("layers", "layers", "batch", "heads", None), f32, "zeros"),
+            s_n=PDef((g, n_s, batch, h, shd), ("layers", "layers", "batch", "heads", None), f32, "zeros"),
+            s_m=PDef((g, n_s, batch, h, shd), ("layers", "layers", "batch", "heads", None), f32, "zeros"),
+            s_h=PDef((g, n_s, batch, h, shd), ("layers", "layers", "batch", "heads", None), f32, "zeros"),
+        )
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# mLSTM core.
+# ---------------------------------------------------------------------------
+
+def _mlstm_qkvif(pl, xm, cfg):
+    _, di, h, hd = _dims(cfg)
+    b, s, _ = xm.shape
+    q = jnp.einsum("bsd,de->bse", xm, pl["wq"]).reshape(b, s, h, hd)
+    k = jnp.einsum("bsd,de->bse", xm, pl["wk"]).reshape(b, s, h, hd)
+    v = jnp.einsum("bsd,de->bse", xm, pl["wv"]).reshape(b, s, h, hd)
+    gates = jnp.einsum("bsd,dg->bsg", xm.astype(jnp.float32), pl["w_if"]) + pl["b_if"]
+    i_pre, f_pre = gates[..., :h], gates[..., h:]
+    return q, k, v, i_pre, f_pre
+
+
+def mlstm_parallel(q, k, v, i_pre, f_pre):
+    """Stabilized quadratic form (train/prefill).  q,k,v: (B,S,H,hd)."""
+    hd = q.shape[-1]
+    lf = jax.nn.log_sigmoid(f_pre)  # (B,S,H)
+    li = i_pre
+    F = jnp.cumsum(lf, axis=1)
+    # D[t, s] = F_t - F_s + li_s  (s <= t)
+    D = F[:, :, None, :] - F[:, None, :, :] + li[:, None, :, :]  # (B,T,S,H)
+    t_idx = jnp.arange(q.shape[1])
+    causal = t_idx[:, None] >= t_idx[None, :]
+    D = jnp.where(causal[None, :, :, None], D, _NEG)
+    m = jnp.max(D, axis=2)  # (B,T,H)
+    w = jnp.exp(D - m[:, :, None, :])  # (B,T,S,H)
+    scores = jnp.einsum("bthd,bshd->btsh", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(hd)
+    sw = scores * w
+    num = jnp.einsum("btsh,bshd->bthd", sw, v.astype(jnp.float32))
+    denom = jnp.maximum(jnp.abs(sw.sum(axis=2)), jnp.exp(-m))  # (B,T,H)
+    return num / denom[..., None]
+
+
+def mlstm_step(state, q, k, v, i_pre, f_pre):
+    """Recurrent form (decode).  q,k,v: (B,H,hd); state (C, n, m)."""
+    C, n, m = state
+    hd = q.shape[-1]
+    lf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))  # (B,H)
+    li = i_pre.astype(jnp.float32)
+    m_new = jnp.maximum(lf + m, li)
+    f_eff = jnp.exp(lf + m - m_new)[..., None]
+    i_eff = jnp.exp(li - m_new)[..., None]
+    k32 = k.astype(jnp.float32) / np.sqrt(hd)
+    v32 = v.astype(jnp.float32)
+    C_new = f_eff[..., None] * C + i_eff[..., None] * k32[..., :, None] * v32[..., None, :]
+    n_new = f_eff * n + i_eff * k32
+    q32 = q.astype(jnp.float32)
+    num = jnp.einsum("bhd,bhde->bhe", q32, C_new)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q32, n_new)),
+                        jnp.exp(-m_new))
+    return (C_new, n_new, m_new), num / denom[..., None]
+
+
+def _mlstm_block(pl, x, cfg, state=None):
+    """Full block. x: (B,S,D). With state -> recurrent single-step (S==1)."""
+    d, di, h, hd = _dims(cfg)
+    b, s, _ = x.shape
+    xn = rms_norm(x, pl["ln"], cfg.norm_eps)
+    up = jnp.einsum("bsd,de->bse", xn, pl["w_up"])
+    xm, z = up[..., :di], up[..., di:]
+    xm = shard_act(xm, ("batch", "seq", "mlp"))
+    q, k, v, i_pre, f_pre = _mlstm_qkvif(pl, xm, cfg)
+    if state is None:
+        hcell = mlstm_parallel(q, k, v, i_pre, f_pre)  # (B,S,H,hd)
+        new_state = None
+    else:
+        new_state, hcell = mlstm_step(
+            state, q[:, 0], k[:, 0], v[:, 0], i_pre[:, 0], f_pre[:, 0])
+        hcell = hcell[:, None]  # (B,1,H,hd)
+    hcell = rms_norm(hcell, pl["out_norm"], cfg.norm_eps)
+    hflat = hcell.reshape(b, s, di).astype(cfg.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", hflat, pl["w_down"])
+    return x + out, new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM core.
+# ---------------------------------------------------------------------------
+
+def _slstm_cell(pre, state):
+    """pre: (B,H,hd,4) gate pre-activations; state (c, n, m, h)."""
+    c, n, m, _h = state
+    i_pre, f_pre, z_pre, o_pre = [pre[..., j] for j in range(4)]
+    lf = jax.nn.log_sigmoid(f_pre)
+    li = i_pre
+    m_new = jnp.maximum(lf + m, li)
+    i_eff = jnp.exp(li - m_new)
+    f_eff = jnp.exp(lf + m - m_new)
+    c_new = f_eff * c + i_eff * jnp.tanh(z_pre)
+    n_new = jnp.maximum(f_eff * n + i_eff, 1e-6)
+    h_new = jax.nn.sigmoid(o_pre) * (c_new / n_new)
+    return (c_new, n_new, m_new, h_new)
+
+
+def _slstm_recur(pl, px, h_prev, cfg):
+    """Recurrent gate contribution for one timestep given the *precomputed*
+    input projection px: (B,H,hd,4); h_prev: (B,H,hd)."""
+    d, _, h, _ = _dims(cfg)
+    hd = d // h
+    pr = jnp.einsum("bhe,heg->bhg", h_prev, pl["r"].astype(jnp.float32))
+    return px + pr.reshape(px.shape[0], h, hd, 4)
+
+
+def _slstm_input_proj(pl, xn, cfg):
+    """Hoisted input projection over the full sequence: (B,S,H,hd,4).
+    Keeping this batched matmul outside the time scan leaves only the small
+    block-diagonal recurrence (h @ R) sequential."""
+    d, _, h, _ = _dims(cfg)
+    hd = d // h
+    b, s, _ = xn.shape
+    px = jnp.einsum("bsd,dg->bsg", xn.astype(jnp.float32),
+                    pl["wx"].astype(jnp.float32)) + pl["b"]
+    return px.reshape(b, s, h, hd, 4)
+
+
+def _slstm_block(pl, x, cfg, state=None):
+    d, _, h, _ = _dims(cfg)
+    hd = d // h
+    b, s, _ = x.shape
+    xn = rms_norm(x, pl["ln"], cfg.norm_eps)
+    if state is None:
+        px_all = _slstm_input_proj(pl, xn, cfg)
+        zeros = jnp.zeros((b, h, hd), jnp.float32)
+        state0 = (zeros, zeros, jnp.full((b, h, hd), _NEG, jnp.float32), zeros)
+
+        def step(st, px_t):
+            pre = _slstm_recur(pl, px_t, st[3], cfg)
+            st_new = _slstm_cell(pre, st)
+            return st_new, st_new[3]
+
+        state_f, hs = jax.lax.scan(step, state0, jnp.swapaxes(px_all, 0, 1))
+        hs = jnp.swapaxes(hs, 0, 1)  # (B,S,H,hd)
+        new_state = None
+    else:
+        px = _slstm_input_proj(pl, xn[:, :1], cfg)[:, 0]
+        pre = _slstm_recur(pl, px, state[3], cfg)
+        st_new = _slstm_cell(pre, state)
+        hs = st_new[3][:, None]
+        new_state = st_new
+    hs = rms_norm(hs, pl["out_norm"], cfg.norm_eps)
+    x = x + hs.reshape(b, s, d).astype(cfg.dtype)
+    # post-FFN (pf 4/3)
+    xn2 = rms_norm(x, pl["ln_ffn"], cfg.norm_eps)
+    hmid = jax.nn.silu(jnp.einsum("bsd,df->bsf", xn2, pl["ffn_wi"]))
+    hmid = hmid * jnp.einsum("bsd,df->bsf", xn2, pl["ffn_wg"])
+    return x + jnp.einsum("bsf,fd->bsd", hmid, pl["ffn_wo"]), new_state
+
+
+# ---------------------------------------------------------------------------
+# Stack: scan over groups of (n_m x mLSTM [+ 1 sLSTM]).
+# ---------------------------------------------------------------------------
+
+def _embed(params, tokens, cfg):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    return x * jnp.asarray(np.sqrt(cfg.d_model), cfg.dtype)
+
+
+def forward(params, batch, cfg: ArchConfig):
+    x = _embed(params, batch["tokens"], cfg)
+    x = shard_act(x, ("batch", "seq", "embed"))
+    n_m, g, n_s = _groups(cfg)
+
+    def group_body(carry, inp):
+        x = carry
+        pm = inp["mlstm"]
+
+        def mbody(c, pl):
+            y, _ = _mlstm_block(pl, c, cfg)
+            return y, None
+
+        x, _ = jax.lax.scan(mbody, x, pm, unroll=n_m)
+        if n_s:
+            def sbody(c, pl):
+                y, _ = _slstm_block(pl, c, cfg)
+                return y, None
+
+            x, _ = jax.lax.scan(sbody, x, inp["slstm"], unroll=max(n_s,1))
+        return x, None
+
+    if cfg.remat:
+        group_body = jax.checkpoint(group_body)
+    xs = {"mlstm": params["mlstm"]}
+    if n_s:
+        xs["slstm"] = params["slstm"]
+    x, _ = jax.lax.scan(group_body, x, xs, unroll=cfg.scan_unroll)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return shard_act(logits, ("batch", "seq", "vocab")), {}
+
+
+def loss(params, batch, cfg: ArchConfig):
+    logits, _ = forward(params, batch, cfg)
+    ce, acc = softmax_xent(logits[:, :-1], batch["tokens"][:, 1:])
+    return ce, (ce, acc)
+
+
+def prefill(params, batch, cfg: ArchConfig, cache_len: int):
+    """Recurrent prefill: thread decode_step over the prompt (the natural
+    O(S) path for a recurrent model) -> (logits (B,S,V), final state)."""
+    del cache_len  # state is O(1)
+    from repro.models.pdefs import init_tree  # zeros-init state
+
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    cache0 = init_tree(jax.random.PRNGKey(0), cache_defs(cfg, b, 0))
+
+    def step(cache, tok):
+        logits, cache = decode_step(params, cache, tok, jnp.int32(0), cfg)
+        return cache, logits
+
+    cache, logits = jax.lax.scan(step, cache0, jnp.swapaxes(tokens, 0, 1))
+    return jnp.swapaxes(logits, 0, 1), cache
+
+
+def decode_step(params, cache, tokens, pos, cfg: ArchConfig):
+    del pos  # recurrent state is position-free
+    x = _embed(params, tokens[:, None], cfg)
+    n_m, g, n_s = _groups(cfg)
+
+    def group_body(carry, inp):
+        x = carry
+
+        def mbody(c, inp_m):
+            pl, (C, n, m) = inp_m
+            y, st = _mlstm_block(pl, c, cfg, state=(C, n, m))
+            return y, st
+
+        x, m_states = jax.lax.scan(
+            mbody, x, (inp["p"]["mlstm"], (inp["c"]["m_C"], inp["c"]["m_n"], inp["c"]["m_m"])),
+            unroll=n_m)
+        new_c = {"m_C": m_states[0], "m_n": m_states[1], "m_m": m_states[2]}
+        if n_s:
+            def sbody(c, inp_s):
+                pl, st = inp_s
+                y, st_new = _slstm_block(pl, c, cfg, state=st)
+                return y, st_new
+
+            x, s_states = jax.lax.scan(
+                sbody, x,
+                (inp["p"]["slstm"],
+                 (inp["c"]["s_c"], inp["c"]["s_n"], inp["c"]["s_m"], inp["c"]["s_h"])))
+            new_c.update(s_c=s_states[0], s_n=s_states[1], s_m=s_states[2], s_h=s_states[3])
+        return x, new_c
+
+    p_groups = {"mlstm": params["mlstm"]}
+    if n_s:
+        p_groups["slstm"] = params["slstm"]
+    x, new_cache = jax.lax.scan(group_body, x, {"p": p_groups, "c": cache},
+                                unroll=cfg.scan_unroll)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])[:, 0]
+    return logits, new_cache

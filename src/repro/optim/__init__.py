@@ -1,0 +1,3 @@
+from repro.optim.sgd import exponential_decay, sgd_momentum_step, warmup_cosine
+
+__all__ = ["exponential_decay", "sgd_momentum_step", "warmup_cosine"]

@@ -1,0 +1,48 @@
+"""Minimal optimizer utilities shared by the FL engine and the pod runtime.
+
+The paper's local optimizer is SGD(+momentum) wrapped by SAM; these helpers
+keep the schedule/update math in one place (no external optax dependency).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["exponential_decay", "warmup_cosine", "sgd_momentum_step"]
+
+
+def exponential_decay(base_lr: float, decay: float = 0.998):
+    """Per-round decay used by all paper experiments (0.998 ** round)."""
+
+    def schedule(step):
+        return base_lr * decay ** jnp.asarray(step, jnp.float32)
+
+    return schedule
+
+
+def warmup_cosine(base_lr: float, warmup: int, total: int, floor: float = 0.1):
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return schedule
+
+
+def sgd_momentum_step(params, v, grads, lr, alpha: float = 0.0):
+    """v' = alpha v + g ; x' = x - lr v'  (pytree-wide, dtype-preserving)."""
+
+    def upd(p, vi, g):
+        v_new = alpha * vi.astype(jnp.float32) + g.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * v_new
+        return p_new.astype(p.dtype), v_new.astype(vi.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_v = treedef.flatten_up_to(v)
+    flat_g = treedef.flatten_up_to(grads)
+    out = [upd(p, vi, g) for p, vi, g in zip(flat_p, flat_v, flat_g)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_v = treedef.unflatten([o[1] for o in out])
+    return new_p, new_v

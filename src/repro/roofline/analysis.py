@@ -1,0 +1,119 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), all in seconds:
+
+  compute    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory     = HLO_bytes_per_device / HBM_bw
+  collective = collective_bytes_per_device / link_bw
+
+``compiled.cost_analysis()`` is per-device post-SPMD, so no further division
+by chip count.  Collective bytes are not in cost_analysis: we parse the
+compiled HLO and sum the *operand* sizes of every collective op, weighting
+all-reduce 2x (ring reduce-scatter + all-gather phases).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+from repro.launch.mesh import HARDWARE
+
+__all__ = ["CollectiveStats", "parse_collectives", "roofline_terms", "model_flops"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLL_KINDS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+# matches e.g. f32[16,128]{1,0} or bf16[2,4,8]
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|[\w\[\]{},]+)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?(?:\.\d+)?\(",
+)
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: dict = field(default_factory=dict)
+    count_by_kind: dict = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def weighted_bytes(self) -> int:
+        """all-reduce moves ~2x its operand bytes on a ring."""
+        return sum(
+            b * (2 if k == "all-reduce" else 1)
+            for k, b in self.bytes_by_kind.items()
+        )
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        # operand sizes: everything inside the call parentheses references
+        # prior instructions; their shapes are not on this line, so use the
+        # instruction's own (output) shape(s) — equal to operand size for
+        # all-reduce / permute / all-to-all, and the gathered size for
+        # all-gather (an upper bound on bytes moved).  Slicing up to the op
+        # keyword keeps tuple-shaped outputs like (f32[8], f32[8]).
+        eq = line.index("=") + 1 if "=" in line else 0
+        head = line[eq:m.start(1)]
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + _shape_bytes(head)
+        stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
+    return stats
+
+
+def roofline_terms(cost: dict, coll: CollectiveStats, hw=None) -> dict:
+    hw = hw or HARDWARE
+    flops = float(cost.get("flops", 0.0) or 0.0)
+    bytes_accessed = float(cost.get("bytes accessed", 0.0) or 0.0)
+    t_compute = flops / hw["peak_flops_bf16"]
+    t_memory = bytes_accessed / hw["hbm_bw"]
+    t_coll = coll.weighted_bytes / hw["ici_bw"]
+    terms = {
+        "flops_per_device": flops,
+        "bytes_per_device": bytes_accessed,
+        "collective_bytes_per_device": coll.weighted_bytes,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+    }
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+    terms["bottleneck"] = dominant
+    return terms
+
+
+def model_flops(n_params_active: int, n_tokens: int, kind: str = "train") -> float:
+    """6ND for training, 2ND for a forward/decode pass."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_params_active * n_tokens

@@ -1,0 +1,116 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.core import topology as topo
+
+
+# ---------------------------------------------------------------------------
+# gossip_matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,D", [(4, 16), (100, 1000), (128, 512), (37, 777)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gossip_matmul_shapes(n, D, dtype):
+    P = topo.sample_kout(jax.random.PRNGKey(0), n, max(1, n // 4)).astype(dtype)
+    X = jax.random.normal(jax.random.PRNGKey(1), (n, D), dtype)
+    got = ops.gossip_matmul(P, X)
+    want = ref.gossip_matmul_ref(P, X)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol)
+
+
+@given(st.integers(2, 40), st.integers(1, 300), st.integers(0, 999))
+@settings(max_examples=10, deadline=None)
+def test_gossip_matmul_property(n, D, seed):
+    P = topo.sample_kout(jax.random.PRNGKey(seed), n, max(1, n // 3))
+    X = jax.random.normal(jax.random.PRNGKey(seed + 1), (n, D))
+    got = ops.gossip_matmul(P, X)
+    want = ref.gossip_matmul_ref(P, X)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+    # mass conservation survives the kernel
+    np.testing.assert_allclose(
+        np.asarray(got.sum(0)), np.asarray(X.sum(0)), rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# fused_update
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("d", [7, 1024, 65536 + 3])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_update(d, dtype):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (d,), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(1), (d,), jnp.float32)
+    g = jax.random.normal(jax.random.PRNGKey(2), (d,), dtype)
+    args = (0.9, 0.05, 1.3)
+    got = ops.fused_update(x, v, g, *args, block=1024)
+    want = ref.fused_update_ref(x, v, g, *args)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5, atol=1e-3)
+
+
+@given(st.integers(1, 5000), st.floats(0, 0.99), st.floats(0.001, 1.0),
+       st.floats(0.2, 5.0))
+@settings(max_examples=10, deadline=None)
+def test_fused_update_property(d, alpha, eta, w):
+    x = jax.random.normal(jax.random.PRNGKey(d), (d,))
+    v = jnp.zeros((d,))
+    g = jax.random.normal(jax.random.PRNGKey(d + 1), (d,))
+    xk, vk, zk = ops.fused_update(x, v, g, alpha, eta, w, block=2048)
+    xr, vr, zr = ref.fused_update_ref(x, v, g, alpha, eta, w)
+    np.testing.assert_allclose(np.asarray(xk), np.asarray(xr), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(zk), np.asarray(zr), rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 64), (False, 0)])
+@pytest.mark.parametrize("h,kv", [(4, 4), (4, 2), (8, 1)])
+def test_flash_attention_modes(causal, window, h, kv):
+    B, S, hd = 2, 256, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, h, S, hd))
+    k = jax.random.normal(ks[1], (B, kv, S, hd))
+    v = jax.random.normal(ks[2], (B, kv, S, hd))
+    got = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=128, block_k=128)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    B, H, S, hd = 1, 2, 128, 128
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, H, S, hd), dtype)
+    k = jax.random.normal(ks[1], (B, H, S, hd), dtype)
+    v = jax.random.normal(ks[2], (B, H, S, hd), dtype)
+    got = ops.flash_attention(q, k, v, block_q=64, block_k=64)
+    want = ref.flash_attention_ref(q, k, v)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol)
+
+
+def test_flash_attention_block_shape_sweep():
+    B, H, S, hd = 1, 2, 256, 32
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q, k, v = (jax.random.normal(kk, (B, H, S, hd)) for kk in ks)
+    want = ref.flash_attention_ref(q, k, v)
+    for bq, bk in [(64, 64), (128, 64), (64, 128), (256, 256)]:
+        got = ops.flash_attention(q, k, v, block_q=bq, block_k=bk)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)

@@ -1,0 +1,190 @@
+"""Model-zoo correctness: per-family math checks + prefill/decode consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import reduced
+from repro.configs.registry import ARCH_IDS, get_config, make_batch
+from repro.models import xlstm
+from repro.models.moe import _moe_dense, _moe_gshard, _router_probs, moe_defs
+from repro.models.pdefs import init_tree
+from repro.models.registry import get_model_api
+
+
+def _api(arch):
+    import dataclasses
+
+    cfg = get_config(arch, smoke=True)
+    if cfg.n_experts:
+        # ample capacity: MoE token-dropping is a batching policy and would
+        # (correctly) make prefill vs decode outputs diverge at tiny S.
+        cfg = dataclasses.replace(cfg, capacity_factor=32.0)
+    return get_model_api(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Decode == prefill logits (causal archs): the KV-cache/state path must agree
+# with the parallel path.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "arch", [a for a in ARCH_IDS if get_config(a, smoke=True).supports_decode()
+             and get_config(a, smoke=True).task == "lm"]
+)
+def test_decode_matches_prefill(arch):
+    api = _api(arch)
+    cfg = api.cfg
+    B, S = 2, 10
+    params = api.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, B, S, seed=1)
+    full_logits, _ = jax.jit(api.forward)(params, batch)
+
+    logits_pre, cache = jax.jit(lambda p, b: api.prefill(p, b, S + 4))(params, batch)
+    np.testing.assert_allclose(
+        np.asarray(full_logits, np.float32), np.asarray(logits_pre, np.float32),
+        rtol=2e-2, atol=2e-2)
+
+    # decode the last token again from the cache state at position S-1:
+    # rebuild cache from a prefill of the first S-1 tokens, then one decode.
+    short = {"tokens": batch["tokens"][:, : S - 1]}
+    _, cache2 = jax.jit(lambda p, b: api.prefill(p, b, S + 4))(params, short)
+    logits_step, _ = jax.jit(api.decode_step)(
+        params, cache2, batch["tokens"][:, S - 1], jnp.int32(S - 1))
+    np.testing.assert_allclose(
+        np.asarray(full_logits[:, -1], np.float32),
+        np.asarray(logits_step, np.float32), rtol=3e-2, atol=3e-2)
+
+
+def test_vlm_decode_matches_prefill():
+    api = _api("llava-next-mistral-7b")
+    cfg = api.cfg
+    B, S = 2, 12
+    params = api.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, B, S, seed=2)
+    full_logits, _ = jax.jit(api.forward)(params, batch)
+    n_img = batch["image_feats"].shape[1]
+    st = batch["tokens"].shape[1]
+    short = {"tokens": batch["tokens"][:, : st - 1], "image_feats": batch["image_feats"]}
+    _, cache = jax.jit(lambda p, b: api.prefill(p, b, S + 4))(params, short)
+    pos = n_img + st - 1
+    logits_step, _ = jax.jit(api.decode_step)(
+        params, cache, batch["tokens"][:, -1], jnp.int32(pos))
+    np.testing.assert_allclose(
+        np.asarray(full_logits[:, -1], np.float32),
+        np.asarray(logits_step, np.float32), rtol=3e-2, atol=3e-2)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM parallel form == recurrent form.
+# ---------------------------------------------------------------------------
+
+def test_mlstm_parallel_equals_recurrent():
+    B, S, H, hd = 2, 12, 3, 8
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, H, hd))
+    v = jax.random.normal(ks[2], (B, S, H, hd))
+    i_pre = jax.random.normal(ks[3], (B, S, H))
+    f_pre = jax.random.normal(ks[4], (B, S, H)) + 1.0
+
+    par = xlstm.mlstm_parallel(q, k, v, i_pre, f_pre)
+
+    state = (
+        jnp.zeros((B, H, hd, hd)), jnp.zeros((B, H, hd)), jnp.zeros((B, H)))
+    outs = []
+    for t in range(S):
+        state, h = xlstm.mlstm_step(
+            state, q[:, t], k[:, t], v[:, t], i_pre[:, t], f_pre[:, t])
+        outs.append(h)
+    rec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(par), np.asarray(rec), rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# MoE: gshard capacity dispatch == exact dense reference (ample capacity).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["dbrx-132b", "deepseek-v3-671b"])
+def test_moe_gshard_matches_dense(arch):
+    import dataclasses
+
+    cfg = dataclasses.replace(get_config(arch, smoke=True), capacity_factor=8.0)
+    defs = moe_defs(cfg)
+    p = init_tree(jax.random.PRNGKey(1), defs)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 16, cfg.d_model), cfg.dtype)
+    w, sel, _ = _router_probs(p, x, cfg)
+    dense = _moe_dense(p, x, w, sel, cfg)
+    gshard = _moe_gshard(p, x, w, sel, cfg)
+    np.testing.assert_allclose(
+        np.asarray(dense, np.float32), np.asarray(gshard, np.float32),
+        rtol=2e-2, atol=2e-2)
+
+
+def test_moe_capacity_drops_tokens():
+    """With capacity_factor << 1 the gshard path must drop load (not crash)
+    and still return finite outputs."""
+    import dataclasses
+
+    cfg = dataclasses.replace(get_config("dbrx-132b", smoke=True), capacity_factor=0.25)
+    p = init_tree(jax.random.PRNGKey(1), moe_defs(cfg))
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 32, cfg.d_model), cfg.dtype)
+    w, sel, _ = _router_probs(p, x, cfg)
+    out = _moe_gshard(p, x, w, sel, cfg)
+    assert np.all(np.isfinite(np.asarray(out, np.float32)))
+
+
+# ---------------------------------------------------------------------------
+# Sliding-window masking really restricts attention.
+# ---------------------------------------------------------------------------
+
+def test_sliding_window_blocks_distant_tokens():
+    from repro.models.attention import _full_mask
+
+    pos = jnp.arange(10)[None]
+    m = np.asarray(_full_mask(pos, pos, 4, True))[0]
+    # window=4 -> attend to distances 0..3 (mistral convention)
+    assert m[9, 6] == 0.0  # within window (distance 3)
+    assert m[9, 5] < -1e30  # outside window (distance 4)
+    assert m[4, 9] < -1e30  # future masked
+    full = np.asarray(_full_mask(pos, pos, 0, True))[0]
+    assert full[9, 0] == 0.0  # window=0 -> unbounded causal
+
+
+def test_encoder_attends_bidirectionally():
+    api = _api("hubert-xlarge")
+    cfg = api.cfg
+    params = api.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, 2, 8, seed=0)
+    logits, _ = jax.jit(api.forward)(params, batch)
+    # flipping a late frame must change logits of an early position
+    b2 = dict(batch)
+    feats = np.asarray(batch["features"]).copy()
+    feats[:, -1] += 10.0
+    b2["features"] = jnp.asarray(feats)
+    logits2, _ = jax.jit(api.forward)(params, b2)
+    assert not np.allclose(np.asarray(logits[:, 0]), np.asarray(logits2[:, 0]))
+
+
+# ---------------------------------------------------------------------------
+# Trainability: a few SGD steps reduce every arch's loss.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", sorted(ARCH_IDS))
+def test_few_steps_reduce_loss(arch):
+    api = _api(arch)
+    cfg = api.cfg
+    params = api.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, 4, 16, seed=3)
+
+    @jax.jit
+    def step(p):
+        (l, _), g = jax.value_and_grad(api.loss, has_aux=True)(p, batch)
+        return l, jax.tree.map(lambda a, b: a - 0.05 * b.astype(a.dtype), p, g)
+
+    l0, params = step(params)
+    for _ in range(8):
+        l1, params = step(params)
+    assert np.isfinite(float(l1))
+    assert float(l1) < float(l0)

@@ -1,0 +1,97 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pushsum, topology as topo
+
+
+def _stacked(key, n, shapes=((3, 4), (7,))):
+    ks = jax.random.split(key, len(shapes))
+    return {
+        f"p{i}": jax.random.normal(k, (n,) + s)
+        for i, (k, s) in enumerate(zip(ks, shapes))
+    }
+
+
+@given(st.integers(3, 24), st.integers(0, 9999))
+@settings(max_examples=20, deadline=None)
+def test_mass_conservation(n, seed):
+    """Column-stochastic mixing conserves sum_i x_i exactly (paper §B)."""
+    key = jax.random.PRNGKey(seed)
+    P = topo.sample_kout(key, n, max(1, n // 4))
+    x = _stacked(key, n)
+    x2 = pushsum.gossip(P, x)
+    for k in x:
+        np.testing.assert_allclose(
+            np.asarray(x[k].sum(0)), np.asarray(x2[k].sum(0)), rtol=2e-5, atol=2e-5
+        )
+
+
+@given(st.integers(3, 20), st.integers(0, 9999))
+@settings(max_examples=15, deadline=None)
+def test_weight_mass(n, seed):
+    P = topo.sample_kout(jax.random.PRNGKey(seed), n, max(1, n // 4))
+    w = jnp.ones((n,))
+    for _ in range(5):
+        w = pushsum.gossip_weights(P, w)
+    assert np.isclose(float(w.sum()), n, atol=1e-3)
+    assert np.all(np.asarray(w) > 0)
+
+
+def test_pushsum_consensus_converges_to_average():
+    """z_i = x_i / w_i -> mean(x^0) under repeated directed mixing: the
+    fundamental push-sum correctness property the de-bias step relies on."""
+    n = 32
+    key = jax.random.PRNGKey(0)
+    x = _stacked(key, n)
+    target = {k: np.asarray(v.mean(0)) for k, v in x.items()}
+    w = jnp.ones((n,))
+    for t in range(60):
+        P = topo.sample_kout(jax.random.PRNGKey(t), n, 4)
+        x = pushsum.gossip(P, x)
+        w = pushsum.gossip_weights(P, w)
+    z = pushsum.debias(x, w)
+    for k in x:
+        zi = np.asarray(z[k])
+        for i in range(n):
+            np.testing.assert_allclose(zi[i], target[k], rtol=5e-4, atol=5e-4)
+
+
+def test_consensus_error_decreases():
+    n = 16
+    x = _stacked(jax.random.PRNGKey(3), n)
+    w = jnp.ones((n,))
+    errs = []
+    for t in range(30):
+        errs.append(float(pushsum.consensus_error(x, w)))
+        P = topo.sample_kout(jax.random.PRNGKey(100 + t), n, 3)
+        x = pushsum.gossip(P, x)
+        w = pushsum.gossip_weights(P, w)
+    assert errs[-1] < 1e-4 * errs[0]
+
+
+def test_better_connectivity_tighter_consensus():
+    """Remark 1: better connectivity => faster consensus (smaller error
+    after a fixed number of rounds)."""
+    n, rounds = 32, 8
+
+    def run(k_out):
+        x = _stacked(jax.random.PRNGKey(7), n)
+        w = jnp.ones((n,))
+        for t in range(rounds):
+            P = topo.sample_kout(jax.random.PRNGKey(500 + t), n, k_out)
+            x = pushsum.gossip(P, x)
+            w = pushsum.gossip_weights(P, w)
+        return float(pushsum.consensus_error(x, w))
+
+    sparse, dense = run(2), run(16)
+    assert dense < sparse
+
+
+def test_debias_identity_when_weights_one():
+    x = _stacked(jax.random.PRNGKey(1), 5)
+    z = pushsum.debias(x, jnp.ones((5,)))
+    for k in x:
+        np.testing.assert_array_equal(np.asarray(x[k]), np.asarray(z[k]))

@@ -1,0 +1,67 @@
+"""Roofline analysis unit tests: HLO collective parser + term math."""
+import numpy as np
+import pytest
+
+from repro.roofline.analysis import (
+    CollectiveStats,
+    model_flops,
+    parse_collectives,
+    roofline_terms,
+)
+
+_HLO = """
+HloModule jit_step
+%add { ... }
+ENTRY %main {
+  %ag = bf16[16,1024]{1,0} all-gather(%p0), channel_id=1, replica_groups=[...]
+  %ar = f32[4,256]{1,0} all-reduce(%x), channel_id=2, to_apply=%add
+  %arr.27 = (f32[8]{0}, f32[8]{0}) all-reduce(%a, %b), channel_id=3
+  %cp = bf16[2,64]{1,0} collective-permute(%y), source_target_pairs={{0,1}}
+  %a2a = f32[32,32]{1,0} all-to-all(%z), channel_id=4
+  %rs = f32[128]{0} reduce-scatter(%w), channel_id=5
+  %ags = bf16[16,8]{1,0} all-gather-start(%q), channel_id=6
+  %dot = f32[8,8]{1,0} dot(%l, %r)   // not a collective
+}
+"""
+
+
+def test_parse_collectives_kinds_and_bytes():
+    st = parse_collectives(_HLO)
+    assert st.count_by_kind["all-gather"] == 2
+    assert st.count_by_kind["all-reduce"] == 2
+    assert st.count_by_kind["collective-permute"] == 1
+    assert st.count_by_kind["all-to-all"] == 1
+    assert st.count_by_kind["reduce-scatter"] == 1
+    assert st.bytes_by_kind["all-gather"] == 16 * 1024 * 2 + 16 * 8 * 2
+    assert st.bytes_by_kind["all-reduce"] == 4 * 256 * 4 + 2 * 8 * 4
+    assert st.bytes_by_kind["collective-permute"] == 2 * 64 * 2
+    # dot must not be counted
+    assert sum(st.count_by_kind.values()) == 7
+
+
+def test_allreduce_double_weighted():
+    st = CollectiveStats({"all-reduce": 100, "all-gather": 50}, {})
+    assert st.total_bytes == 150
+    assert st.weighted_bytes == 250
+
+
+def test_roofline_terms_bottleneck_selection():
+    coll = CollectiveStats({"all-gather": int(50e9)}, {})
+    terms = roofline_terms({"flops": 197e12, "bytes accessed": 819e9 / 2}, coll)
+    assert np.isclose(terms["t_compute_s"], 1.0)
+    assert np.isclose(terms["t_memory_s"], 0.5)
+    assert np.isclose(terms["t_collective_s"], 1.0)
+    assert terms["bottleneck"] in ("compute", "collective")
+
+    terms2 = roofline_terms({"flops": 0.0, "bytes accessed": 819e9 * 3}, coll)
+    assert terms2["bottleneck"] == "memory"
+
+
+def test_model_flops():
+    assert model_flops(10, 7, "train") == 6 * 70
+    assert model_flops(10, 7, "fwd") == 2 * 70
+
+
+def test_parse_empty():
+    st = parse_collectives("ENTRY %main { %d = f32[2]{0} add(%a, %b) }")
+    assert st.total_bytes == 0 and not st.count_by_kind

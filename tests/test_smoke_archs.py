@@ -1,0 +1,87 @@
+"""Per-architecture smoke tests (task spec): a REDUCED variant of each family
+(2 layers, d_model<=512, <=4 experts) runs one forward + one train step on
+CPU; asserts output shapes and absence of NaNs.  The FULL configs are only
+exercised via the dry-run (ShapeDtypeStruct, no allocation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import INPUT_SHAPES
+from repro.configs.registry import ARCH_IDS, get_config, input_specs, make_batch
+from repro.models.registry import get_model_api
+
+B, S = 2, 16
+
+
+@pytest.mark.parametrize("arch", sorted(ARCH_IDS))
+def test_reduced_config_limits(arch):
+    cfg = get_config(arch, smoke=True)
+    assert cfg.n_layers <= 2 or cfg.block_kind == "xlstm" and cfg.n_layers <= 12
+    assert cfg.d_model <= 512
+    assert cfg.n_experts <= 4
+    full = get_config(arch)
+    assert full.family == cfg.family and full.block_kind == cfg.block_kind
+
+
+@pytest.mark.parametrize("arch", sorted(ARCH_IDS))
+def test_forward_shapes_and_finiteness(arch):
+    cfg = get_config(arch, smoke=True)
+    api = get_model_api(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, B, S, seed=0)
+    logits, _ = jax.jit(api.forward)(params, batch)
+    n_txt = batch["tokens"].shape[1] if "tokens" in batch else S
+    if cfg.task == "vlm":
+        expect_s = batch["image_feats"].shape[1] + n_txt
+    elif cfg.task == "masked_lm":
+        expect_s = S
+    else:
+        expect_s = n_txt
+    assert logits.shape == (B, expect_s, cfg.padded_vocab)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+
+
+@pytest.mark.parametrize("arch", sorted(ARCH_IDS))
+def test_one_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    api = get_model_api(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, B, S, seed=1)
+
+    @jax.jit
+    def step(p):
+        (l, (_, acc)), g = jax.value_and_grad(api.loss, has_aux=True)(p, batch)
+        new = jax.tree.map(lambda a, b: a - 0.01 * b.astype(a.dtype), p, g)
+        return l, new
+
+    loss, new_params = step(params)
+    assert np.isfinite(float(loss))
+    for leaf in jax.tree.leaves(new_params):
+        assert np.all(np.isfinite(np.asarray(leaf, np.float32)))
+
+
+@pytest.mark.parametrize("arch", sorted(ARCH_IDS))
+def test_decode_step_shapes(arch):
+    cfg = get_config(arch, smoke=True)
+    if not cfg.supports_decode():
+        pytest.skip("encoder-only")
+    api = get_model_api(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    cache = api.init_cache(jax.random.PRNGKey(1), B, 32)
+    toks = jnp.zeros((B,), jnp.int32)
+    logits, new_cache = jax.jit(api.decode_step)(params, cache, toks, jnp.int32(3))
+    assert logits.shape == (B, cfg.padded_vocab)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+    assert jax.tree.structure(cache) == jax.tree.structure(new_cache)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCH_IDS))
+@pytest.mark.parametrize("shape", sorted(INPUT_SHAPES))
+def test_input_specs_cover_all_shapes(arch, shape):
+    cfg = get_config(arch)
+    specs = input_specs(cfg, shape)
+    assert specs, "input_specs must be non-empty"
+    for sds in specs.values():
+        assert isinstance(sds, jax.ShapeDtypeStruct)
+        assert all(d > 0 for d in sds.shape) or sds.shape == ()

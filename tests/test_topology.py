@@ -1,0 +1,81 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topology as topo
+
+
+@given(st.integers(3, 40), st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_kout_column_stochastic(n, seed):
+    k = max(1, min(n - 1, n // 3))
+    P = topo.sample_kout(jax.random.PRNGKey(seed), n, k)
+    assert topo.is_column_stochastic(P)
+    # self loops present
+    assert np.all(np.diag(np.asarray(P)) > 0)
+
+
+@given(st.integers(3, 30), st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_symmetric_doubly_stochastic(n, seed):
+    k = max(1, n // 3)
+    W = np.asarray(topo.sample_symmetric_k_regular(jax.random.PRNGKey(seed), n, k))
+    assert np.allclose(W, W.T, atol=1e-6)
+    assert np.allclose(W.sum(0), 1.0, atol=1e-5)
+    assert np.allclose(W.sum(1), 1.0, atol=1e-5)
+    assert np.all(W >= -1e-6)
+
+
+def test_ring_and_exponential():
+    for n in (4, 7, 16):
+        assert topo.is_column_stochastic(topo.directed_ring(n))
+        for t in range(5):
+            assert topo.is_column_stochastic(topo.directed_exponential(n, t))
+
+
+def test_ring_strongly_connected_single_round():
+    P = topo.directed_ring(8)
+    assert topo.union_strongly_connected([P])
+
+
+def test_exponential_union_connected():
+    # One-peer exponential graphs: union over log2(n) rounds is connected.
+    n = 16
+    mats = [topo.directed_exponential(n, t) for t in range(4)]
+    assert topo.union_strongly_connected(mats)
+    # a single hop-2 graph (two disjoint cycles over even/odd nodes) is NOT
+    # strongly connected; connectivity needs the union (Assumption 1).
+    assert not topo.union_strongly_connected(mats[1:2])
+
+
+def test_kout_B_connectivity():
+    # Assumption 1: union over a window of random k-out graphs is strongly
+    # connected with overwhelming probability.
+    n, k = 50, 5
+    mats = [topo.sample_kout(jax.random.PRNGKey(s), n, k) for s in range(3)]
+    assert topo.union_strongly_connected(mats)
+
+
+def test_selective_prefers_divergent_losses():
+    n, k = 20, 4
+    losses = jnp.zeros((n,)).at[7].set(100.0)  # client 7 is the outlier
+    cnt = 0
+    trials = 30
+    for s in range(trials):
+        P = np.asarray(
+            topo.sample_kout_selective(jax.random.PRNGKey(s), losses, n, k)
+        )
+        # did client 0 send to client 7? (P[7, 0] > 0, beyond self-loop)
+        cnt += P[7, 0] > 0
+    # Under uniform sampling the hit rate would be ~k/(n-1) ≈ 0.21.
+    assert cnt / trials > 0.8
+    assert topo.is_column_stochastic(P)
+
+
+def test_selection_column_stochastic_property():
+    for s in range(5):
+        losses = jax.random.normal(jax.random.PRNGKey(s), (12,))
+        P = topo.sample_kout_selective(jax.random.PRNGKey(s + 99), losses, 12, 3)
+        assert topo.is_column_stochastic(P)
