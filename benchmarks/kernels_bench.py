@@ -14,9 +14,7 @@ from repro.kernels import ops, ref
 
 
 def _time(fn, *args, iters=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else None
-    out = fn(*args)
-    jax.block_until_ready(out)
+    jax.block_until_ready(fn(*args))  # compile + sync warmup, any output pytree
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)

@@ -1,0 +1,59 @@
+"""End-to-end round timing: flat (n, D) bank path vs the seed pytree path.
+
+The flat path runs the whole round through the Pallas kernels — one
+``gossip_matmul`` for the entire model and one ``fused_update`` per inner
+step — versus the seed's per-leaf einsum + three tree-mapped elementwise
+passes.  Benchmarks the paper's 16-client setting for the flagship
+DFedSGPSM and the DFedSAM baseline (Algorithm 1 with/without push-sum);
+their two-pass SAM gradients are the paper's hot path and amortize the
+bank <-> pytree boundary.  Emits min-of-N round times (robust to container
+scheduling noise) via ``common.emit``.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import build_setting, emit
+from repro.core import FLTrainer, TopologyConfig, make_algo
+
+N_CLIENTS = 16
+
+
+def _time_rounds(tr: FLTrainer, rounds: int) -> float:
+    """Best (min) microseconds per round after a compile+warmup round."""
+    tr.run_round()
+    jax.block_until_ready(tr.state.params)
+    best = float("inf")
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        tr.run_round()
+        jax.block_until_ready(tr.state.params)
+        best = min(best, 1e6 * (time.perf_counter() - t0))
+    return best
+
+
+def main(fast: bool = False):
+    rounds = 8 if fast else 20
+    net, cdata, _ = build_setting(
+        dataset="mnist", n_clients=N_CLIENTS, samples_per_client=128)
+    topo = TopologyConfig(
+        kind="kout", n_clients=N_CLIENTS, k_out=max(N_CLIENTS // 4, 1))
+
+    for name in ("dfedsgpsm", "dfedsam"):
+        algo = make_algo(name, local_steps=3, batch_size=32)
+        timings = {}
+        for path in ("flat", "pytree"):
+            tr = FLTrainer(net.loss, net.init, cdata, algo, topo, seed=0,
+                           participation=0.25, flat=(path == "flat"))
+            timings[path] = _time_rounds(tr, rounds)
+            d = tr.spec.dim
+            emit(f"round/{name}/{path}", timings[path],
+                 f"n={N_CLIENTS},D={d},rounds={rounds},min")
+        emit(f"round/{name}/speedup", timings["pytree"] / timings["flat"],
+             "pytree_us/flat_us (>=1 means flat is no slower)")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,7 +12,14 @@ import argparse
 import sys
 import time
 
-from benchmarks import fig1_convergence, fig2_ablations, kernels_bench, table1_accuracy, table2_modules
+from benchmarks import (
+    fig1_convergence,
+    fig2_ablations,
+    kernels_bench,
+    round_bench,
+    table1_accuracy,
+    table2_modules,
+)
 
 SUITES = {
     "table1": table1_accuracy.main,
@@ -20,6 +27,7 @@ SUITES = {
     "fig2": fig2_ablations.main,
     "table2": table2_modules.main,
     "kernels": kernels_bench.main,
+    "round": round_bench.main,
 }
 
 
@@ -27,6 +35,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale (hours); default is CPU-scaled")
+    ap.add_argument("--fast", action="store_true",
+                    help="explicit alias for the default CPU-scaled mode")
     ap.add_argument("--only", default=None, help="comma list of suites")
     args = ap.parse_args()
     only = args.only.split(",") if args.only else list(SUITES)

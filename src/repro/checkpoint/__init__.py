@@ -1,3 +1,9 @@
-from repro.checkpoint.io import latest_checkpoint, restore, save
+from repro.checkpoint.io import (
+    latest_checkpoint,
+    restore,
+    restore_bank,
+    save,
+    save_bank,
+)
 
-__all__ = ["save", "restore", "latest_checkpoint"]
+__all__ = ["save", "restore", "latest_checkpoint", "save_bank", "restore_bank"]

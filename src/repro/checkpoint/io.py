@@ -1,7 +1,9 @@
 """Dependency-free pytree checkpointing (npz payload + msgpack treedef).
 
 Good enough for FL simulation state and pod-replica snapshots; atomic via
-rename, with round-robin retention.
+rename, with round-robin retention.  Flat client-parameter banks have a
+dedicated fast path: the whole (n_clients, D) buffer is one npz array plus
+the leaf-offset metadata needed to unravel rows back into pytrees.
 """
 from __future__ import annotations
 
@@ -13,13 +15,14 @@ import tempfile
 import jax
 import numpy as np
 
-__all__ = ["save", "restore", "latest_checkpoint"]
+__all__ = ["save", "restore", "latest_checkpoint", "save_bank", "restore_bank"]
 
 _STEP_RE = re.compile(r"ckpt_(\d+)\.npz$")
 
 
 def _flatten_with_paths(tree):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    # jax.tree.flatten_with_path only exists in newer jax; use tree_util.
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     paths = ["/".join(str(k) for k in path) for path, _ in flat]
     leaves = [np.asarray(v) for _, v in flat]
     return paths, leaves, treedef
@@ -58,6 +61,65 @@ def latest_checkpoint(directory: str) -> str | None:
         if (m := _STEP_RE.search(f))
     )
     return os.path.join(directory, ckpts[-1][1]) if ckpts else None
+
+
+def _spec_meta(spec) -> dict:
+    """JSON-serializable leaf-offset metadata of a ``core.flat.BankSpec``."""
+    dummy = spec.treedef.unflatten(list(range(spec.treedef.num_leaves)))
+    flat, _ = jax.tree_util.tree_flatten_with_path(dummy)
+    paths = ["/".join(str(k) for k in p) for p, _ in flat]
+    return {
+        "paths": paths,
+        "shapes": [list(s) for s in spec.shapes],
+        "dtypes": [str(d) for d in spec.dtypes],
+        "offsets": list(spec.offsets),
+        "sizes": list(spec.sizes),
+        "dim": spec.dim,
+        "dtype": str(spec.dtype),
+    }
+
+
+def save_bank(directory: str, step: int, bank, spec, extra=None,
+              keep: int = 3) -> str:
+    """Checkpoint a flat (n_clients, D) parameter bank as ONE array plus
+    its unravel metadata (leaf paths / shapes / dtypes / offsets).
+
+    ``extra`` may hold small auxiliary arrays (push-sum weights, momentum
+    bank, round counter) saved alongside under their own keys.
+    """
+    os.makedirs(directory, exist_ok=True)
+    payload = {"__bank__": np.asarray(bank)}
+    payload["__bank_meta__"] = np.array(json.dumps(_spec_meta(spec)))
+    for k, v in (extra or {}).items():
+        payload[f"extra_{k}"] = np.asarray(v)
+    final = os.path.join(directory, f"ckpt_{step}.npz")
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, **payload)
+    os.replace(tmp, final)
+    _retain(directory, keep)
+    return final
+
+
+def restore_bank(path: str, spec=None):
+    """Restore ``(bank, extra, meta)`` saved by :func:`save_bank`.
+
+    With ``spec`` given, the stored offset metadata is validated against it
+    (mismatched model structure raises ``ValueError``).
+    """
+    data = np.load(path, allow_pickle=False)
+    if "__bank__" not in data:
+        raise ValueError(f"{path} is not a flat-bank checkpoint")
+    meta = json.loads(str(data["__bank_meta__"]))
+    if spec is not None:
+        want = _spec_meta(spec)
+        keys = ("offsets", "shapes", "dtypes", "dim", "dtype")
+        if any(want[k] != meta[k] for k in keys):
+            raise ValueError("bank checkpoint structure mismatch")
+    extra = {
+        k[len("extra_"):]: data[k] for k in data.files if k.startswith("extra_")
+    }
+    return data["__bank__"], extra, meta
 
 
 def restore(path: str, like=None):

@@ -7,13 +7,16 @@ Public surface:
   - engine: stacked-client simulation engine + the 10-algorithm registry.
 """
 from repro.core.engine import ALGORITHMS, AlgoConfig, FLState, FLTrainer, make_algo
+from repro.core.flat import BankSpec, make_spec
 from repro.core.topology import TopologyConfig
 
 __all__ = [
     "ALGORITHMS",
     "AlgoConfig",
+    "BankSpec",
     "FLState",
     "FLTrainer",
     "TopologyConfig",
     "make_algo",
+    "make_spec",
 ]

@@ -1,11 +1,15 @@
 """Stacked-client simulation engine for (decentralized) federated learning.
 
-Every client's parameters live as the leading axis of a pytree
-(``(n_clients, ...)`` per leaf).  Local training is ``vmap`` over clients,
-communication is a column-stochastic mixing matmul (push-sum for directed
-graphs, Metropolis doubly-stochastic for symmetric baselines), and the whole
-round is one jitted function — the engine scales to the paper's 100-client
-CIFAR setting on a single host and to pod-sharded execution via pjit.
+The engine's native state is the **flat client-parameter bank**: every
+client's pytree is ravelled into one contiguous row of an ``(n_clients, D)``
+buffer (plus a parallel float32 momentum bank), so one round is exactly the
+paper's two dense primitives — a single column-stochastic gossip matmul
+``X' = P @ X`` over the whole model and one fused momentum/descent/de-bias
+elementwise pass — both dispatched to the Pallas kernels in
+``repro.kernels`` (interpret mode on CPU, Mosaic on TPU).  Local training is
+``vmap`` over bank rows; pytrees only reappear inside the loss closure via a
+cached static unravel.  The seed per-leaf pytree path is retained
+(``flat=False``) as the equivalence oracle and benchmark baseline.
 
 Algorithm 1 (DFedSGPSM) is the flagship; all seven paper baselines plus the
 ablation variant DFedSGPM are expressed as configurations of the same round.
@@ -20,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import pushsum, topology
+from repro.core.flat import make_spec
 from repro.core.sam import (
     apply_update,
     momentum_update,
@@ -67,7 +72,12 @@ def make_algo(name: str, **overrides) -> AlgoConfig:
 
 
 class FLState(NamedTuple):
-    params: Any  # stacked (n, ...) for decentralized; global pytree for CFL
+    params: Any  # flat (n, D) bank / (D,) central row; pytree when flat=False
+    # End-of-round momentum bank, (n, D) float32 (None on the legacy path).
+    # Algorithm 1 re-initializes v to zero each round, so training never
+    # reads it back — it is carried for observability and checkpoint/warm-
+    # restart of momentum-persistent variants.
+    mom: Any
     w: jnp.ndarray  # (n,) push-sum weights (all-ones when unused)
     key: jax.Array
     round: jnp.ndarray  # int32 scalar
@@ -84,12 +94,21 @@ def _quantize_dequantize(tree):
     """Simulated int8 symmetric quantization of gossip payloads."""
 
     def qdq(x):
-        flat = x.astype(jnp.float32)
-        scale = jnp.max(jnp.abs(flat)) / 127.0 + 1e-12
-        q = jnp.clip(jnp.round(flat / scale), -127, 127)
+        flat_x = x.astype(jnp.float32)
+        scale = jnp.max(jnp.abs(flat_x)) / 127.0 + 1e-12
+        q = jnp.clip(jnp.round(flat_x / scale), -127, 127)
         return (q * scale).astype(x.dtype)
 
     return jax.tree.map(qdq, tree)
+
+
+def _quantize_dequantize_rows(X: jnp.ndarray) -> jnp.ndarray:
+    """Int8 symmetric quantization with one scale per client row of the
+    flat bank — tighter than the per-leaf global scale of the pytree path."""
+    Xf = X.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(Xf), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(Xf / scale), -127, 127)
+    return (q * scale).astype(X.dtype)
 
 
 class FLTrainer:
@@ -101,6 +120,8 @@ class FLTrainer:
       client_data: pytree whose leaves have leading dims (n_clients, m, ...).
       algo: AlgoConfig.
       topo: TopologyConfig (ignored for centralized algorithms).
+      flat: run rounds on the flat (n, D) bank through the Pallas kernels
+        (default); ``False`` selects the seed per-leaf pytree path.
     """
 
     def __init__(
@@ -112,6 +133,7 @@ class FLTrainer:
         topo: topology.TopologyConfig,
         seed: int = 0,
         participation: float = 0.1,
+        flat: bool = True,
     ):
         self.loss_fn = loss_fn
         self.init_fn = init_fn
@@ -119,32 +141,98 @@ class FLTrainer:
         self.algo = algo
         self.topo = topo
         self.participation = participation
+        self.flat = flat
         self.n = topo.n_clients
         key = jax.random.PRNGKey(seed)
         pkey, self.key = jax.random.split(key)
         params0 = init_fn(pkey)
+        self.spec = make_spec(params0)
+        # Exponential graphs cycle through log2(n) hop matrices; precompute
+        # the stack once so the (traced) round index can select the graph.
+        self._exp_cycle = (
+            topology.exponential_cycle(self.n)
+            if topo.kind == "exponential" and topo.time_varying
+            else None
+        )
+        w0 = jnp.ones((self.n,), jnp.float32)
+        losses0 = jnp.zeros((self.n,), jnp.float32)
         if algo.comm == "central":
-            self.state = FLState(
-                params0,
-                jnp.ones((self.n,), jnp.float32),
-                self.key,
-                jnp.int32(0),
-                jnp.zeros((self.n,), jnp.float32),
-            )
+            p0 = self.spec.ravel(params0) if flat else params0
+            self.state = FLState(p0, None, w0, self.key, jnp.int32(0), losses0)
+        elif flat:
+            row = self.spec.ravel(params0)
+            bank = jnp.broadcast_to(row, (self.n, self.spec.dim))
+            mom = jnp.zeros((self.n, self.spec.dim), jnp.float32)
+            self.state = FLState(bank, mom, w0, self.key, jnp.int32(0), losses0)
         else:
             stacked = jax.tree.map(
                 lambda x: jnp.broadcast_to(x, (self.n,) + x.shape), params0
             )
             self.state = FLState(
-                stacked,
-                jnp.ones((self.n,), jnp.float32),
-                self.key,
-                jnp.int32(0),
-                jnp.zeros((self.n,), jnp.float32),
+                stacked, None, w0, self.key, jnp.int32(0), losses0
             )
-        self._round_jit = jax.jit(self._round)
+        # Donate the state: the (n, D) banks are updated in place across
+        # rounds instead of reallocating ~2 model copies per round.
+        self._round_jit = jax.jit(self._round, donate_argnums=0)
 
-    # -- local training ----------------------------------------------------
+    # -- local training, flat-bank path ------------------------------------
+
+    def _local_update_bank(self, X, w, ckeys, data, lr):
+        """K iterations of Algorithm 1 lines 4-11 for all clients at once:
+        gradients are vmapped over bank rows, the momentum/descent/de-bias
+        step is one fused kernel call on the whole bank."""
+        from repro.kernels import ops as kops
+
+        algo = self.algo
+        V0 = jnp.zeros_like(X, jnp.float32)
+
+        def grad_one(x_i, w_i, key_i, data_i):
+            key_i, bk = jax.random.split(key_i)
+            batch = _sample_batch(data_i, bk, algo.batch_size)
+            # Unravel OUTSIDE the differentiated closure, fusing the line-5
+            # de-bias into the leaf slices; the gradient stays leaf-shaped
+            # (no scatter back into a (D,) row per leaf) and is ravelled
+            # once — one contiguous write per client.
+            z_tree = jax.tree.map(lambda p: p / w_i, self.spec.unravel(x_i))
+            g_tree, (loss, acc) = sam_gradient(
+                self.loss_fn, z_tree, batch, algo.rho
+            )  # lines 6-8
+            return key_i, g_tree, loss, acc
+
+        if algo.alpha == 0.0:
+            # Momentum off: v' = g exactly, so the momentum bank is never
+            # read — keep it out of the scan carry and let XLA fold
+            # ``0 * 0 + g`` and DCE the v write on the CPU inline path.
+            zeros = jnp.zeros(X.shape, jnp.float32)
+
+            def step0(carry, _):
+                X, keys = carry
+                keys, G_tree, losses, accs = jax.vmap(grad_one)(X, w, keys, data)
+                G = self.spec.ravel_stacked(G_tree)  # one contiguous write
+                X, _, _ = kops.fused_update_bank(X, zeros, G, 0.0, lr, w)
+                return (X, keys), (losses, accs)
+
+            (X, _), (losses, accs) = jax.lax.scan(
+                step0, (X, ckeys), None, length=algo.local_steps
+            )
+            return X, V0, losses.mean(axis=0), accs.mean(axis=0)
+
+        def step(carry, _):
+            X, V, keys = carry
+            keys, G_tree, losses, accs = jax.vmap(grad_one)(X, w, keys, data)
+            G = self.spec.ravel_stacked(G_tree)  # one contiguous write
+            # Lines 9-11 fused over the whole bank.  The de-biased z output
+            # feeds the next TPU iteration from VMEM; on the CPU inline
+            # path it is unused here and dead-code eliminated.
+            X, V, _ = kops.fused_update_bank(X, V, G, algo.alpha, lr, w)
+            return (X, V, keys), (losses, accs)
+
+        (X, V, _), (losses, accs) = jax.lax.scan(
+            step, (X, V0, ckeys), None, length=algo.local_steps
+        )
+        return X, V, losses.mean(axis=0), accs.mean(axis=0)
+
+    # -- local training, legacy pytree path --------------------------------
 
     def _local_update(self, params_i, w_i, key_i, data_i, lr):
         """K iterations of Algorithm 1 lines 4-11 for one client."""
@@ -166,6 +254,23 @@ class FLTrainer:
         )
         return x, losses.mean(), accs.mean()
 
+    # -- mixing-matrix selection -------------------------------------------
+
+    def _mixing(self, tkey, state: FLState):
+        algo = self.algo
+        k_link = max(int(self.participation * self.n), 1)
+        if algo.comm == "symmetric":
+            return topology.sample_symmetric_k_regular(tkey, self.n, k_link)
+        if algo.selection:
+            return topology.sample_kout_selective(
+                tkey, state.losses, self.n, k_link
+            )
+        if self._exp_cycle is not None:
+            # Time-varying exponential graph: round t uses cycle[t % hops].
+            hops = self._exp_cycle.shape[0]
+            return self._exp_cycle[jnp.mod(state.round, hops)]
+        return topology.sample_mixing(tkey, self.topo, t=0)
+
     # -- one communication round -------------------------------------------
 
     def _round(self, state: FLState):
@@ -176,7 +281,29 @@ class FLTrainer:
 
         if algo.comm == "central":
             return self._fedavg_round(state, lr, key, tkey, ckeys)
+        if self.flat:
+            return self._round_flat(state, lr, key, tkey, ckeys)
+        return self._round_pytree(state, lr, key, tkey, ckeys)
 
+    def _round_flat(self, state, lr, key, tkey, ckeys):
+        algo = self.algo
+        X, V, losses, accs = self._local_update_bank(
+            state.params, state.w, ckeys, self.data, lr
+        )
+        if algo.quantize_gossip:
+            X = _quantize_dequantize_rows(X)
+        P = self._mixing(tkey, state)
+        X = pushsum.gossip_bank(P, X)  # the whole model in one matmul
+        w_new = (
+            pushsum.gossip_weights(P, state.w)
+            if algo.comm == "directed"
+            else state.w
+        )
+        new_state = FLState(X, V, w_new, key, state.round + 1, losses)
+        return new_state, {"loss": losses.mean(), "acc": accs.mean()}
+
+    def _round_pytree(self, state, lr, key, tkey, ckeys):
+        algo = self.algo
         x_half, losses, accs = jax.vmap(
             self._local_update, in_axes=(0, 0, 0, 0, None)
         )(state.params, state.w, ckeys, self.data, lr)
@@ -184,37 +311,39 @@ class FLTrainer:
         if algo.quantize_gossip:
             x_half = _quantize_dequantize(x_half)
 
-        k_link = max(int(self.participation * self.n), 1)
-        if algo.comm == "symmetric":
-            P = topology.sample_symmetric_k_regular(tkey, self.n, k_link)
-        elif algo.selection:
-            P = topology.sample_kout_selective(tkey, state.losses, self.n, k_link)
-        else:
-            P = topology.sample_mixing(tkey, self.topo, t=0)
-
+        P = self._mixing(tkey, state)
         x_new = pushsum.gossip(P, x_half)
         w_new = (
             pushsum.gossip_weights(P, state.w)
             if algo.comm == "directed"
             else state.w
         )
-        new_state = FLState(x_new, w_new, key, state.round + 1, losses)
+        new_state = FLState(x_new, None, w_new, key, state.round + 1, losses)
         return new_state, {"loss": losses.mean(), "acc": accs.mean()}
 
     def _fedavg_round(self, state, lr, key, tkey, ckeys):
         m = max(int(self.participation * self.n), 1)
         sel = jax.random.permutation(tkey, self.n)[:m]
 
-        def client(i, k):
-            data_i = jax.tree.map(lambda d: d[i], self.data)
-            return self._local_update(
-                state.params, jnp.float32(1.0), k, data_i, lr
+        if self.flat:
+            data_sel = jax.tree.map(lambda d: d[sel], self.data)
+            Xrep = jnp.broadcast_to(state.params, (m,) + state.params.shape)
+            ones = jnp.ones((m,), jnp.float32)
+            X, _, losses, accs = self._local_update_bank(
+                Xrep, ones, ckeys[:m], data_sel, lr
             )
+            new_params = X.mean(axis=0)
+        else:
+            def client(i, k):
+                data_i = jax.tree.map(lambda d: d[i], self.data)
+                return self._local_update(
+                    state.params, jnp.float32(1.0), k, data_i, lr
+                )
 
-        xs, losses, accs = jax.vmap(client)(sel, ckeys[:m])
-        new_params = jax.tree.map(lambda s: s.mean(axis=0), xs)
+            xs, losses, accs = jax.vmap(client)(sel, ckeys[:m])
+            new_params = jax.tree.map(lambda s: s.mean(axis=0), xs)
         new_state = FLState(
-            new_params, state.w, key, state.round + 1, state.losses
+            new_params, state.mom, state.w, key, state.round + 1, state.losses
         )
         return new_state, {"loss": losses.mean(), "acc": accs.mean()}
 
@@ -227,11 +356,24 @@ class FLTrainer:
     def average_model(self):
         """Consensus model x̄ (Algorithm 1 output)."""
         if self.algo.comm == "central":
+            if self.flat:
+                return self.spec.unravel(self.state.params)
             return self.state.params
+        if self.flat:
+            return self.spec.unravel(self.state.params.mean(axis=0))
         return jax.tree.map(lambda x: x.mean(axis=0), self.state.params)
 
     def debiased_models(self):
+        if self.flat and self.algo.comm != "central":
+            z = pushsum.debias_bank(self.state.params, self.state.w)
+            return self.spec.unravel_stacked(z)
         return pushsum.debias(self.state.params, self.state.w)
+
+    def consensus_error(self):
+        """Mean squared distance of de-biased params from the average."""
+        if self.flat and self.algo.comm != "central":
+            return pushsum.consensus_error_bank(self.state.params, self.state.w)
+        return pushsum.consensus_error(self.state.params, self.state.w)
 
     @partial(jax.jit, static_argnums=0)
     def _eval(self, params, test_data):

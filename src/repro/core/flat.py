@@ -1,0 +1,113 @@
+"""Flat client-parameter bank: the engine's native state representation.
+
+Every client's pytree is ravelled into one contiguous row of an
+``(n_clients, D)`` buffer so the whole round becomes two dense primitives:
+one column-stochastic gossip matmul ``X' = P @ X`` over the entire model and
+one fused elementwise momentum/descent/de-bias update — exactly the two
+Pallas kernels this repo ships (``kernels/gossip_matmul.py``,
+``kernels/fused_update.py``).  Stochastic Gradient Push (Assran et al. 2019)
+and DFedSAM treat client state as a flat vector for the same reason.
+
+A :class:`BankSpec` is built once per model from leaf shape/dtype metadata
+(static — safe to construct at trace time from ``ShapeDtypeStruct`` leaves)
+and caches the per-leaf offsets, so ``unravel`` is pure static slicing and
+jit-compiles to views, not gathers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["BankSpec", "make_spec"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BankSpec:
+    """Static ravel/unravel metadata for one model pytree.
+
+    Attributes:
+      treedef: pytree structure of a single client's parameters.
+      shapes / dtypes: per-leaf shape and original dtype (restored on
+        unravel, so mixed-dtype trees round-trip exactly).
+      offsets / sizes: start offset and element count of each leaf inside
+        the flat row.
+      dim: total row length D.
+      dtype: storage dtype of the flat buffer (promotion of all leaf
+        dtypes, so no leaf loses precision in the bank).
+    """
+
+    treedef: Any
+    shapes: tuple[tuple[int, ...], ...]
+    dtypes: tuple[Any, ...]
+    offsets: tuple[int, ...]
+    sizes: tuple[int, ...]
+    dim: int
+    dtype: Any
+
+    # -- single row <-> single-client pytree --------------------------------
+
+    def ravel(self, tree) -> jnp.ndarray:
+        """Pytree -> flat (D,) row in the bank storage dtype."""
+        leaves = self.treedef.flatten_up_to(tree)
+        return jnp.concatenate(
+            [jnp.reshape(x, (-1,)).astype(self.dtype) for x in leaves]
+        )
+
+    def unravel(self, row: jnp.ndarray):
+        """Flat (D,) row -> pytree (leaf dtypes restored).
+
+        Offsets are static, so under jit this is slicing, not gather.
+        """
+        leaves = [
+            jax.lax.slice(row, (o,), (o + s,)).reshape(shape).astype(dt)
+            for o, s, shape, dt in zip(
+                self.offsets, self.sizes, self.shapes, self.dtypes
+            )
+        ]
+        return self.treedef.unflatten(leaves)
+
+    # -- (n, D) bank <-> client-stacked pytree ------------------------------
+
+    def ravel_stacked(self, stacked_tree) -> jnp.ndarray:
+        """Client-stacked pytree (leading dim n per leaf) -> (n, D) bank."""
+        leaves = self.treedef.flatten_up_to(stacked_tree)
+        return jnp.concatenate(
+            [
+                jnp.reshape(x, (x.shape[0], -1)).astype(self.dtype)
+                for x in leaves
+            ],
+            axis=1,
+        )
+
+    def unravel_stacked(self, bank: jnp.ndarray):
+        """(n, D) bank -> client-stacked pytree."""
+        n = bank.shape[0]
+        leaves = [
+            jax.lax.slice(bank, (0, o), (n, o + s))
+            .reshape((n,) + shape)
+            .astype(dt)
+            for o, s, shape, dt in zip(
+                self.offsets, self.sizes, self.shapes, self.dtypes
+            )
+        ]
+        return self.treedef.unflatten(leaves)
+
+
+def make_spec(tree, dtype=None) -> BankSpec:
+    """Build the :class:`BankSpec` for one client's parameter pytree.
+
+    ``tree`` may hold real arrays or ``jax.ShapeDtypeStruct`` leaves — only
+    static shape/dtype metadata is read.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = tuple(tuple(x.shape) for x in leaves)
+    dtypes = tuple(jnp.dtype(x.dtype) for x in leaves)
+    sizes = tuple(int(np.prod(s)) if s else 1 for s in shapes)
+    offsets = tuple(int(o) for o in np.cumsum((0,) + sizes)[:-1])
+    dim = int(sum(sizes))
+    dtype = jnp.dtype(dtype) if dtype is not None else jnp.result_type(*dtypes)
+    return BankSpec(treedef, shapes, dtypes, offsets, sizes, dim, dtype)

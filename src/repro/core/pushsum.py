@@ -12,7 +12,15 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["gossip", "gossip_weights", "debias", "consensus_error"]
+__all__ = [
+    "gossip",
+    "gossip_bank",
+    "gossip_weights",
+    "debias",
+    "debias_bank",
+    "consensus_error",
+    "consensus_error_bank",
+]
 
 
 def gossip(P: jnp.ndarray, stacked_params, use_kernel: bool = False):
@@ -37,6 +45,21 @@ def gossip(P: jnp.ndarray, stacked_params, use_kernel: bool = False):
     return jax.tree.map(mix, stacked_params)
 
 
+def gossip_bank(P: jnp.ndarray, X: jnp.ndarray,
+                use_kernel: bool = True) -> jnp.ndarray:
+    """One mixing step ``X' = P @ X`` on the flat (n, D) parameter bank —
+    the entire model in a single matmul (Pallas kernel by default)."""
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        return kops.gossip_matmul(P.astype(jnp.float32), X)
+    out = jnp.einsum(
+        "ij,jd->id", P, X.astype(jnp.float32),
+        precision=jax.lax.Precision.HIGHEST,
+    )
+    return out.astype(X.dtype)
+
+
 def gossip_weights(P: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     """Mix the push-sum weights: ``w' = P @ w`` (shape (n,))."""
     return (P @ w.astype(jnp.float32)).astype(w.dtype)
@@ -50,6 +73,18 @@ def debias(stacked_params, w: jnp.ndarray):
         return x / w.reshape(shape).astype(x.dtype)
 
     return jax.tree.map(div, stacked_params)
+
+
+def debias_bank(X: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """z_i = x_i / w_i on the flat (n, D) bank."""
+    return X / w[:, None].astype(X.dtype)
+
+
+def consensus_error_bank(X: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Flat-bank equivalent of :func:`consensus_error`."""
+    z = debias_bank(X, w)
+    mean = X.mean(axis=0, keepdims=True)
+    return jnp.sum((z - mean) ** 2) / X.shape[0]
 
 
 def consensus_error(stacked_params, w: jnp.ndarray) -> jnp.ndarray:

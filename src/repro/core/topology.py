@@ -25,6 +25,7 @@ __all__ = [
     "metropolis_weights",
     "directed_ring",
     "directed_exponential",
+    "exponential_cycle",
     "sample_kout",
     "sample_kout_selective",
     "sample_symmetric_k_regular",
@@ -95,6 +96,17 @@ def directed_exponential(n: int, t: int = 0) -> jnp.ndarray:
     for j in range(n):
         adj[(j + step) % n, j] = 1.0
     return column_stochastic_from_adjacency(jnp.asarray(adj))
+
+
+def exponential_cycle(n: int) -> jnp.ndarray:
+    """All ``log2(n)`` one-peer exponential graphs, stacked ``(hops, n, n)``.
+
+    The round-t matrix is ``cycle[t % hops]`` — a jittable dynamic index, so
+    a traced round counter can select the graph (the union over one full
+    cycle is strongly connected, satisfying Assumption 1).
+    """
+    hops = max(int(np.ceil(np.log2(max(n, 2)))), 1)
+    return jnp.stack([directed_exponential(n, t) for t in range(hops)])
 
 
 # ---------------------------------------------------------------------------

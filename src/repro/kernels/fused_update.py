@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["fused_update_pallas"]
+__all__ = ["fused_update_pallas", "fused_update_bank_pallas"]
 
 
 def _kernel(s_ref, x_ref, v_ref, g_ref, xo_ref, vo_ref, zo_ref):
@@ -44,10 +44,18 @@ def fused_update_pallas(
     d_pad = max(((d + block - 1) // block) * block, block)
 
     def pad(t, dt):
+        if d_pad == d:
+            return t.astype(dt)
         return jnp.zeros((d_pad,), dt).at[:d].set(t.astype(dt))
 
     scalars = jnp.stack(
         [jnp.float32(alpha), jnp.float32(eta), 1.0 / jnp.float32(w)])
+    if interpret and d_pad == d == block:
+        from repro.kernels.interpret import run_single_block
+
+        return run_single_block(
+            _kernel, [scalars, x, v.astype(jnp.float32), g],
+            [x.dtype, jnp.float32, x.dtype])
     x_new, v_new, z_new = pl.pallas_call(
         _kernel,
         grid=(d_pad // block,),
@@ -70,3 +78,79 @@ def fused_update_pallas(
         interpret=interpret,
     )(scalars, pad(x, x.dtype), pad(v, jnp.float32), pad(g, x.dtype))
     return x_new[:d], v_new[:d], z_new[:d]
+
+
+# ---------------------------------------------------------------------------
+# Row-banked variant: the whole (n_clients, D) flat parameter bank in one
+# call, with a per-client push-sum weight column.  Same fused arithmetic,
+# one grid step per (block_n, block_d) tile.
+# ---------------------------------------------------------------------------
+
+def _bank_kernel(s_ref, wi_ref, x_ref, v_ref, g_ref, xo_ref, vo_ref, zo_ref):
+    alpha, eta = s_ref[0], s_ref[1]
+    v_new = alpha * v_ref[...] + g_ref[...].astype(jnp.float32)
+    x_new = x_ref[...].astype(jnp.float32) - eta * v_new
+    vo_ref[...] = v_new
+    xo_ref[...] = x_new.astype(xo_ref.dtype)
+    zo_ref[...] = (x_new * wi_ref[...]).astype(zo_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "block_d", "interpret"))
+def fused_update_bank_pallas(
+    X: jax.Array,  # (n, D) flat client-parameter bank
+    V: jax.Array,  # (n, D) momentum bank, float32
+    G: jax.Array,  # (n, D) per-client (perturbed) gradients
+    alpha,
+    eta,
+    w: jax.Array,  # (n,) per-client push-sum weights
+    block_n: int = 8,
+    block_d: int = 512,
+    interpret: bool = False,
+):
+    n, d = X.shape
+    n_pad = max(((n + block_n - 1) // block_n) * block_n, block_n)
+    d_pad = max(((d + block_d - 1) // block_d) * block_d, block_d)
+    aligned = (n_pad, d_pad) == (n, d)
+
+    def pad(t, dt):
+        if aligned:
+            return t.astype(dt)
+        return jnp.zeros((n_pad, d_pad), dt).at[:n, :d].set(t.astype(dt))
+
+    scalars = jnp.stack([jnp.float32(alpha), jnp.float32(eta)])
+    # Padded rows carry weight 1 so the de-bias never divides by zero.
+    w_inv = jnp.ones((n_pad, 1), jnp.float32).at[:n, 0].set(
+        1.0 / w.astype(jnp.float32))
+    if interpret and aligned and (block_n, block_d) == (n, d):
+        from repro.kernels.interpret import run_single_block
+
+        return run_single_block(
+            _bank_kernel,
+            [scalars, w_inv, X, V.astype(jnp.float32), G],
+            [X.dtype, jnp.float32, X.dtype])
+    x_new, v_new, z_new = pl.pallas_call(
+        _bank_kernel,
+        grid=(n_pad // block_n, d_pad // block_d),
+        in_specs=[
+            pl.BlockSpec((2,), lambda i, j: (0,)),
+            pl.BlockSpec((block_n, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, block_d), lambda i, j: (i, j)),
+            pl.BlockSpec((block_n, block_d), lambda i, j: (i, j)),
+            pl.BlockSpec((block_n, block_d), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, block_d), lambda i, j: (i, j)),
+            pl.BlockSpec((block_n, block_d), lambda i, j: (i, j)),
+            pl.BlockSpec((block_n, block_d), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad, d_pad), X.dtype),
+            jax.ShapeDtypeStruct((n_pad, d_pad), jnp.float32),
+            jax.ShapeDtypeStruct((n_pad, d_pad), X.dtype),
+        ],
+        interpret=interpret,
+    )(scalars, w_inv, pad(X, X.dtype), pad(V, jnp.float32), pad(G, X.dtype))
+    if aligned:
+        return x_new, v_new, z_new
+    return x_new[:n, :d], v_new[:n, :d], z_new[:n, :d]

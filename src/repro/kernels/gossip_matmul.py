@@ -34,8 +34,18 @@ def gossip_matmul_pallas(
     n, D = X.shape
     n_pad = max(((n + block_n - 1) // block_n) * block_n, block_n)
     d_pad = max(((D + block_d - 1) // block_d) * block_d, block_d)
-    Pp = jnp.zeros((n_pad, n_pad), P.dtype).at[:n, :n].set(P)
-    Xp = jnp.zeros((n_pad, d_pad), X.dtype).at[:n, :D].set(X)
+    if interpret and (n_pad, d_pad) == (n, D) and (block_n, block_d) == (n, D):
+        # Single unpadded block: run the kernel body directly (same traced
+        # jnp, no per-block slicing, fuses into the caller's jit).
+        from repro.kernels.interpret import run_single_block
+
+        return run_single_block(_kernel, [P, X], [X.dtype])
+    # Skip the pad copies when already tile-aligned (always true in the
+    # interpret path, which picks exact block sizes).
+    Pp = P if n_pad == n else jnp.zeros(
+        (n_pad, n_pad), P.dtype).at[:n, :n].set(P)
+    Xp = X if (n_pad, d_pad) == (n, D) else jnp.zeros(
+        (n_pad, d_pad), X.dtype).at[:n, :D].set(X)
 
     out = pl.pallas_call(
         _kernel,
@@ -48,4 +58,4 @@ def gossip_matmul_pallas(
         out_shape=jax.ShapeDtypeStruct((n_pad, d_pad), X.dtype),
         interpret=interpret,
     )(Pp, Xp)
-    return out[:n, :D]
+    return out if (n_pad, d_pad) == (n, D) else out[:n, :D]

@@ -1,0 +1,55 @@
+"""Single-block fast path for interpret mode.
+
+``pl.pallas_call(interpret=True)`` emulates the grid with per-block dynamic
+slices and output updates — correct, but on CPU those materialize an extra
+copy of every operand per call, and the call is an XLA fusion barrier.  When
+the launch collapses to a single block covering the whole (unpadded) array
+— which is how ``ops`` configures every off-TPU call — the same kernel body
+can run directly on whole-array stand-in refs: identical traced-jnp
+semantics, zero slicing, and the result inlines into the surrounding jit so
+XLA fuses it with its neighbors.  Multi-block launches and explicit block
+sizes still go through ``pl.pallas_call``.
+"""
+from __future__ import annotations
+
+__all__ = ["run_single_block"]
+
+
+class _BlockRef:
+    """Whole-array stand-in for a Pallas Ref (single-block launches only)."""
+
+    __slots__ = ("array", "_dtype")
+
+    def __init__(self, array=None, dtype=None):
+        self.array = array
+        self._dtype = dtype if dtype is not None else array.dtype
+
+    @property
+    def dtype(self):
+        return self._dtype
+
+    def __getitem__(self, idx):
+        return self.array if idx is Ellipsis else self.array[idx]
+
+    def __setitem__(self, idx, value):
+        if idx is not Ellipsis:
+            raise NotImplementedError(
+                "single-block fast path only supports whole-block writes")
+        self.array = value
+
+
+def run_single_block(kernel, ins, out_dtypes):
+    """Run a Pallas kernel body once over whole-array refs.
+
+    Args:
+      kernel: the kernel function (positional refs: inputs then outputs).
+      ins: input arrays, one per input ref.
+      out_dtypes: dtypes of the output refs (shapes come from the writes).
+
+    Returns the output array (or tuple of arrays).
+    """
+    in_refs = [_BlockRef(a) for a in ins]
+    out_refs = [_BlockRef(dtype=dt) for dt in out_dtypes]
+    kernel(*in_refs, *out_refs)
+    outs = tuple(r.array for r in out_refs)
+    return outs[0] if len(outs) == 1 else outs

@@ -9,10 +9,19 @@ from __future__ import annotations
 import jax
 
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.fused_update import fused_update_pallas
+from repro.kernels.fused_update import (
+    fused_update_bank_pallas,
+    fused_update_pallas,
+)
 from repro.kernels.gossip_matmul import gossip_matmul_pallas
 
-__all__ = ["gossip_matmul", "fused_update", "flash_attention", "on_tpu"]
+__all__ = [
+    "gossip_matmul",
+    "fused_update",
+    "fused_update_bank",
+    "flash_attention",
+    "on_tpu",
+]
 
 
 def on_tpu() -> bool:
@@ -20,13 +29,31 @@ def on_tpu() -> bool:
 
 
 def gossip_matmul(P, X, **kw):
-    kw.setdefault("interpret", not on_tpu())
+    interpret = kw.setdefault("interpret", not on_tpu())
+    if interpret:
+        # Off-TPU, interpret mode executes the grid as a serial loop of
+        # dynamic slices — per-step overhead dominates — and there are no
+        # MXU tile-alignment constraints.  Collapse to a single pad-free
+        # grid step covering the whole (n, D) bank.
+        kw.setdefault("block_n", X.shape[0])
+        kw.setdefault("block_d", X.shape[1])
     return gossip_matmul_pallas(P, X, **kw)
 
 
 def fused_update(x, v, g, alpha, eta, w, **kw):
-    kw.setdefault("interpret", not on_tpu())
+    interpret = kw.setdefault("interpret", not on_tpu())
+    if interpret:
+        kw.setdefault("block", x.shape[0])
     return fused_update_pallas(x, v, g, alpha, eta, w, **kw)
+
+
+def fused_update_bank(X, V, G, alpha, eta, w, **kw):
+    """Fused momentum/descent/de-bias over the whole (n, D) flat bank."""
+    interpret = kw.setdefault("interpret", not on_tpu())
+    if interpret:
+        kw.setdefault("block_n", X.shape[0])
+        kw.setdefault("block_d", X.shape[1])
+    return fused_update_bank_pallas(X, V, G, alpha, eta, w, **kw)
 
 
 def flash_attention(q, k, v, causal=True, window=0, **kw):

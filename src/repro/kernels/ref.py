@@ -4,7 +4,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["gossip_matmul_ref", "fused_update_ref", "flash_attention_ref"]
+__all__ = ["gossip_matmul_ref", "fused_update_ref", "fused_update_bank_ref",
+           "flash_attention_ref"]
 
 
 def gossip_matmul_ref(P, X):
@@ -18,6 +19,14 @@ def fused_update_ref(x, v, g, alpha, eta, w):
     x_new = x.astype(jnp.float32) - jnp.float32(eta) * v_new
     z_new = x_new / jnp.float32(w)
     return x_new.astype(x.dtype), v_new, z_new.astype(x.dtype)
+
+
+def fused_update_bank_ref(X, V, G, alpha, eta, w):
+    """Row-banked fused update: (n, D) banks, per-client weight w (n,)."""
+    v_new = jnp.float32(alpha) * V.astype(jnp.float32) + G.astype(jnp.float32)
+    x_new = X.astype(jnp.float32) - jnp.float32(eta) * v_new
+    z_new = x_new / w.astype(jnp.float32)[:, None]
+    return x_new.astype(X.dtype), v_new, z_new.astype(X.dtype)
 
 
 def flash_attention_ref(q, k, v, causal: bool = True, window: int = 0):

@@ -81,13 +81,20 @@ def make_train_step(api: ModelApi, step_cfg: StepConfig) -> Callable:
     return train_step
 
 
-def make_round_step(api: ModelApi, step_cfg: StepConfig) -> Callable:
+def make_round_step(
+    api: ModelApi, step_cfg: StepConfig, flat_mix: bool = True
+) -> Callable:
     """Multi-pod DFL round: (stacked params, stacked v, w (n_pods,),
     batch (n_pods, ...), P_pod (n_pods, n_pods)) -> updated + mean loss.
 
     Every leaf carries a leading replica axis sharded over "pod";
     ``spmd_axis_name`` threads that axis through all internal sharding
     constraints so each pod's replica stays pod-local during local compute.
+
+    With ``flat_mix`` (default) the gossip is the same flat-bank primitive
+    the simulation engine uses: replicas are ravelled into an
+    ``(n_pods, D)`` bank and mixed with one ``gossip_matmul`` kernel call
+    instead of a per-leaf einsum.
     """
     local = make_train_step(api, step_cfg)
 
@@ -100,15 +107,46 @@ def make_round_step(api: ModelApi, step_cfg: StepConfig) -> Callable:
         (params, v), losses = jax.lax.scan(body, (params, v), batches)
         return params, v, losses.mean()
 
-    def round_step(params, v, w, batch, P_pod):
-        params, v, loss = jax.vmap(one_pod, spmd_axis_name="pod")(
-            params, v, w, batch)
+    def mix_flat(params, P_pod):
+        from jax.sharding import NamedSharding, PartitionSpec
+        from repro.core.flat import make_spec
+        from repro.kernels import ops as kops
+        from repro.launch import sharding as shlib
 
+        # Spec from the per-pod row view; only static shape/dtype is read.
+        row_view = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), params)
+        spec = make_spec(row_view)
+        bank = spec.ravel_stacked(params)
+        # Pin the bank's layout explicitly: rows on "pod", columns gathered.
+        # Without this the SPMD partitioner mis-propagates shardings through
+        # the ravel reshape/concat chain and silently corrupts the mix (it
+        # also logs "Involuntary full rematerialization" while doing so).
+        mesh = shlib.active_mesh()
+        row_sharding = (
+            NamedSharding(mesh, PartitionSpec("pod", None))
+            if mesh is not None and "pod" in mesh.axis_names
+            else None
+        )
+        if row_sharding is not None:
+            bank = jax.lax.with_sharding_constraint(bank, row_sharding)
+        bank = kops.gossip_matmul(P_pod.astype(jnp.float32), bank)
+        if row_sharding is not None:
+            bank = jax.lax.with_sharding_constraint(bank, row_sharding)
+        return spec.unravel_stacked(bank)
+
+    def mix_leafwise(params, P_pod):
         def mix(x):
             return jnp.einsum(
                 "ij,j...->i...", P_pod, x.astype(jnp.float32)).astype(x.dtype)
 
-        params = jax.tree.map(mix, params)  # push-sum gossip over "pod"
+        return jax.tree.map(mix, params)
+
+    def round_step(params, v, w, batch, P_pod):
+        params, v, loss = jax.vmap(one_pod, spmd_axis_name="pod")(
+            params, v, w, batch)
+        # push-sum gossip over "pod"
+        params = (mix_flat if flat_mix else mix_leafwise)(params, P_pod)
         w = P_pod @ w
         return params, v, w, loss.mean()
 

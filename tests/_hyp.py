@@ -1,0 +1,88 @@
+"""Graceful degradation when ``hypothesis`` isn't installed.
+
+Test modules import ``given``/``settings``/``st`` via::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hyp import given, settings, st
+
+With hypothesis present the real library runs; without it, this shim
+replays each property test over a deterministic seeded sample of the same
+strategy space, so the tier-1 suite still collects and exercises the
+properties (with less adversarial search) instead of erroring at import.
+Only the strategy combinators the suite uses are implemented.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+__all__ = ["given", "settings", "st"]
+
+_FALLBACK_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: rng.choice(elements))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+st = _Strategies()
+
+
+def settings(max_examples: int = _FALLBACK_EXAMPLES, **_ignored):
+    """Records max_examples; all other hypothesis knobs are no-ops here."""
+
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strategies):
+    """Run the test over a deterministic seeded sample of the strategies."""
+
+    def deco(fn):
+        n = min(getattr(fn, "_max_examples", _FALLBACK_EXAMPLES),
+                _FALLBACK_EXAMPLES)
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            rng = random.Random(fn.__name__)  # reproducible per test
+            for _ in range(n):
+                drawn = [s.draw(rng) for s in strategies]
+                fn(*args, *drawn, **kwargs)
+
+        # The drawn parameters are supplied here, not by pytest — hide the
+        # original signature so pytest doesn't look for fixtures named
+        # after them (inspect.signature follows __wrapped__).
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return deco

@@ -2,7 +2,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # graceful tier-1 degradation (see tests/_hyp.py)
+    from _hyp import given, settings, st
 
 from repro import checkpoint
 from repro.data.dirichlet import dirichlet_partition, partition_summary, stack_client_data
