@@ -11,6 +11,8 @@ scheduling noise) via ``common.emit``.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -19,6 +21,11 @@ from benchmarks.common import build_setting, emit
 from repro.core import FLTrainer, TopologyConfig, make_algo
 
 N_CLIENTS = 16
+
+# CI regression gate: the flat path must not lose more than this factor of
+# its recorded pytree-relative speedup (machine speed cancels in the ratio).
+SMOKE_TOLERANCE = 1.3
+BASELINE = os.path.join(os.path.dirname(__file__), "round_baseline.json")
 
 
 def _time_rounds(tr: FLTrainer, rounds: int) -> float:
@@ -55,5 +62,70 @@ def main(fast: bool = False):
              "pytree_us/flat_us (>=1 means flat is no slower)")
 
 
+def _smoke_speedup() -> float:
+    """pytree_us / flat_us for the flagship algorithm, min-of-N rounds."""
+    net, cdata, _ = build_setting(
+        dataset="mnist", n_clients=N_CLIENTS, samples_per_client=128)
+    topo = TopologyConfig(
+        kind="kout", n_clients=N_CLIENTS, k_out=max(N_CLIENTS // 4, 1))
+    algo = make_algo("dfedsgpsm", local_steps=3, batch_size=32)
+    timings = {}
+    for path in ("flat", "pytree"):
+        tr = FLTrainer(net.loss, net.init, cdata, algo, topo, seed=0,
+                       participation=0.25, flat=(path == "flat"))
+        timings[path] = _time_rounds(tr, 8)
+        emit(f"round/smoke/{path}", timings[path], "n=16,rounds=8,min")
+    return timings["pytree"] / timings["flat"]
+
+
+def smoke(record: bool = False) -> int:
+    """CI gate: compare the flat path's pytree-relative speedup against the
+    recorded baseline.  Absolute round times vary wildly across runners;
+    the ratio of the two paths measured back-to-back on the same box does
+    not, so a >SMOKE_TOLERANCE drop means the flat path itself regressed.
+    ``record`` rewrites the baseline instead (run on a quiet machine)."""
+    speedup = _smoke_speedup()
+    emit("round/smoke/speedup", speedup, "pytree_us/flat_us")
+    if record:
+        # Record the MINIMUM of this and any previously recorded speedup —
+        # the gate floor must clear runner noise, and a single quiet-box
+        # run would otherwise tighten it to the point of flaking.
+        note = ("pytree_us/flat_us, min over recorded runs; the gate floor "
+                "is speedup/tolerance - repeat --record to widen")
+        if os.path.exists(BASELINE):
+            with open(BASELINE) as f:
+                prev = json.load(f)
+            speedup = min(speedup, prev.get("speedup", speedup))
+            note = prev.get("note", note)
+        with open(BASELINE, "w") as f:
+            json.dump({"algo": "dfedsgpsm", "n_clients": N_CLIENTS,
+                       "speedup": round(speedup, 4),
+                       "tolerance": SMOKE_TOLERANCE, "note": note},
+                      f, indent=1)
+        print(f"# recorded baseline speedup={speedup:.3f} -> {BASELINE}")
+        return 0
+    with open(BASELINE) as f:
+        base = json.load(f)["speedup"]
+    floor = base / SMOKE_TOLERANCE
+    verdict = "OK" if speedup >= floor else "REGRESSION"
+    print(f"# flat-path gate: speedup={speedup:.3f} baseline={base:.3f} "
+          f"floor={floor:.3f} -> {verdict}")
+    return 0 if speedup >= floor else 1
+
+
 if __name__ == "__main__":
-    main()
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="regression gate vs round_baseline.json (exit 1 "
+                         "on >%.1fx flat-path slowdown)" % SMOKE_TOLERANCE)
+    ap.add_argument("--record", action="store_true",
+                    help="re-record the baseline instead of gating")
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer timing rounds for the full benchmark")
+    args = ap.parse_args()
+    if args.smoke or args.record:
+        sys.exit(smoke(record=args.record))
+    main(fast=args.fast)

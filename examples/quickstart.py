@@ -2,6 +2,11 @@
 non-IID MNIST-shaped task with 16 clients over a directed time-varying
 topology, and compare against OSGP (the asymmetric baseline it extends).
 
+Because an algorithm is just a (LocalSolver, Compressor, Mixer) stage
+composition, a third run swaps in top-k sparsification with error feedback
+via a one-line override — ~5% of coordinates on the wire per round, same
+push-sum mixing.
+
   PYTHONPATH=src python examples/quickstart.py
 """
 import jax.numpy as jnp
@@ -22,8 +27,15 @@ def main():
     model = mnist_2nn()
     topo = TopologyConfig(kind="kout", n_clients=n_clients, k_out=4)
 
-    for name in ("osgp", "dfedsgpsm"):
-        algo = make_algo(name, local_steps=5, batch_size=32)
+    runs = [
+        ("osgp", make_algo("osgp", local_steps=5, batch_size=32)),
+        ("dfedsgpsm", make_algo("dfedsgpsm", local_steps=5, batch_size=32)),
+        # Same round program, compressed gossip: top-k + error feedback.
+        ("dfedsgpsm+topk_ef",
+         make_algo("dfedsgpsm", local_steps=5, batch_size=32,
+                   compressor="topk_ef")),
+    ]
+    for name, algo in runs:
         tr = FLTrainer(model.loss, model.init, cdata, algo, topo, seed=0,
                        participation=0.25)
         tr.fit(rounds, test_data=testj, eval_every=5,

@@ -33,6 +33,9 @@ def main():
     ap.add_argument("--paper", action="store_true",
                     help="paper scale: 100 clients, 500 rounds, resnet18_gn")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--resume", action="store_true",
+                    help="warm-restart the full FLState (params + momentum "
+                         "bank + push-sum weights + round) from --ckpt-dir")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     if args.paper:
@@ -54,15 +57,25 @@ def main():
     tr = FLTrainer(model.loss, model.init, cdata, algo, topo, seed=0,
                    participation=args.participation)
 
+    start = 0
     history = []
-    for r in range(args.rounds):
+    if args.resume:
+        path = checkpoint.latest_checkpoint(args.ckpt_dir)
+        if path is not None:
+            state = tr.restore(path)
+            start = int(state.round)
+            print(f"resumed {path} at round {start}")
+            if args.out and os.path.exists(args.out):
+                with open(args.out) as f:  # keep the pre-resume curve
+                    history = [r for r in json.load(f) if r["round"] < start]
+    for r in range(start, args.rounds):
         metrics = tr.run_round()
         rec = {"round": r, "train_loss": float(metrics["loss"]),
                "train_acc": float(metrics["acc"])}
         if (r + 1) % 5 == 0 or r == args.rounds - 1:
             tl, ta = tr.evaluate(testj)
             rec.update(test_loss=tl, test_acc=ta)
-            checkpoint.save(args.ckpt_dir, r, tr.state.params)
+            tr.save(args.ckpt_dir, r + 1)  # full FLState, warm-restartable
             print(f"round {r:4d} loss={rec['train_loss']:.3f} "
                   f"test_acc={ta:.3f} (ckpt saved)")
         else:
@@ -72,7 +85,8 @@ def main():
     if args.out:
         with open(args.out, "w") as f:
             json.dump(history, f, indent=1)
-    print("final:", history[-1])
+    if history:
+        print("final:", history[-1])
     print("latest ckpt:", checkpoint.latest_checkpoint(args.ckpt_dir))
 
 

@@ -2,8 +2,18 @@ from repro.checkpoint.io import (
     latest_checkpoint,
     restore,
     restore_bank,
+    restore_state,
     save,
     save_bank,
+    save_state,
 )
 
-__all__ = ["save", "restore", "latest_checkpoint", "save_bank", "restore_bank"]
+__all__ = [
+    "save",
+    "restore",
+    "latest_checkpoint",
+    "save_bank",
+    "restore_bank",
+    "save_state",
+    "restore_state",
+]

@@ -15,7 +15,15 @@ import tempfile
 import jax
 import numpy as np
 
-__all__ = ["save", "restore", "latest_checkpoint", "save_bank", "restore_bank"]
+__all__ = [
+    "save",
+    "restore",
+    "latest_checkpoint",
+    "save_bank",
+    "restore_bank",
+    "save_state",
+    "restore_state",
+]
 
 _STEP_RE = re.compile(r"ckpt_(\d+)\.npz$")
 
@@ -120,6 +128,52 @@ def restore_bank(path: str, spec=None):
         k[len("extra_"):]: data[k] for k in data.files if k.startswith("extra_")
     }
     return data["__bank__"], extra, meta
+
+
+def save_state(directory: str, step: int, state, spec, keep: int = 3) -> str:
+    """Checkpoint a full ``repro.core.FLState`` through the bank fast path.
+
+    The params bank rides as ``__bank__``; momentum bank, push-sum weights,
+    RNG key, round counter, last losses, and any array-valued compressor
+    state (e.g. the top-k error-feedback residual) ride as extras — so a
+    restore is a genuinely warm restart, not just a parameter copy.
+    """
+    extra = {
+        "w": state.w,
+        "key": state.key,
+        "round": state.round,
+        "losses": state.losses,
+    }
+    if state.mom is not None:
+        extra["mom"] = state.mom
+    if state.comp is not None and not (
+        isinstance(state.comp, tuple) and state.comp == ()
+    ):
+        extra["comp"] = state.comp
+    return save_bank(directory, step, state.params, spec, extra=extra,
+                     keep=keep)
+
+
+def restore_state(path: str, spec):
+    """Restore the full ``FLState`` saved by :func:`save_state`."""
+    import jax.numpy as jnp
+
+    from repro.core.program import FLState
+
+    bank, extra, _ = restore_bank(path, spec=spec)
+    for k in ("w", "key", "round", "losses"):
+        if k not in extra:
+            raise ValueError(f"{path} is not a full-FLState checkpoint "
+                             f"(missing {k!r})")
+    return FLState(
+        params=jnp.asarray(bank),
+        mom=jnp.asarray(extra["mom"]) if "mom" in extra else None,
+        w=jnp.asarray(extra["w"]),
+        key=jnp.asarray(extra["key"]),
+        round=jnp.asarray(extra["round"]),
+        losses=jnp.asarray(extra["losses"]),
+        comp=jnp.asarray(extra["comp"]) if "comp" in extra else (),
+    )
 
 
 def restore(path: str, like=None):

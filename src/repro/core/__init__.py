@@ -4,19 +4,36 @@ Public surface:
   - topology: directed / symmetric, time-varying mixing-matrix samplers.
   - pushsum: gossip + push-sum de-biasing primitives.
   - sam: SAM perturbation & local-momentum transforms (Algorithm 1 inner loop).
-  - engine: stacked-client simulation engine + the 10-algorithm registry.
+  - stages: composable LocalSolver / Compressor / Mixer round stages.
+  - program: the pure ``init``/``step`` round-program core over stages.
+  - engine: AlgoConfig registry + the thin stateful FLTrainer wrapper.
 """
-from repro.core.engine import ALGORITHMS, AlgoConfig, FLState, FLTrainer, make_algo
+from repro.core.engine import (
+    ALGORITHMS,
+    AlgoConfig,
+    FLState,
+    FLTrainer,
+    RoundProgram,
+    make_algo,
+    make_program,
+)
 from repro.core.flat import BankSpec, make_spec
+from repro.core.stages import COMPRESSORS, MIXERS, SOLVERS, make_stages
 from repro.core.topology import TopologyConfig
 
 __all__ = [
     "ALGORITHMS",
     "AlgoConfig",
     "BankSpec",
+    "COMPRESSORS",
     "FLState",
     "FLTrainer",
+    "MIXERS",
+    "RoundProgram",
+    "SOLVERS",
     "TopologyConfig",
     "make_algo",
+    "make_program",
     "make_spec",
+    "make_stages",
 ]

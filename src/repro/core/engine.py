@@ -1,45 +1,60 @@
 """Stacked-client simulation engine for (decentralized) federated learning.
 
-The engine's native state is the **flat client-parameter bank**: every
-client's pytree is ravelled into one contiguous row of an ``(n_clients, D)``
-buffer (plus a parallel float32 momentum bank), so one round is exactly the
-paper's two dense primitives — a single column-stochastic gossip matmul
-``X' = P @ X`` over the whole model and one fused momentum/descent/de-bias
-elementwise pass — both dispatched to the Pallas kernels in
-``repro.kernels`` (interpret mode on CPU, Mosaic on TPU).  Local training is
-``vmap`` over bank rows; pytrees only reappear inside the loss closure via a
-cached static unravel.  The seed per-leaf pytree path is retained
-(``flat=False``) as the equivalence oracle and benchmark baseline.
+The engine is a **composable round program** (``repro.core.program``): one
+algorithm = a (LocalSolver, Compressor, Mixer) stage composition from
+``repro.core.stages`` over the flat ``(n_clients, D)`` client-parameter
+bank, so one round is exactly the paper's two dense primitives — a single
+column-stochastic gossip matmul ``X' = P @ X`` over the whole model and one
+fused momentum/descent/de-bias elementwise pass — both dispatched to the
+Pallas kernels in ``repro.kernels`` (interpret mode on CPU, Mosaic on TPU).
 
-Algorithm 1 (DFedSGPSM) is the flagship; all seven paper baselines plus the
-ablation variant DFedSGPM are expressed as configurations of the same round.
+``AlgoConfig`` is the declarative point in that composition space and
+``ALGORITHMS`` expresses Algorithm 1 (DFedSGPSM, the flagship), all seven
+paper baselines, and the DFedSGPM ablation as registry compositions.
+:class:`FLTrainer` is a thin stateful wrapper over the pure
+``program.init``/``program.step`` core; the seed per-leaf pytree path is
+retained (``flat=False``) as the equivalence oracle and benchmark baseline.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Callable, NamedTuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import pushsum, topology
-from repro.core.flat import make_spec
+from repro.core.program import FLState, RoundProgram, make_program
+from repro.core.stages import _sample_batch
 from repro.core.sam import (
     apply_update,
     momentum_update,
     sam_gradient,
 )
 
-__all__ = ["AlgoConfig", "ALGORITHMS", "FLState", "FLTrainer", "make_algo"]
+__all__ = [
+    "AlgoConfig",
+    "ALGORITHMS",
+    "FLState",
+    "FLTrainer",
+    "RoundProgram",
+    "make_algo",
+    "make_program",
+]
 
 
 @dataclasses.dataclass(frozen=True)
 class AlgoConfig:
-    """One federated-optimization algorithm = one point in this space."""
+    """One federated-optimization algorithm = one stage composition.
+
+    ``solver`` / ``compressor`` / ``comm`` name entries in the
+    ``repro.core.stages`` registries (``comm`` selects the mixer:
+    directed | symmetric | central); the scalar fields are the stage
+    hyperparameters.
+    """
 
     name: str = "dfedsgpsm"
-    comm: str = "directed"  # directed | symmetric | central
+    comm: str = "directed"  # mixer: directed | symmetric | central
     local_steps: int = 5
     rho: float = 0.0  # SAM perturbation radius (0 = off)
     alpha: float = 0.0  # local momentum coefficient (0 = off)
@@ -47,7 +62,12 @@ class AlgoConfig:
     lr: float = 0.1
     lr_decay: float = 0.998
     batch_size: int = 32
-    # Beyond-paper: quantize gossip payloads to int8 (+ scales).
+    solver: str = "sam_momentum"  # sam_momentum | sgd | proximal
+    compressor: str = "identity"  # identity | int8_rows | topk_ef
+    topk_ratio: float = 0.05  # kept fraction per row (topk_ef)
+    prox_mu: float = 0.01  # proximal pull strength (proximal solver)
+    # Legacy spelling of ``compressor="int8_rows"`` (kept for the seed
+    # pytree path, which quantizes per-leaf instead of per-row).
     quantize_gossip: bool = False
 
 
@@ -71,27 +91,9 @@ def make_algo(name: str, **overrides) -> AlgoConfig:
     return dataclasses.replace(ALGORITHMS[name], **overrides)
 
 
-class FLState(NamedTuple):
-    params: Any  # flat (n, D) bank / (D,) central row; pytree when flat=False
-    # End-of-round momentum bank, (n, D) float32 (None on the legacy path).
-    # Algorithm 1 re-initializes v to zero each round, so training never
-    # reads it back — it is carried for observability and checkpoint/warm-
-    # restart of momentum-persistent variants.
-    mom: Any
-    w: jnp.ndarray  # (n,) push-sum weights (all-ones when unused)
-    key: jax.Array
-    round: jnp.ndarray  # int32 scalar
-    losses: jnp.ndarray  # (n,) last local losses (drives selection)
-
-
-def _sample_batch(data: dict, key: jax.Array, batch_size: int):
-    m = data["x"].shape[0]
-    idx = jax.random.randint(key, (batch_size,), 0, m)
-    return {k: v[idx] for k, v in data.items()}
-
-
 def _quantize_dequantize(tree):
-    """Simulated int8 symmetric quantization of gossip payloads."""
+    """Simulated int8 symmetric quantization of gossip payloads (per-leaf
+    global scale; the flat bank uses the tighter per-row Int8RowCompressor)."""
 
     def qdq(x):
         flat_x = x.astype(jnp.float32)
@@ -102,26 +104,21 @@ def _quantize_dequantize(tree):
     return jax.tree.map(qdq, tree)
 
 
-def _quantize_dequantize_rows(X: jnp.ndarray) -> jnp.ndarray:
-    """Int8 symmetric quantization with one scale per client row of the
-    flat bank — tighter than the per-leaf global scale of the pytree path."""
-    Xf = X.astype(jnp.float32)
-    scale = jnp.max(jnp.abs(Xf), axis=1, keepdims=True) / 127.0 + 1e-12
-    q = jnp.clip(jnp.round(Xf / scale), -127, 127)
-    return (q * scale).astype(X.dtype)
-
-
 class FLTrainer:
-    """Drives rounds of a configured algorithm over client-partitioned data.
+    """Thin stateful wrapper over the pure round program.
 
     Args:
       loss_fn: ``loss_fn(params, batch) -> (loss, accuracy)``.
       init_fn: ``init_fn(key) -> params`` for a single client.
       client_data: pytree whose leaves have leading dims (n_clients, m, ...).
-      algo: AlgoConfig.
+      algo: AlgoConfig (a stage composition).
       topo: TopologyConfig (ignored for centralized algorithms).
       flat: run rounds on the flat (n, D) bank through the Pallas kernels
-        (default); ``False`` selects the seed per-leaf pytree path.
+        (default); ``False`` selects the seed per-leaf pytree path, kept as
+        the kernel-free equivalence oracle.
+
+    For functional-style training (``lax.scan`` over rounds, donated state),
+    use ``self.program`` — or ``repro.core.make_program`` — directly.
     """
 
     def __init__(
@@ -135,6 +132,18 @@ class FLTrainer:
         participation: float = 0.1,
         flat: bool = True,
     ):
+        if not flat and (
+            algo.solver != "sam_momentum"
+            or algo.compressor not in ("identity", "int8_rows")
+        ):
+            # The oracle implements exactly the paper compositions; silently
+            # running a different algorithm than the flat path would defeat
+            # its purpose as the equivalence baseline.
+            raise ValueError(
+                "the flat=False oracle path only supports the "
+                "sam_momentum solver with identity/int8_rows compression, "
+                f"not solver={algo.solver!r} compressor={algo.compressor!r}"
+            )
         self.loss_fn = loss_fn
         self.init_fn = init_fn
         self.data = client_data
@@ -143,96 +152,56 @@ class FLTrainer:
         self.participation = participation
         self.flat = flat
         self.n = topo.n_clients
+        self.program = make_program(
+            loss_fn, init_fn, client_data, algo, topo, participation
+        )
+        self.spec = self.program.spec
+        self._exp_cycle = self.program.exp_cycle
+
         key = jax.random.PRNGKey(seed)
-        pkey, self.key = jax.random.split(key)
-        params0 = init_fn(pkey)
-        self.spec = make_spec(params0)
-        # Exponential graphs cycle through log2(n) hop matrices; precompute
-        # the stack once so the (traced) round index can select the graph.
-        self._exp_cycle = (
-            topology.exponential_cycle(self.n)
-            if topo.kind == "exponential" and topo.time_varying
-            else None
-        )
-        w0 = jnp.ones((self.n,), jnp.float32)
-        losses0 = jnp.zeros((self.n,), jnp.float32)
-        if algo.comm == "central":
-            p0 = self.spec.ravel(params0) if flat else params0
-            self.state = FLState(p0, None, w0, self.key, jnp.int32(0), losses0)
-        elif flat:
-            row = self.spec.ravel(params0)
-            bank = jnp.broadcast_to(row, (self.n, self.spec.dim))
-            mom = jnp.zeros((self.n, self.spec.dim), jnp.float32)
-            self.state = FLState(bank, mom, w0, self.key, jnp.int32(0), losses0)
+        if flat:
+            self.state = self.program.init(key)
+            # Donate the state: the (n, D) banks are updated in place across
+            # rounds instead of reallocating ~2 model copies per round.
+            self._round_jit = jax.jit(self.program.step, donate_argnums=0)
         else:
-            stacked = jax.tree.map(
-                lambda x: jnp.broadcast_to(x, (self.n,) + x.shape), params0
-            )
-            self.state = FLState(
-                stacked, None, w0, self.key, jnp.int32(0), losses0
-            )
-        # Donate the state: the (n, D) banks are updated in place across
-        # rounds instead of reallocating ~2 model copies per round.
-        self._round_jit = jax.jit(self._round, donate_argnums=0)
+            pkey, skey = jax.random.split(key)
+            params0 = init_fn(pkey)
+            w0 = jnp.ones((self.n,), jnp.float32)
+            losses0 = jnp.zeros((self.n,), jnp.float32)
+            if algo.comm == "central":
+                self.state = FLState(
+                    params0, None, w0, skey, jnp.int32(0), losses0
+                )
+            else:
+                stacked = jax.tree.map(
+                    lambda x: jnp.broadcast_to(x, (self.n,) + x.shape), params0
+                )
+                self.state = FLState(
+                    stacked, None, w0, skey, jnp.int32(0), losses0
+                )
+            self._round_jit = jax.jit(self._round_legacy, donate_argnums=0)
 
-    # -- local training, flat-bank path ------------------------------------
+        # Masked fixed-shape eval: every chunk is padded to the same batch
+        # size, so this compiles once per trainer and never re-traces on the
+        # ragged final chunk.  Per-example metrics are vmapped so the pad
+        # rows can be masked out of the sums exactly.
+        def _masked_eval(params, chunk, mask):
+            def one(ex):
+                return self.loss_fn(
+                    params, jax.tree.map(lambda v: v[None], ex)
+                )
 
-    def _local_update_bank(self, X, w, ckeys, data, lr):
-        """K iterations of Algorithm 1 lines 4-11 for all clients at once:
-        gradients are vmapped over bank rows, the momentum/descent/de-bias
-        step is one fused kernel call on the whole bank."""
-        from repro.kernels import ops as kops
+            per_l, per_a = jax.vmap(one)(chunk)
+            # where, not multiply: a non-finite loss on a zero pad row
+            # (user loss_fns may divide by input norms) must not poison
+            # the masked sum via NaN * 0.
+            return (jnp.sum(jnp.where(mask, per_l, 0.0)),
+                    jnp.sum(jnp.where(mask, per_a, 0.0)))
 
-        algo = self.algo
-        V0 = jnp.zeros_like(X, jnp.float32)
+        self._eval_jit = jax.jit(_masked_eval)
 
-        def grad_one(x_i, w_i, key_i, data_i):
-            key_i, bk = jax.random.split(key_i)
-            batch = _sample_batch(data_i, bk, algo.batch_size)
-            # Unravel OUTSIDE the differentiated closure, fusing the line-5
-            # de-bias into the leaf slices; the gradient stays leaf-shaped
-            # (no scatter back into a (D,) row per leaf) and is ravelled
-            # once — one contiguous write per client.
-            z_tree = jax.tree.map(lambda p: p / w_i, self.spec.unravel(x_i))
-            g_tree, (loss, acc) = sam_gradient(
-                self.loss_fn, z_tree, batch, algo.rho
-            )  # lines 6-8
-            return key_i, g_tree, loss, acc
-
-        if algo.alpha == 0.0:
-            # Momentum off: v' = g exactly, so the momentum bank is never
-            # read — keep it out of the scan carry and let XLA fold
-            # ``0 * 0 + g`` and DCE the v write on the CPU inline path.
-            zeros = jnp.zeros(X.shape, jnp.float32)
-
-            def step0(carry, _):
-                X, keys = carry
-                keys, G_tree, losses, accs = jax.vmap(grad_one)(X, w, keys, data)
-                G = self.spec.ravel_stacked(G_tree)  # one contiguous write
-                X, _, _ = kops.fused_update_bank(X, zeros, G, 0.0, lr, w)
-                return (X, keys), (losses, accs)
-
-            (X, _), (losses, accs) = jax.lax.scan(
-                step0, (X, ckeys), None, length=algo.local_steps
-            )
-            return X, V0, losses.mean(axis=0), accs.mean(axis=0)
-
-        def step(carry, _):
-            X, V, keys = carry
-            keys, G_tree, losses, accs = jax.vmap(grad_one)(X, w, keys, data)
-            G = self.spec.ravel_stacked(G_tree)  # one contiguous write
-            # Lines 9-11 fused over the whole bank.  The de-biased z output
-            # feeds the next TPU iteration from VMEM; on the CPU inline
-            # path it is unused here and dead-code eliminated.
-            X, V, _ = kops.fused_update_bank(X, V, G, algo.alpha, lr, w)
-            return (X, V, keys), (losses, accs)
-
-        (X, V, _), (losses, accs) = jax.lax.scan(
-            step, (X, V0, ckeys), None, length=algo.local_steps
-        )
-        return X, V, losses.mean(axis=0), accs.mean(axis=0)
-
-    # -- local training, legacy pytree path --------------------------------
+    # -- legacy per-leaf pytree path (equivalence oracle) -------------------
 
     def _local_update(self, params_i, w_i, key_i, data_i, lr):
         """K iterations of Algorithm 1 lines 4-11 for one client."""
@@ -254,65 +223,26 @@ class FLTrainer:
         )
         return x, losses.mean(), accs.mean()
 
-    # -- mixing-matrix selection -------------------------------------------
-
-    def _mixing(self, tkey, state: FLState):
-        algo = self.algo
-        k_link = max(int(self.participation * self.n), 1)
-        if algo.comm == "symmetric":
-            return topology.sample_symmetric_k_regular(tkey, self.n, k_link)
-        if algo.selection:
-            return topology.sample_kout_selective(
-                tkey, state.losses, self.n, k_link
-            )
-        if self._exp_cycle is not None:
-            # Time-varying exponential graph: round t uses cycle[t % hops].
-            hops = self._exp_cycle.shape[0]
-            return self._exp_cycle[jnp.mod(state.round, hops)]
-        return topology.sample_mixing(tkey, self.topo, t=0)
-
-    # -- one communication round -------------------------------------------
-
-    def _round(self, state: FLState):
+    def _round_legacy(self, state: FLState):
         algo = self.algo
         lr = algo.lr * algo.lr_decay ** state.round.astype(jnp.float32)
         keys = jax.random.split(state.key, 2 + self.n)
         key, tkey, ckeys = keys[0], keys[1], keys[2:]
 
         if algo.comm == "central":
-            return self._fedavg_round(state, lr, key, tkey, ckeys)
-        if self.flat:
-            return self._round_flat(state, lr, key, tkey, ckeys)
-        return self._round_pytree(state, lr, key, tkey, ckeys)
+            return self._fedavg_round_legacy(state, lr, key, tkey, ckeys)
 
-    def _round_flat(self, state, lr, key, tkey, ckeys):
-        algo = self.algo
-        X, V, losses, accs = self._local_update_bank(
-            state.params, state.w, ckeys, self.data, lr
-        )
-        if algo.quantize_gossip:
-            X = _quantize_dequantize_rows(X)
-        P = self._mixing(tkey, state)
-        X = pushsum.gossip_bank(P, X)  # the whole model in one matmul
-        w_new = (
-            pushsum.gossip_weights(P, state.w)
-            if algo.comm == "directed"
-            else state.w
-        )
-        new_state = FLState(X, V, w_new, key, state.round + 1, losses)
-        return new_state, {"loss": losses.mean(), "acc": accs.mean()}
-
-    def _round_pytree(self, state, lr, key, tkey, ckeys):
-        algo = self.algo
         x_half, losses, accs = jax.vmap(
             self._local_update, in_axes=(0, 0, 0, 0, None)
         )(state.params, state.w, ckeys, self.data, lr)
 
-        if algo.quantize_gossip:
+        if algo.quantize_gossip or algo.compressor == "int8_rows":
             x_half = _quantize_dequantize(x_half)
 
         P = self._mixing(tkey, state)
-        x_new = pushsum.gossip(P, x_half)
+        # The oracle path stays off-kernel by construction — it is what the
+        # kernel-backed flat path is validated against.
+        x_new = pushsum.gossip(P, x_half, use_kernel=False)
         w_new = (
             pushsum.gossip_weights(P, state.w)
             if algo.comm == "directed"
@@ -321,31 +251,27 @@ class FLTrainer:
         new_state = FLState(x_new, None, w_new, key, state.round + 1, losses)
         return new_state, {"loss": losses.mean(), "acc": accs.mean()}
 
-    def _fedavg_round(self, state, lr, key, tkey, ckeys):
+    def _fedavg_round_legacy(self, state, lr, key, tkey, ckeys):
         m = max(int(self.participation * self.n), 1)
         sel = jax.random.permutation(tkey, self.n)[:m]
 
-        if self.flat:
-            data_sel = jax.tree.map(lambda d: d[sel], self.data)
-            Xrep = jnp.broadcast_to(state.params, (m,) + state.params.shape)
-            ones = jnp.ones((m,), jnp.float32)
-            X, _, losses, accs = self._local_update_bank(
-                Xrep, ones, ckeys[:m], data_sel, lr
+        def client(i, k):
+            data_i = jax.tree.map(lambda d: d[i], self.data)
+            return self._local_update(
+                state.params, jnp.float32(1.0), k, data_i, lr
             )
-            new_params = X.mean(axis=0)
-        else:
-            def client(i, k):
-                data_i = jax.tree.map(lambda d: d[i], self.data)
-                return self._local_update(
-                    state.params, jnp.float32(1.0), k, data_i, lr
-                )
 
-            xs, losses, accs = jax.vmap(client)(sel, ckeys[:m])
-            new_params = jax.tree.map(lambda s: s.mean(axis=0), xs)
+        xs, losses, accs = jax.vmap(client)(sel, ckeys[:m])
+        new_params = jax.tree.map(lambda s: s.mean(axis=0), xs)
         new_state = FLState(
             new_params, state.mom, state.w, key, state.round + 1, state.losses
         )
         return new_state, {"loss": losses.mean(), "acc": accs.mean()}
+
+    # -- mixing-matrix selection (delegates to the program) -----------------
+
+    def _mixing(self, tkey, state: FLState):
+        return self.program.mixing_matrix(tkey, state)
 
     # -- public API ----------------------------------------------------------
 
@@ -375,23 +301,25 @@ class FLTrainer:
             return pushsum.consensus_error_bank(self.state.params, self.state.w)
         return pushsum.consensus_error(self.state.params, self.state.w)
 
-    @partial(jax.jit, static_argnums=0)
-    def _eval(self, params, test_data):
-        loss, acc = self.loss_fn(params, test_data)
-        return loss, acc
-
     def evaluate(self, test_data, batch: int = 1024):
         params = self.average_model()
         n = test_data["x"].shape[0]
-        tot_l, tot_a, seen = 0.0, 0.0, 0
+        tot_l, tot_a = 0.0, 0.0
         for i in range(0, n, batch):
             chunk = {k: v[i : i + batch] for k, v in test_data.items()}
-            l, a = self._eval(params, chunk)
             b = chunk["x"].shape[0]
-            tot_l += float(l) * b
-            tot_a += float(a) * b
-            seen += b
-        return tot_l / seen, tot_a / seen
+            if b < batch:  # pad to the fixed shape; the mask strips it
+                chunk = {
+                    k: jnp.concatenate(
+                        [v, jnp.zeros((batch - b,) + v.shape[1:], v.dtype)]
+                    )
+                    for k, v in chunk.items()
+                }
+            mask = jnp.arange(batch) < b
+            l, a = self._eval_jit(params, chunk, mask)
+            tot_l += float(l)
+            tot_a += float(a)
+        return tot_l / n, tot_a / n
 
     def fit(self, rounds: int, test_data=None, eval_every: int = 0, log=None):
         history = []
@@ -405,3 +333,42 @@ class FLTrainer:
             if log:
                 log(rec)
         return history
+
+    # -- checkpointing (full FLState) ---------------------------------------
+
+    def save(self, directory: str, step: int, keep: int = 3) -> str:
+        """Checkpoint the full ``FLState`` (params + momentum bank +
+        push-sum weights + round + key + compressor state)."""
+        from repro import checkpoint
+
+        if not self.flat:
+            raise ValueError("full-state checkpointing needs the flat path")
+        return checkpoint.save_state(
+            directory, step, self.state, self.spec, keep=keep
+        )
+
+    def restore(self, path: str) -> FLState:
+        """Warm-restart from a full-``FLState`` checkpoint."""
+        from repro import checkpoint
+
+        if not self.flat:
+            raise ValueError("full-state checkpointing needs the flat path")
+        state = checkpoint.restore_state(path, self.spec)
+        # Fail fast on compressor-state mismatch: a stateful compressor fed
+        # an empty comp (or vice versa) would otherwise crash opaquely at
+        # trace time inside the next round.
+        needs = self.program.compressor.stateful
+        has = not (isinstance(state.comp, tuple) and state.comp == ())
+        if needs and not has:
+            raise ValueError(
+                f"{path} carries no compressor state, but "
+                f"compressor={self.algo.compressor!r} needs its residual "
+                "bank — it was saved from a stateless composition"
+            )
+        if has and not needs:
+            raise ValueError(
+                f"{path} carries compressor state, but this trainer's "
+                f"compressor={self.algo.compressor!r} is stateless"
+            )
+        self.state = state
+        return self.state

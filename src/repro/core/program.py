@@ -1,0 +1,195 @@
+"""The composable round program: a pure ``init``/``step`` core over stages.
+
+``make_program`` wires a (LocalSolver, Compressor, Mixer) composition —
+usually resolved from an ``AlgoConfig`` via ``repro.core.stages`` — into a
+:class:`RoundProgram` whose
+
+    state           = program.init(key)          # FLState
+    state, metrics  = program.step(state)        # one communication round
+    state, history  = program.run(state, rounds) # lax.scan over step
+
+are plain jittable functions of traced state only (topology, data, and the
+stage composition are closed over as constants), optax-style.  Callers can
+``jax.jit(program.step, donate_argnums=0)`` to update the (n, D) banks in
+place, or scan whole training runs inside one jit.  ``FLTrainer`` in
+``repro.core.engine`` is a thin stateful wrapper around exactly this API.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import topology
+from repro.core.flat import BankSpec, make_spec
+from repro.core.stages import IdentityCompressor, make_stages
+
+__all__ = ["FLState", "RoundProgram", "make_program"]
+
+
+class FLState(NamedTuple):
+    """Full round state — everything a warm restart needs."""
+
+    params: Any  # flat (n, D) bank / (D,) central row; pytree when flat=False
+    # End-of-round momentum bank, (n, D) float32 (None on the legacy path).
+    # Algorithm 1 re-initializes v to zero each round, so training never
+    # reads it back — it is carried for observability and checkpoint/warm-
+    # restart of momentum-persistent variants.
+    mom: Any
+    w: jnp.ndarray  # (n,) push-sum weights (all-ones when unused)
+    key: jax.Array
+    round: jnp.ndarray  # int32 scalar
+    losses: jnp.ndarray  # (n,) last local losses (drives selection)
+    comp: Any = ()  # compressor state (e.g. error-feedback residual bank)
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundProgram:
+    """One federated-optimization algorithm as a stage composition.
+
+    All fields are trace-time constants; ``init``/``step``/``run`` below are
+    the only functions of traced values.
+    """
+
+    solver: Any
+    compressor: Any
+    mixer: Any
+    loss_fn: Callable
+    init_fn: Callable
+    data: Any  # client-stacked pytree, leading dims (n_clients, m, ...)
+    topo: topology.TopologyConfig
+    spec: BankSpec
+    n: int
+    participation: float
+    lr: float
+    lr_decay: float
+    selection: bool
+    exp_cycle: Any  # (hops, n, n) stack for time-varying exponential graphs
+
+    # -- pure state constructor ---------------------------------------------
+
+    def init(self, key: jax.Array) -> FLState:
+        pkey, skey = jax.random.split(key)
+        params0 = self.init_fn(pkey)
+        w0 = self.mixer.init_weights(self.n)
+        losses0 = jnp.zeros((self.n,), jnp.float32)
+        if self.mixer.kind == "central":
+            row = self.spec.ravel(params0)
+            return FLState(row, None, w0, skey, jnp.int32(0), losses0, ())
+        row = self.spec.ravel(params0)
+        bank = jnp.broadcast_to(row, (self.n, self.spec.dim))
+        mom = jnp.zeros((self.n, self.spec.dim), jnp.float32)
+        comp = self.compressor.init_state(self.n, self.spec.dim)
+        return FLState(bank, mom, w0, skey, jnp.int32(0), losses0, comp)
+
+    # -- mixing-matrix selection --------------------------------------------
+
+    def mixing_matrix(self, tkey: jax.Array, state: FLState) -> jnp.ndarray:
+        k_link = max(int(self.participation * self.n), 1)
+        if self.mixer.kind == "symmetric":
+            return topology.sample_symmetric_k_regular(tkey, self.n, k_link)
+        if self.selection:
+            return topology.sample_kout_selective(
+                tkey, state.losses, self.n, k_link
+            )
+        if self.exp_cycle is not None:
+            # Time-varying exponential graph: round t uses cycle[t % hops].
+            hops = self.exp_cycle.shape[0]
+            return self.exp_cycle[jnp.mod(state.round, hops)]
+        return topology.sample_mixing(tkey, self.topo, t=0)
+
+    # -- one communication round --------------------------------------------
+
+    def step(self, state: FLState):
+        lr = self.lr * self.lr_decay ** state.round.astype(jnp.float32)
+        keys = jax.random.split(state.key, 2 + self.n)
+        key, tkey, ckeys = keys[0], keys[1], keys[2:]
+        if self.mixer.kind == "central":
+            return self._central_step(state, lr, key, tkey, ckeys)
+
+        X, V, losses, accs = self.solver.update(
+            self.loss_fn, self.spec, state.params, state.w, ckeys,
+            self.data, lr
+        )
+        comp, X = self.compressor.apply(state.comp, X)
+        P = self.mixing_matrix(tkey, state)
+        X, w_new = self.mixer.mix(P, X, state.w)
+        new_state = FLState(
+            X, V, w_new, key, state.round + 1, losses, comp
+        )
+        return new_state, {"loss": losses.mean(), "acc": accs.mean()}
+
+    def _central_step(self, state: FLState, lr, key, tkey, ckeys):
+        m = max(int(self.participation * self.n), 1)
+        sel = jax.random.permutation(tkey, self.n)[:m]
+        data_sel = jax.tree.map(lambda d: d[sel], self.data)
+        Xrep = jnp.broadcast_to(state.params, (m,) + state.params.shape)
+        ones = jnp.ones((m,), jnp.float32)
+        X, _, losses, accs = self.solver.update(
+            self.loss_fn, self.spec, Xrep, ones, ckeys[:m], data_sel, lr
+        )
+        new_params = self.mixer.reduce(X)
+        new_state = FLState(
+            new_params, state.mom, state.w, key, state.round + 1,
+            state.losses, state.comp
+        )
+        return new_state, {"loss": losses.mean(), "acc": accs.mean()}
+
+    # -- whole training runs inside one jit ---------------------------------
+
+    def run(self, state: FLState, rounds: int):
+        """``lax.scan`` ``rounds`` steps; returns (state, stacked metrics)."""
+        return jax.lax.scan(
+            lambda s, _: self.step(s), state, None, length=rounds
+        )
+
+
+def make_program(
+    loss_fn: Callable,
+    init_fn: Callable,
+    client_data,
+    algo,
+    topo: topology.TopologyConfig,
+    participation: float = 0.1,
+) -> RoundProgram:
+    """Compose an ``AlgoConfig`` into a :class:`RoundProgram`.
+
+    The bank spec is built from ``jax.eval_shape`` of ``init_fn`` — no
+    parameters are materialized here; ``program.init`` owns that.
+    """
+    solver, compressor, mixer = make_stages(algo)
+    if mixer.kind == "central" and not isinstance(
+        compressor, IdentityCompressor
+    ):
+        # The central round has no gossip step to compress; silently
+        # training uncompressed would misreport communication savings.
+        raise ValueError(
+            "central (server) rounds do not model compressed communication; "
+            f"drop compressor={algo.compressor!r}/quantize_gossip"
+        )
+    spec = make_spec(jax.eval_shape(init_fn, jax.random.PRNGKey(0)))
+    # Exponential graphs cycle through log2(n) hop matrices; precompute
+    # the stack once so the (traced) round index can select the graph.
+    exp_cycle = (
+        topology.exponential_cycle(topo.n_clients)
+        if topo.kind == "exponential" and topo.time_varying
+        else None
+    )
+    return RoundProgram(
+        solver=solver,
+        compressor=compressor,
+        mixer=mixer,
+        loss_fn=loss_fn,
+        init_fn=init_fn,
+        data=client_data,
+        topo=topo,
+        spec=spec,
+        n=topo.n_clients,
+        participation=participation,
+        lr=algo.lr,
+        lr_decay=algo.lr_decay,
+        selection=algo.selection,
+        exp_cycle=exp_cycle,
+    )

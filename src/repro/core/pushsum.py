@@ -23,41 +23,29 @@ __all__ = [
 ]
 
 
-def gossip(P: jnp.ndarray, stacked_params, use_kernel: bool = False):
+def gossip(P: jnp.ndarray, stacked_params, use_kernel: bool | None = None):
     """One mixing step ``X' = P @ X`` applied leaf-wise to a client-stacked
-    pytree (every leaf has leading dim n)."""
-    if use_kernel:
-        from repro.kernels import ops as kops
+    pytree (every leaf has leading dim n).  Backend selection is shared with
+    the bank path via :func:`repro.kernels.ops.gossip_mix`; pass
+    ``use_kernel=False`` to pin the kernel-free oracle."""
+    from repro.kernels import ops as kops
 
-        def mix(x):
-            flat = x.reshape(x.shape[0], -1)
-            out = kops.gossip_matmul(P.astype(flat.dtype), flat)
-            return out.reshape(x.shape)
-    else:
-        def mix(x):
-            flat = x.reshape(x.shape[0], -1)
-            out = jnp.einsum(
-                "ij,jd->id", P, flat.astype(jnp.float32),
-                precision=jax.lax.Precision.HIGHEST,
-            )
-            return out.astype(x.dtype).reshape(x.shape)
+    def mix(x):
+        flat = x.reshape(x.shape[0], -1)
+        return kops.gossip_mix(P, flat, use_kernel).reshape(x.shape)
 
     return jax.tree.map(mix, stacked_params)
 
 
 def gossip_bank(P: jnp.ndarray, X: jnp.ndarray,
-                use_kernel: bool = True) -> jnp.ndarray:
+                use_kernel: bool | None = None) -> jnp.ndarray:
     """One mixing step ``X' = P @ X`` on the flat (n, D) parameter bank —
-    the entire model in a single matmul (Pallas kernel by default)."""
-    if use_kernel:
-        from repro.kernels import ops as kops
+    the entire model in a single matmul.  Backend selection is shared with
+    the pytree path via :func:`repro.kernels.ops.gossip_mix` (the Pallas
+    kernel whenever the bank is big enough to amortize it)."""
+    from repro.kernels import ops as kops
 
-        return kops.gossip_matmul(P.astype(jnp.float32), X)
-    out = jnp.einsum(
-        "ij,jd->id", P, X.astype(jnp.float32),
-        precision=jax.lax.Precision.HIGHEST,
-    )
-    return out.astype(X.dtype)
+    return kops.gossip_mix(P, X, use_kernel)
 
 
 def gossip_weights(P: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:

@@ -1,0 +1,312 @@
+"""Composable round stages: LocalSolver / Compressor / Mixer.
+
+Algorithm 1 of the paper is three stages, and so is every DFL variant in
+the related work — same round, different stage:
+
+  LocalSolver   lines 4-11: K local iterations over the flat (n, D) bank
+                (SAM two-pass gradients + momentum; plain SGD and a
+                FedProx-style proximal solver are drop-in swaps).
+  Compressor    what leaves the client before communication: identity,
+                per-row int8 quantize/dequantize, or top-k sparsification
+                with error feedback (persistent residual state).
+  Mixer         lines 12-14: push-sum over a directed column-stochastic
+                matrix, doubly-stochastic symmetric gossip (DFedSAM), or a
+                central server reduce (FedAvg).
+
+Every stage is a frozen config dataclass with a pure ``init_state`` /
+``apply``-style method pair operating on the flat ``(n_clients, D)`` bank,
+so the Pallas ``gossip_matmul`` / ``fused_update`` kernels stay the hot
+path and any composition is jittable and ``lax.scan``-able end to end.
+``repro.core.program`` wires three stages into a round program; the
+``SOLVERS`` / ``COMPRESSORS`` / ``MIXERS`` registries map ``AlgoConfig``
+fields to stage instances.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pushsum
+from repro.core.sam import sam_gradient
+from repro.kernels import ops as kops
+
+__all__ = [
+    "SamMomentumSolver",
+    "ProximalSolver",
+    "IdentityCompressor",
+    "Int8RowCompressor",
+    "TopKEFCompressor",
+    "PushSumMixer",
+    "SymmetricMixer",
+    "CentralMixer",
+    "SOLVERS",
+    "COMPRESSORS",
+    "MIXERS",
+    "make_stages",
+]
+
+
+def _sample_batch(data: dict, key: jax.Array, batch_size: int):
+    m = data["x"].shape[0]
+    idx = jax.random.randint(key, (batch_size,), 0, m)
+    return {k: v[idx] for k, v in data.items()}
+
+
+# ---------------------------------------------------------------------------
+# LocalSolver: (X, w, keys, data, lr) -> (X, V, losses, accs) on the bank.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SamMomentumSolver:
+    """Algorithm 1 lines 4-11 for all clients at once: gradients are vmapped
+    over bank rows, the momentum/descent/de-bias step is one fused kernel
+    call on the whole bank.  ``rho=0`` degrades to a single gradient pass,
+    ``alpha=0`` to plain SGD (the momentum bank drops out of the carry)."""
+
+    local_steps: int = 5
+    batch_size: int = 32
+    rho: float = 0.0
+    alpha: float = 0.0
+
+    def _grad_one(self, loss_fn, spec):
+        def grad_one(x_i, w_i, key_i, data_i):
+            key_i, bk = jax.random.split(key_i)
+            batch = _sample_batch(data_i, bk, self.batch_size)
+            # Unravel OUTSIDE the differentiated closure, fusing the line-5
+            # de-bias into the leaf slices; the gradient stays leaf-shaped
+            # (no scatter back into a (D,) row per leaf) and is ravelled
+            # once — one contiguous write per client.
+            z_tree = jax.tree.map(lambda p: p / w_i, spec.unravel(x_i))
+            g_tree, (loss, acc) = sam_gradient(
+                loss_fn, z_tree, batch, self.rho
+            )  # lines 6-8
+            return key_i, g_tree, loss, acc
+
+        return grad_one
+
+    def update(self, loss_fn, spec, X, w, keys, data, lr):
+        grad_one = self._grad_one(loss_fn, spec)
+        V0 = jnp.zeros_like(X, jnp.float32)
+
+        if self.alpha == 0.0:
+            # Momentum off: v' = g exactly, so the momentum bank is never
+            # read — keep it out of the scan carry and let XLA fold
+            # ``0 * 0 + g`` and DCE the v write on the CPU inline path.
+            zeros = jnp.zeros(X.shape, jnp.float32)
+
+            def step0(carry, _):
+                X, ks = carry
+                ks, G_tree, losses, accs = jax.vmap(grad_one)(X, w, ks, data)
+                G = spec.ravel_stacked(G_tree)  # one contiguous write
+                X, _, _ = kops.fused_update_bank(X, zeros, G, 0.0, lr, w)
+                return (X, ks), (losses, accs)
+
+            (X, _), (losses, accs) = jax.lax.scan(
+                step0, (X, keys), None, length=self.local_steps
+            )
+            return X, V0, losses.mean(axis=0), accs.mean(axis=0)
+
+        def step(carry, _):
+            X, V, ks = carry
+            ks, G_tree, losses, accs = jax.vmap(grad_one)(X, w, ks, data)
+            G = spec.ravel_stacked(G_tree)  # one contiguous write
+            # Lines 9-11 fused over the whole bank.  The de-biased z output
+            # feeds the next TPU iteration from VMEM; on the CPU inline
+            # path it is unused here and dead-code eliminated.
+            X, V, _ = kops.fused_update_bank(X, V, G, self.alpha, lr, w)
+            return (X, V, ks), (losses, accs)
+
+        (X, V, _), (losses, accs) = jax.lax.scan(
+            step, (X, V0, keys), None, length=self.local_steps
+        )
+        return X, V, losses.mean(axis=0), accs.mean(axis=0)
+
+
+@dataclasses.dataclass(frozen=True)
+class ProximalSolver(SamMomentumSolver):
+    """FedProx-style local objective f_i(x) + (mu/2) ||x - x_round||^2
+    (Li et al. 2020; DFedADMM's dual-constrained solver is the same shape).
+    The proximal pull is applied directly on the bank — ``G += mu (X - X0)``
+    with X0 the round-start bank — so it composes with any mixer."""
+
+    mu: float = 0.01
+
+    def update(self, loss_fn, spec, X, w, keys, data, lr):
+        grad_one = self._grad_one(loss_fn, spec)
+        X0 = X  # round-start reference, constant through the local scan
+        V0 = jnp.zeros_like(X, jnp.float32)
+
+        def step(carry, _):
+            X, V, ks = carry
+            ks, G_tree, losses, accs = jax.vmap(grad_one)(X, w, ks, data)
+            G = spec.ravel_stacked(G_tree)
+            G = G + self.mu * (X - X0).astype(G.dtype)
+            X, V, _ = kops.fused_update_bank(X, V, G, self.alpha, lr, w)
+            return (X, V, ks), (losses, accs)
+
+        (X, V, _), (losses, accs) = jax.lax.scan(
+            step, (X, V0, keys), None, length=self.local_steps
+        )
+        return X, V, losses.mean(axis=0), accs.mean(axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Compressor: init_state(n, d) -> state; apply(state, X) -> (state, X').
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class IdentityCompressor:
+    """No-op communication stage (full-precision gossip)."""
+
+    stateful = False
+
+    def init_state(self, n: int, d: int):
+        return ()
+
+    def apply(self, state, X):
+        return state, X
+
+
+@dataclasses.dataclass(frozen=True)
+class Int8RowCompressor:
+    """Int8 symmetric quantization with one scale per client row of the
+    flat bank — tighter than a per-leaf global scale."""
+
+    stateful = False
+
+    def init_state(self, n: int, d: int):
+        return ()
+
+    def apply(self, state, X):
+        Xf = X.astype(jnp.float32)
+        scale = jnp.max(jnp.abs(Xf), axis=1, keepdims=True) / 127.0 + 1e-12
+        q = jnp.clip(jnp.round(Xf / scale), -127, 127)
+        return state, (q * scale).astype(X.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKEFCompressor:
+    """Per-row top-k sparsification with error feedback (Stich et al. 2018).
+
+    Each round the residual of what was dropped is carried in a float32
+    ``(n, D)`` state bank and added back before the next top-k, so the
+    compressed stream is unbiased in the long run:
+    ``compressed + residual' == X + residual`` holds exactly.
+    ``ratio`` is the kept fraction of coordinates per row (k = ratio * D).
+    """
+
+    ratio: float = 0.05
+    stateful = True
+
+    def init_state(self, n: int, d: int):
+        return jnp.zeros((n, d), jnp.float32)
+
+    def apply(self, state, X):
+        y = X.astype(jnp.float32) + state
+        k = max(int(self.ratio * y.shape[1]), 1)
+        mag = jnp.abs(y)
+        kth = jax.lax.top_k(mag, k)[0][:, -1:]
+        mask = mag >= kth  # ties may keep a few extra coords — still sparse
+        Xc = y * mask
+        return y - Xc, Xc.astype(X.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mixer: init_weights(n) -> w; mix(P, X, w) -> (X', w').
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PushSumMixer:
+    """Directed column-stochastic gossip + push-sum weight mixing
+    (Algorithm 1 lines 12-14): X' = P X, w' = P w."""
+
+    kind = "directed"
+
+    def init_weights(self, n: int):
+        return jnp.ones((n,), jnp.float32)
+
+    def mix_weights(self, P, w):
+        return pushsum.gossip_weights(P, w)
+
+    def mix(self, P, X, w):
+        return pushsum.gossip_bank(P, X), self.mix_weights(P, w)
+
+
+@dataclasses.dataclass(frozen=True)
+class SymmetricMixer:
+    """Doubly-stochastic gossip over an undirected graph (DFedAvg /
+    DFedSAM family): X' = W X, push-sum weights stay all-ones."""
+
+    kind = "symmetric"
+
+    def init_weights(self, n: int):
+        return jnp.ones((n,), jnp.float32)
+
+    def mix_weights(self, P, w):
+        return w
+
+    def mix(self, P, X, w):
+        return pushsum.gossip_bank(P, X), self.mix_weights(P, w)
+
+
+@dataclasses.dataclass(frozen=True)
+class CentralMixer:
+    """Central-server round (FedAvg): the sampled clients' rows are averaged
+    into the single global row; no mixing matrix, no push-sum weights."""
+
+    kind = "central"
+
+    def init_weights(self, n: int):
+        return jnp.ones((n,), jnp.float32)
+
+    def reduce(self, X):
+        return X.mean(axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Registries: AlgoConfig -> stage instances.
+# ---------------------------------------------------------------------------
+
+SOLVERS = {
+    # Algorithm 1 inner loop; rho/alpha = 0 recover SGD+momentum / SAM-only.
+    "sam_momentum": lambda a: SamMomentumSolver(
+        a.local_steps, a.batch_size, a.rho, a.alpha),
+    # Plain SGD regardless of the config's rho/alpha knobs.
+    "sgd": lambda a: SamMomentumSolver(a.local_steps, a.batch_size, 0.0, 0.0),
+    # FedProx-style proximal local objective (uses a.prox_mu).
+    "proximal": lambda a: ProximalSolver(
+        a.local_steps, a.batch_size, a.rho, a.alpha, a.prox_mu),
+}
+
+COMPRESSORS = {
+    "identity": lambda a: IdentityCompressor(),
+    "int8_rows": lambda a: Int8RowCompressor(),
+    # getattr: configs without a topk_ratio field (e.g. the pod StepConfig)
+    # still resolve, so the stateful-compressor rejection can fire with its
+    # own message instead of an AttributeError.
+    "topk_ef": lambda a: TopKEFCompressor(getattr(a, "topk_ratio", 0.05)),
+}
+
+MIXERS = {
+    "directed": lambda a: PushSumMixer(),
+    "symmetric": lambda a: SymmetricMixer(),
+    "central": lambda a: CentralMixer(),
+}
+
+
+def make_stages(algo):
+    """Resolve an ``AlgoConfig`` into its (solver, compressor, mixer)
+    composition.  ``algo.comm`` selects the mixer; ``quantize_gossip`` is the
+    legacy spelling of ``compressor="int8_rows"``."""
+    comp_name = algo.compressor
+    if comp_name == "identity" and algo.quantize_gossip:
+        comp_name = "int8_rows"
+    try:
+        solver = SOLVERS[algo.solver](algo)
+        compressor = COMPRESSORS[comp_name](algo)
+        mixer = MIXERS[algo.comm](algo)
+    except KeyError as e:
+        raise ValueError(f"unknown stage {e.args[0]!r} in {algo}") from None
+    return solver, compressor, mixer

@@ -17,6 +17,7 @@ from repro.kernels.gossip_matmul import gossip_matmul_pallas
 
 __all__ = [
     "gossip_matmul",
+    "gossip_mix",
     "fused_update",
     "fused_update_bank",
     "flash_attention",
@@ -26,6 +27,34 @@ __all__ = [
 
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+# Below this many elements the per-call overhead of the interpret-mode
+# kernel dominates on CPU and the plain einsum wins; on TPU the Mosaic
+# kernel is always the right choice.  One threshold, one place.
+_GOSSIP_KERNEL_MIN_ELEMS = 1 << 20
+
+
+def gossip_mix(P, M, use_kernel: bool | None = None):
+    """One mixing matmul ``M' = P @ M`` with centralized backend selection.
+
+    Every gossip call site (flat bank, per-leaf pytree, pod replicas)
+    routes through here.  ``use_kernel=None`` (the default everywhere)
+    resolves automatically: the Pallas kernel on TPU, and on CPU only when
+    ``M`` is large enough to amortize interpret-mode overhead — instead of
+    each call site hard-coding its own boolean.
+    """
+    import jax.numpy as jnp
+
+    if use_kernel is None:
+        use_kernel = on_tpu() or M.size >= _GOSSIP_KERNEL_MIN_ELEMS
+    if use_kernel:
+        return gossip_matmul(P.astype(jnp.float32), M)
+    out = jnp.einsum(
+        "ij,jd->id", P, M.astype(jnp.float32),
+        precision=jax.lax.Precision.HIGHEST,
+    )
+    return out.astype(M.dtype)
 
 
 def gossip_matmul(P, X, **kw):

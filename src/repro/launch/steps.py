@@ -38,6 +38,10 @@ class StepConfig:
     # a checkpointed scan over batch chunks, so the live activation set is
     # one chunk (peak memory / microbatches), at no extra HBM traffic.
     microbatches: int = 1
+    # Communication stage for the pod gossip — a ``repro.core.stages``
+    # COMPRESSORS name.  Stateless compressors only (the pod round carries
+    # no compressor state across rounds).
+    compressor: str = "identity"
 
 
 def _microbatched_loss(loss_fn, n_micro: int):
@@ -82,7 +86,11 @@ def make_train_step(api: ModelApi, step_cfg: StepConfig) -> Callable:
 
 
 def make_round_step(
-    api: ModelApi, step_cfg: StepConfig, flat_mix: bool = True
+    api: ModelApi,
+    step_cfg: StepConfig,
+    flat_mix: bool = True,
+    mixer=None,
+    compressor=None,
 ) -> Callable:
     """Multi-pod DFL round: (stacked params, stacked v, w (n_pods,),
     batch (n_pods, ...), P_pod (n_pods, n_pods)) -> updated + mean loss.
@@ -91,12 +99,35 @@ def make_round_step(
     ``spmd_axis_name`` threads that axis through all internal sharding
     constraints so each pod's replica stays pod-local during local compute.
 
-    With ``flat_mix`` (default) the gossip is the same flat-bank primitive
-    the simulation engine uses: replicas are ravelled into an
-    ``(n_pods, D)`` bank and mixed with one ``gossip_matmul`` kernel call
-    instead of a per-leaf einsum.
+    The communication step is the same Compressor / Mixer stage pair the
+    simulation engine composes (``repro.core.stages``): with ``flat_mix``
+    (default) replicas are ravelled into an ``(n_pods, D)`` bank, run
+    through ``compressor.apply`` (``step_cfg.compressor`` when not given
+    explicitly; stateless only — the pod round carries no compressor state),
+    and mixed with one ``mixer.mix`` call — the flat ``gossip_matmul``
+    kernel — instead of a per-leaf einsum.  ``mixer`` defaults to the
+    directed push-sum stage; a ``SymmetricMixer`` swaps in doubly-stochastic
+    gossip with fixed weights.
     """
+    from repro.core.stages import COMPRESSORS, IdentityCompressor, PushSumMixer
+
     local = make_train_step(api, step_cfg)
+    mixer = mixer if mixer is not None else PushSumMixer()
+    if compressor is None:
+        try:
+            compressor = COMPRESSORS[step_cfg.compressor](step_cfg)
+        except KeyError:
+            raise ValueError(
+                f"unknown compressor stage {step_cfg.compressor!r}; "
+                f"choose from {sorted(COMPRESSORS)}"
+            ) from None
+    if compressor.stateful:
+        raise ValueError(
+            "the pod round carries no compressor state across rounds; "
+            f"use a stateless compressor, not {type(compressor).__name__}"
+        )
+    if not flat_mix and not isinstance(compressor, IdentityCompressor):
+        raise ValueError("compression requires flat_mix=True (bank layout)")
 
     def one_pod(params, v, w, batches):
         def body(carry, batch):
@@ -107,10 +138,9 @@ def make_round_step(
         (params, v), losses = jax.lax.scan(body, (params, v), batches)
         return params, v, losses.mean()
 
-    def mix_flat(params, P_pod):
+    def mix_flat(params, w, P_pod):
         from jax.sharding import NamedSharding, PartitionSpec
         from repro.core.flat import make_spec
-        from repro.kernels import ops as kops
         from repro.launch import sharding as shlib
 
         # Spec from the per-pod row view; only static shape/dtype is read.
@@ -130,24 +160,25 @@ def make_round_step(
         )
         if row_sharding is not None:
             bank = jax.lax.with_sharding_constraint(bank, row_sharding)
-        bank = kops.gossip_matmul(P_pod.astype(jnp.float32), bank)
+        _, bank = compressor.apply((), bank)
+        bank, w = mixer.mix(P_pod, bank, w)
         if row_sharding is not None:
             bank = jax.lax.with_sharding_constraint(bank, row_sharding)
-        return spec.unravel_stacked(bank)
+        return spec.unravel_stacked(bank), w
 
-    def mix_leafwise(params, P_pod):
+    def mix_leafwise(params, w, P_pod):
         def mix(x):
             return jnp.einsum(
                 "ij,j...->i...", P_pod, x.astype(jnp.float32)).astype(x.dtype)
 
-        return jax.tree.map(mix, params)
+        params = jax.tree.map(mix, params)
+        return params, mixer.mix_weights(P_pod, w)
 
     def round_step(params, v, w, batch, P_pod):
         params, v, loss = jax.vmap(one_pod, spmd_axis_name="pod")(
             params, v, w, batch)
-        # push-sum gossip over "pod"
-        params = (mix_flat if flat_mix else mix_leafwise)(params, P_pod)
-        w = P_pod @ w
+        # compress + gossip over "pod" (same stages as the engine)
+        params, w = (mix_flat if flat_mix else mix_leafwise)(params, w, P_pod)
         return params, v, w, loss.mean()
 
     return round_step

@@ -13,6 +13,8 @@ import argparse
 import os
 import time
 
+import numpy as np
+
 
 def main():
     ap = argparse.ArgumentParser()
@@ -25,10 +27,16 @@ def main():
     ap.add_argument("--alpha", type=float, default=0.9)
     ap.add_argument("--rho", type=float, default=0.05)
     ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compress", default="identity",
+                    help="pod gossip compressor (stateless stage name, "
+                         "e.g. int8_rows)")
     ap.add_argument("--smoke", action="store_true", help="reduced config")
     ap.add_argument("--host-mesh", action="store_true",
                     help="(2,2,2) mesh over 8 forced host devices")
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true",
+                    help="warm-restart from the latest checkpoint in "
+                         "--ckpt-dir (params + momentum + w + round)")
     args = ap.parse_args()
 
     if args.host_mesh and "xla_force_host_platform_device_count" not in \
@@ -56,7 +64,8 @@ def main():
     api = get_model_api(cfg)
     step_cfg = StepConfig(lr=args.lr, alpha=args.alpha, rho=args.rho,
                           local_steps=args.local_steps,
-                          microbatches=args.microbatches)
+                          microbatches=args.microbatches,
+                          compressor=args.compress)
     round_step = jax.jit(make_round_step(api, step_cfg), donate_argnums=(0, 1))
 
     with shlib.use_mesh(mesh, fsdp=cfg.fsdp):
@@ -80,9 +89,29 @@ def main():
         toks = toks.reshape(args.rounds, n_pods, args.local_steps,
                             args.batch, args.seq)
 
+        start = 0
+        if args.resume and args.ckpt_dir:
+            path = checkpoint.latest_checkpoint(args.ckpt_dir)
+            if path is not None:
+                like = {"params": params, "v": v, "w": w,
+                        "round": np.zeros((), np.int32)}
+                restored = checkpoint.restore(path, like=like)
+                # Re-pin the restored (host) arrays to the live shardings so
+                # the warm restart costs one device_put, not a re-partition.
+                params = jax.tree.map(
+                    lambda x, ref: jax.device_put(jnp.asarray(x), ref.sharding),
+                    restored["params"], params)
+                v = jax.tree.map(
+                    lambda x, ref: jax.device_put(jnp.asarray(x), ref.sharding),
+                    restored["v"], v)
+                w = jnp.asarray(restored["w"])
+                start = int(restored["round"]) + 1
+                print(f"[train] resumed {path} at round {start} "
+                      f"(momentum bank restored)")
+
         print(f"[train] {cfg.name} | {n_pods} pods x {mesh.shape} | "
               f"K={args.local_steps} rho={args.rho} alpha={args.alpha}")
-        for r in range(args.rounds):
+        for r in range(start, args.rounds):
             t0 = time.time()
             params, v, w, loss = round_step(params, v, w,
                                             {"tokens": toks[r]}, P_pod)
@@ -90,7 +119,11 @@ def main():
                   f"w_mass={float(w.sum()):.4f} dt={time.time() - t0:.2f}s",
                   flush=True)
             if args.ckpt_dir and (r + 1) % 5 == 0:
-                checkpoint.save(args.ckpt_dir, r, {"params": params, "w": w})
+                # Full round state — momentum bank and round index included,
+                # so restarts of momentum-persistent variants stay warm.
+                checkpoint.save(args.ckpt_dir, r,
+                                {"params": params, "v": v, "w": w,
+                                 "round": np.int32(r)})
         assert abs(float(w.sum()) - n_pods) < 1e-3
 
 

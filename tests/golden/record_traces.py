@@ -1,0 +1,62 @@
+"""Record the golden per-round metrics trace for every registry algorithm.
+
+Run from the repo root to (re)generate ``round_traces.json``::
+
+    PYTHONPATH=src python tests/golden/record_traces.py
+
+The recorded traces pin the round engine's numerics: the stage-composition
+test (``tests/test_stages.py``) replays every algorithm and requires the
+per-round loss/acc to match these values to float tolerance.  The file in
+git was recorded from the pre-redesign monolithic engine (PR 1), so it is
+the ground truth that the composable round program reproduces the legacy
+engine bit-for-bit (up to float reassociation).
+"""
+import json
+import os
+
+import jax.numpy as jnp
+
+from repro.core import ALGORITHMS, FLTrainer, TopologyConfig, make_algo
+from repro.data.dirichlet import dirichlet_partition, stack_client_data
+from repro.data.synthetic import make_dataset
+from repro.models.small import mnist_2nn
+
+N_CLIENTS = 8
+ROUNDS = 3
+
+
+def build_setting():
+    train, _ = make_dataset("mnist", 1200, 100, seed=0)
+    parts = dirichlet_partition(train["y"], N_CLIENTS, alpha=0.3, seed=0)
+    cdata = stack_client_data(train, parts, pad_to=128)
+    return mnist_2nn(), {k: jnp.asarray(v) for k, v in cdata.items()}
+
+
+def main():
+    model, cdata = build_setting()
+    topo = TopologyConfig(kind="kout", n_clients=N_CLIENTS, k_out=2)
+    traces = {}
+    for name in sorted(ALGORITHMS):
+        algo = make_algo(name, local_steps=3, batch_size=32)
+        tr = FLTrainer(model.loss, model.init, cdata, algo, topo, seed=0,
+                       participation=0.25)
+        rounds = []
+        for _ in range(ROUNDS):
+            m = tr.run_round()
+            rounds.append({"loss": float(m["loss"]), "acc": float(m["acc"])})
+        traces[name] = {
+            "rounds": rounds,
+            "w": [float(x) for x in jnp.ravel(tr.state.w)],
+        }
+    out = os.path.join(os.path.dirname(__file__), "round_traces.json")
+    with open(out, "w") as f:
+        json.dump(
+            {"n_clients": N_CLIENTS, "local_steps": 3, "batch_size": 32,
+             "participation": 0.25, "topology": "kout/k=2", "seed": 0,
+             "traces": traces},
+            f, indent=1)
+    print("wrote", out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,335 @@
+"""The composable round-program API: golden equivalence of every registry
+algorithm with the pre-redesign engine trace, the pure init/step core under
+lax.scan, compressor stage properties, and full-FLState checkpointing."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # graceful tier-1 degradation (see tests/_hyp.py)
+    from _hyp import given, settings, st
+
+from repro import checkpoint
+from repro.core import (
+    ALGORITHMS,
+    COMPRESSORS,
+    FLTrainer,
+    MIXERS,
+    SOLVERS,
+    TopologyConfig,
+    make_algo,
+    make_program,
+    make_stages,
+)
+from repro.core.stages import (
+    CentralMixer,
+    IdentityCompressor,
+    Int8RowCompressor,
+    PushSumMixer,
+    SamMomentumSolver,
+    SymmetricMixer,
+    TopKEFCompressor,
+)
+from repro.data.dirichlet import dirichlet_partition, stack_client_data
+from repro.data.synthetic import make_dataset
+from repro.models.small import mnist_2nn
+
+N_CLIENTS = 8
+
+_GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                       "round_traces.json")
+
+
+@pytest.fixture(scope="module")
+def setting():
+    train, _ = make_dataset("mnist", 1200, 100, seed=0)
+    parts = dirichlet_partition(train["y"], N_CLIENTS, alpha=0.3, seed=0)
+    cdata = stack_client_data(train, parts, pad_to=128)
+    return mnist_2nn(), {k: jnp.asarray(v) for k, v in cdata.items()}
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(_GOLDEN) as f:
+        return json.load(f)
+
+
+# ---------------------------------------------------------------------------
+# Every registry algorithm is a stage composition...
+# ---------------------------------------------------------------------------
+
+def test_registry_algorithms_resolve_to_stages():
+    kinds = {"directed": PushSumMixer, "symmetric": SymmetricMixer,
+             "central": CentralMixer}
+    for name, algo in ALGORITHMS.items():
+        solver, compressor, mixer = make_stages(algo)
+        assert isinstance(solver, SamMomentumSolver), name
+        assert isinstance(compressor, IdentityCompressor), name
+        assert isinstance(mixer, kinds[algo.comm]), name
+        assert (solver.rho, solver.alpha) == (algo.rho, algo.alpha)
+
+
+def test_quantize_gossip_is_int8_rows_composition():
+    _, comp, _ = make_stages(make_algo("dfedsgpsm", quantize_gossip=True))
+    assert isinstance(comp, Int8RowCompressor)
+    _, comp, _ = make_stages(make_algo("dfedsgpsm", compressor="topk_ef",
+                                       topk_ratio=0.1))
+    assert isinstance(comp, TopKEFCompressor) and comp.ratio == 0.1
+
+
+def test_unknown_stage_raises():
+    with pytest.raises(ValueError, match="unknown stage"):
+        make_stages(make_algo("dfedsgpsm", compressor="nope"))
+
+
+def test_central_rejects_compression(setting):
+    """FedAvg has no gossip step — a compressor there would silently
+    train uncompressed while claiming communication savings."""
+    model, cdata = setting
+    topo = TopologyConfig(kind="kout", n_clients=N_CLIENTS, k_out=2)
+    for bad in (make_algo("fedavg", compressor="topk_ef"),
+                make_algo("fedavg", quantize_gossip=True)):
+        with pytest.raises(ValueError, match="central"):
+            FLTrainer(model.loss, model.init, cdata, bad, topo)
+
+
+# ---------------------------------------------------------------------------
+# ...and reproduces the pre-redesign engine's metrics trace (golden).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(ALGORITHMS))
+def test_composition_matches_legacy_trace(setting, golden, name):
+    model, cdata = setting
+    algo = make_algo(name, local_steps=golden["local_steps"],
+                     batch_size=golden["batch_size"])
+    topo = TopologyConfig(kind="kout", n_clients=N_CLIENTS, k_out=2)
+    tr = FLTrainer(model.loss, model.init, cdata, algo, topo, seed=0,
+                   participation=golden["participation"])
+    want = golden["traces"][name]
+    for r, g in enumerate(want["rounds"]):
+        m = tr.run_round()
+        np.testing.assert_allclose(float(m["loss"]), g["loss"],
+                                   rtol=1e-4, atol=1e-5, err_msg=f"round {r}")
+        np.testing.assert_allclose(float(m["acc"]), g["acc"],
+                                   rtol=1e-3, atol=1e-4, err_msg=f"round {r}")
+    np.testing.assert_allclose(np.asarray(tr.state.w), np.asarray(want["w"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Pure functional core: lax.scan whole runs inside one jit, donated state.
+# ---------------------------------------------------------------------------
+
+def test_scan_20_rounds_one_jit(setting):
+    model, cdata = setting
+    algo = make_algo("dfedsgpsm", local_steps=2, batch_size=32)
+    topo = TopologyConfig(kind="kout", n_clients=N_CLIENTS, k_out=2)
+    program = make_program(model.loss, model.init, cdata, algo, topo,
+                           participation=0.25)
+    state = program.init(jax.random.PRNGKey(0))
+    run = jax.jit(lambda s: program.run(s, 20), donate_argnums=0)
+    state, hist = run(state)
+    assert int(state.round) == 20
+    assert hist["loss"].shape == (20,)
+    assert np.all(np.isfinite(np.asarray(hist["loss"])))
+    # training actually progresses inside the scan
+    assert float(hist["loss"][-1]) < float(hist["loss"][0])
+    # push-sum mass conserved through all 20 fused rounds
+    assert np.isclose(float(state.w.sum()), N_CLIENTS, atol=1e-3)
+
+
+def test_step_matches_trainer_round(setting):
+    """program.step == FLTrainer.run_round — the wrapper adds nothing."""
+    model, cdata = setting
+    algo = make_algo("dfedsgpsm", local_steps=2, batch_size=32)
+    topo = TopologyConfig(kind="kout", n_clients=N_CLIENTS, k_out=2)
+    tr = FLTrainer(model.loss, model.init, cdata, algo, topo, seed=0,
+                   participation=0.25)
+    program = tr.program
+    state = program.init(jax.random.PRNGKey(0))
+    for _ in range(2):
+        state, m_prog = program.step(state)
+        m_tr = tr.run_round()
+        np.testing.assert_allclose(float(m_prog["loss"]),
+                                   float(m_tr["loss"]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(state.params),
+                               np.asarray(tr.state.params),
+                               rtol=1e-6, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# Compressor stage properties.
+# ---------------------------------------------------------------------------
+
+_COMP_DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@given(st.integers(0, 999), st.integers(1, 12), st.integers(1, 64),
+       st.sampled_from(sorted(COMPRESSORS)), st.integers(0, 1))
+@settings(max_examples=20, deadline=None)
+def test_compressor_preserves_shape_dtype(seed, n, d, name, dti):
+    dtype = _COMP_DTYPES[dti]
+    algo = make_algo("dfedsgpsm", topk_ratio=0.25)
+    comp = COMPRESSORS[name](algo)
+    X = jax.random.normal(jax.random.PRNGKey(seed), (n, d), dtype)
+    state = comp.init_state(n, d)
+    state, Xc = comp.apply(state, X)
+    assert Xc.shape == X.shape and Xc.dtype == X.dtype
+    assert np.all(np.isfinite(np.asarray(Xc, np.float32)))
+
+
+@given(st.integers(0, 999), st.integers(1, 8), st.integers(2, 50),
+       st.floats(0.02, 0.9))
+@settings(max_examples=20, deadline=None)
+def test_topk_ef_residual_sums_to_signal(seed, n, d, ratio):
+    """compressed + residual' == X + residual — error feedback drops
+    nothing, it only defers."""
+    comp = TopKEFCompressor(ratio=ratio)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    X = jax.random.normal(ks[0], (n, d), jnp.float32)
+    resid = 0.1 * jax.random.normal(ks[1], (n, d), jnp.float32)
+    resid2, Xc = comp.apply(resid, X)
+    np.testing.assert_array_equal(
+        np.asarray(Xc + resid2), np.asarray(X + resid))
+    # sparsity: at most ~ratio of coords survive per row (ties aside)
+    k = max(int(ratio * d), 1)
+    nz = np.count_nonzero(np.asarray(Xc), axis=1)
+    assert np.all(nz <= d)
+    assert nz.mean() <= max(k + 1, 1) + 1e-9
+
+
+def test_topk_ef_converges_end_to_end(setting):
+    model, cdata = setting
+    algo = make_algo("dfedsgpsm", local_steps=2, batch_size=32,
+                     compressor="topk_ef", topk_ratio=0.1)
+    topo = TopologyConfig(kind="kout", n_clients=N_CLIENTS, k_out=2)
+    tr = FLTrainer(model.loss, model.init, cdata, algo, topo, seed=0,
+                   participation=0.25)
+    first = tr.run_round()
+    for _ in range(5):
+        last = tr.run_round()
+    assert float(last["loss"]) < float(first["loss"])
+    assert np.isclose(float(tr.state.w.sum()), N_CLIENTS, atol=1e-3)
+    assert np.any(np.asarray(tr.state.comp))  # residual bank is live
+
+
+# ---------------------------------------------------------------------------
+# Solver registry variants train.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("solver", ["sgd", "proximal"])
+def test_alternative_solvers_train(setting, solver):
+    model, cdata = setting
+    algo = make_algo("dfedsgpsm", local_steps=2, batch_size=32,
+                     solver=solver, prox_mu=0.1)
+    topo = TopologyConfig(kind="kout", n_clients=N_CLIENTS, k_out=2)
+    tr = FLTrainer(model.loss, model.init, cdata, algo, topo, seed=0,
+                   participation=0.25)
+    first = tr.run_round()
+    for _ in range(3):
+        last = tr.run_round()
+    assert float(last["loss"]) < float(first["loss"])
+
+
+# ---------------------------------------------------------------------------
+# Full-FLState checkpointing: warm restart is bit-warm, not just params.
+# ---------------------------------------------------------------------------
+
+def test_save_restore_full_state_resumes_identically(setting, tmp_path):
+    model, cdata = setting
+    algo = make_algo("dfedsgpsm", local_steps=2, batch_size=32,
+                     compressor="topk_ef")
+    topo = TopologyConfig(kind="kout", n_clients=N_CLIENTS, k_out=2)
+
+    def trainer():
+        return FLTrainer(model.loss, model.init, cdata, algo, topo, seed=0,
+                         participation=0.25)
+
+    tr = trainer()
+    tr.run_round()
+    tr.run_round()
+    path = tr.save(str(tmp_path), 2)
+    m_ref = tr.run_round()  # round 3 on the live trainer
+
+    tr2 = trainer()
+    state = tr2.restore(path)
+    assert int(state.round) == 2
+    assert state.comp.shape == tr.state.comp.shape  # EF residual restored
+    assert np.any(np.asarray(state.comp))
+    m_resumed = tr2.run_round()  # round 3 after a cold-process restart
+    np.testing.assert_allclose(float(m_resumed["loss"]),
+                               float(m_ref["loss"]), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(tr2.state.params),
+                               np.asarray(tr.state.params),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(tr2.state.w),
+                                  np.asarray(tr.state.w))
+
+
+def test_restore_rejects_compressor_state_mismatch(setting, tmp_path):
+    model, cdata = setting
+    topo = TopologyConfig(kind="kout", n_clients=N_CLIENTS, k_out=2)
+
+    def trainer(**kw):
+        algo = make_algo("dfedsgpsm", local_steps=1, batch_size=16, **kw)
+        return FLTrainer(model.loss, model.init, cdata, algo, topo, seed=0,
+                         participation=0.25)
+
+    plain = trainer()
+    plain.run_round()
+    p_plain = plain.save(str(tmp_path / "plain"), 1)
+    ef = trainer(compressor="topk_ef")
+    ef.run_round()
+    p_ef = ef.save(str(tmp_path / "ef"), 1)
+
+    with pytest.raises(ValueError, match="no compressor state"):
+        trainer(compressor="topk_ef").restore(p_plain)
+    with pytest.raises(ValueError, match="stateless"):
+        trainer().restore(p_ef)
+
+
+def test_restore_state_rejects_params_only_checkpoint(tmp_path):
+    from repro.core import make_spec
+
+    spec = make_spec({"a": jnp.zeros((3,))})
+    path = checkpoint.save_bank(str(tmp_path), 0, jnp.zeros((2, 3)), spec)
+    with pytest.raises(ValueError, match="full-FLState"):
+        checkpoint.restore_state(path, spec)
+
+
+# ---------------------------------------------------------------------------
+# Pod path consumes the same stages.
+# ---------------------------------------------------------------------------
+
+def test_pod_round_step_rejects_stateful_compressor():
+    from repro.configs.registry import get_config
+    from repro.launch.steps import StepConfig, make_round_step
+    from repro.models.registry import get_model_api
+
+    api = get_model_api(get_config("xlstm-350m", smoke=True))
+    with pytest.raises(ValueError, match="stateless"):
+        make_round_step(api, StepConfig(), compressor=TopKEFCompressor())
+    # ...also when the stateful stage arrives by StepConfig name
+    with pytest.raises(ValueError, match="stateless"):
+        make_round_step(api, StepConfig(compressor="topk_ef"))
+    with pytest.raises(ValueError, match="unknown compressor"):
+        make_round_step(api, StepConfig(compressor="bogus"))
+    with pytest.raises(ValueError, match="flat_mix"):
+        make_round_step(api, StepConfig(), flat_mix=False,
+                        compressor=Int8RowCompressor())
+
+
+def test_oracle_path_rejects_unrepresentable_compositions(setting):
+    """flat=False must never silently run a different algorithm than the
+    stage composition it is supposed to be the oracle for."""
+    model, cdata = setting
+    topo = TopologyConfig(kind="kout", n_clients=N_CLIENTS, k_out=2)
+    for bad in (make_algo("dfedsgpsm", solver="sgd"),
+                make_algo("dfedsgpsm", compressor="topk_ef")):
+        with pytest.raises(ValueError, match="oracle"):
+            FLTrainer(model.loss, model.init, cdata, bad, topo, flat=False)
