@@ -1,4 +1,5 @@
-"""End-to-end round timing: flat (n, D) bank path vs the seed pytree path.
+"""End-to-end round timing: flat (n, D) bank path vs the seed pytree path,
+and the jit-resident scanned superstep driver vs the per-round Python loop.
 
 The flat path runs the whole round through the Pallas kernels — one
 ``gossip_matmul`` for the entire model and one ``fused_update`` per inner
@@ -6,8 +7,10 @@ step — versus the seed's per-leaf einsum + three tree-mapped elementwise
 passes.  Benchmarks the paper's 16-client setting for the flagship
 DFedSGPSM and the DFedSAM baseline (Algorithm 1 with/without push-sum);
 their two-pass SAM gradients are the paper's hot path and amortize the
-bank <-> pytree boundary.  Emits min-of-N round times (robust to container
-scheduling noise) via ``common.emit``.
+bank <-> pytree boundary.  The scanned comparison times
+``program.run_superstep`` (all rounds in ONE dispatch, donated carry)
+against the same number of per-round jit dispatches.  Emits min-of-N round
+times (robust to container scheduling noise) via ``common.emit``.
 """
 from __future__ import annotations
 
@@ -23,7 +26,9 @@ from repro.core import FLTrainer, TopologyConfig, make_algo
 N_CLIENTS = 16
 
 # CI regression gate: the flat path must not lose more than this factor of
-# its recorded pytree-relative speedup (machine speed cancels in the ratio).
+# its recorded pytree-relative speedup, and the scanned superstep driver no
+# more than this factor of its recorded loop-relative speedup (machine
+# speed cancels in both ratios).
 SMOKE_TOLERANCE = 1.3
 BASELINE = os.path.join(os.path.dirname(__file__), "round_baseline.json")
 
@@ -38,6 +43,37 @@ def _time_rounds(tr: FLTrainer, rounds: int) -> float:
         tr.run_round()
         jax.block_until_ready(tr.state.params)
         best = min(best, 1e6 * (time.perf_counter() - t0))
+    return best
+
+
+def _time_loop(tr: FLTrainer, rounds: int, repeats: int = 3) -> float:
+    """Best us/round over ``repeats`` timed windows of ``rounds`` per-round
+    jit dispatches — the Python-loop driver's amortized cost."""
+    tr.run_round()
+    jax.block_until_ready(tr.state.params)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            tr.run_round()
+        jax.block_until_ready(tr.state.params)
+        best = min(best, 1e6 * (time.perf_counter() - t0) / rounds)
+    return best
+
+
+def _time_scanned(tr: FLTrainer, rounds: int, repeats: int = 3) -> float:
+    """Best us/round for ``program.run_superstep`` — the whole window of
+    rounds is one ``lax.scan`` inside one jit with donated carry."""
+    program = tr.program
+    state = program.init(jax.random.PRNGKey(0))
+    state, _ = program.run_superstep(state, rounds)  # compile + warmup
+    jax.block_until_ready(state.params)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        state, _ = program.run_superstep(state, rounds)
+        jax.block_until_ready(state.params)
+        best = min(best, 1e6 * (time.perf_counter() - t0) / rounds)
     return best
 
 
@@ -61,9 +97,24 @@ def main(fast: bool = False):
         emit(f"round/{name}/speedup", timings["pytree"] / timings["flat"],
              "pytree_us/flat_us (>=1 means flat is no slower)")
 
+    # Scanned superstep driver vs the per-round Python loop (flagship algo).
+    algo = make_algo("dfedsgpsm", local_steps=3, batch_size=32)
+    tr = FLTrainer(net.loss, net.init, cdata, algo, topo, seed=0,
+                   participation=0.25)
+    loop_us = _time_loop(tr, rounds)
+    scan_us = _time_scanned(tr, rounds)
+    emit("round/dfedsgpsm/loop", loop_us, f"n={N_CLIENTS},rounds={rounds},min")
+    emit("round/dfedsgpsm/scanned", scan_us,
+         f"n={N_CLIENTS},rounds={rounds},min,one-jit")
+    emit("round/dfedsgpsm/scan_speedup", loop_us / scan_us,
+         "loop_us/scanned_us (>=1 means the superstep driver is no slower)")
 
-def _smoke_speedup() -> float:
-    """pytree_us / flat_us for the flagship algorithm, min-of-N rounds."""
+
+def _smoke_speedups() -> dict:
+    """Both gate ratios for the flagship algorithm at the recorded sizes:
+    ``speedup`` = pytree_us/flat_us (the flat bank must not regress) and
+    ``scan_speedup`` = loop_us/scanned_us (the superstep driver must not be
+    slower than the per-round Python loop)."""
     net, cdata, _ = build_setting(
         dataset="mnist", n_clients=N_CLIENTS, samples_per_client=128)
     topo = TopologyConfig(
@@ -75,42 +126,81 @@ def _smoke_speedup() -> float:
                        participation=0.25, flat=(path == "flat"))
         timings[path] = _time_rounds(tr, 8)
         emit(f"round/smoke/{path}", timings[path], "n=16,rounds=8,min")
-    return timings["pytree"] / timings["flat"]
+    tr = FLTrainer(net.loss, net.init, cdata, algo, topo, seed=0,
+                   participation=0.25)
+    loop_us = _time_loop(tr, 8)
+    scan_us = _time_scanned(tr, 8)
+    emit("round/smoke/loop", loop_us, "n=16,rounds=8,min")
+    emit("round/smoke/scanned", scan_us, "n=16,rounds=8,min,one-jit")
+    return {"speedup": timings["pytree"] / timings["flat"],
+            "scan_speedup": loop_us / scan_us}
 
 
-def smoke(record: bool = False) -> int:
-    """CI gate: compare the flat path's pytree-relative speedup against the
-    recorded baseline.  Absolute round times vary wildly across runners;
-    the ratio of the two paths measured back-to-back on the same box does
-    not, so a >SMOKE_TOLERANCE drop means the flat path itself regressed.
-    ``record`` rewrites the baseline instead (run on a quiet machine)."""
-    speedup = _smoke_speedup()
-    emit("round/smoke/speedup", speedup, "pytree_us/flat_us")
+def smoke(record: bool = False, json_out: str | None = None) -> int:
+    """CI gate: compare the flat path's pytree-relative speedup AND the
+    scanned superstep driver's loop-relative speedup against the recorded
+    baselines.  Absolute round times vary wildly across runners; ratios of
+    two paths measured back-to-back on the same box do not, so a
+    >SMOKE_TOLERANCE drop means the path itself regressed.  ``record``
+    rewrites the baseline instead (run on a quiet machine); ``json_out``
+    additionally writes the measured ratios + verdicts as JSON (uploaded as
+    a CI artifact)."""
+    measured = _smoke_speedups()
+    emit("round/smoke/speedup", measured["speedup"], "pytree_us/flat_us")
+    emit("round/smoke/scan_speedup", measured["scan_speedup"],
+         "loop_us/scanned_us")
     if record:
-        # Record the MINIMUM of this and any previously recorded speedup —
+        # Record the MINIMUM of this and any previously recorded ratio —
         # the gate floor must clear runner noise, and a single quiet-box
         # run would otherwise tighten it to the point of flaking.
-        note = ("pytree_us/flat_us, min over recorded runs; the gate floor "
-                "is speedup/tolerance - repeat --record to widen")
+        note = ("pytree_us/flat_us + loop_us/scanned_us, min over recorded "
+                "runs; each gate floor is ratio/tolerance - repeat --record "
+                "to widen")
+        recorded = dict(measured)
         if os.path.exists(BASELINE):
             with open(BASELINE) as f:
                 prev = json.load(f)
-            speedup = min(speedup, prev.get("speedup", speedup))
+            for key in recorded:
+                recorded[key] = min(recorded[key],
+                                    prev.get(key, recorded[key]))
             note = prev.get("note", note)
         with open(BASELINE, "w") as f:
             json.dump({"algo": "dfedsgpsm", "n_clients": N_CLIENTS,
-                       "speedup": round(speedup, 4),
+                       **{k: round(v, 4) for k, v in recorded.items()},
                        "tolerance": SMOKE_TOLERANCE, "note": note},
                       f, indent=1)
-        print(f"# recorded baseline speedup={speedup:.3f} -> {BASELINE}")
+        print(f"# recorded baseline {recorded} -> {BASELINE}")
+        if json_out:
+            _write_smoke_json(json_out, measured, recorded, {})
         return 0
     with open(BASELINE) as f:
-        base = json.load(f)["speedup"]
-    floor = base / SMOKE_TOLERANCE
-    verdict = "OK" if speedup >= floor else "REGRESSION"
-    print(f"# flat-path gate: speedup={speedup:.3f} baseline={base:.3f} "
-          f"floor={floor:.3f} -> {verdict}")
-    return 0 if speedup >= floor else 1
+        base = json.load(f)
+    verdicts = {}
+    ok = True
+    for key, label in (("speedup", "flat-path"),
+                       ("scan_speedup", "scanned-driver")):
+        # Baselines recorded before a gate existed fall back to parity.
+        floor = base.get(key, 1.0) / SMOKE_TOLERANCE
+        verdicts[key] = "OK" if measured[key] >= floor else "REGRESSION"
+        ok = ok and measured[key] >= floor
+        print(f"# {label} gate: {key}={measured[key]:.3f} "
+              f"baseline={base.get(key, 1.0):.3f} floor={floor:.3f} "
+              f"-> {verdicts[key]}")
+    if json_out:
+        _write_smoke_json(json_out, measured, base, verdicts)
+    return 0 if ok else 1
+
+
+def _write_smoke_json(path: str, measured: dict, baseline: dict,
+                      verdicts: dict):
+    with open(path, "w") as f:
+        json.dump({"measured": {k: round(v, 4) for k, v in measured.items()},
+                   "baseline": {k: round(float(v), 4)
+                                for k, v in baseline.items()
+                                if isinstance(v, (int, float))},
+                   "tolerance": SMOKE_TOLERANCE, "verdicts": verdicts},
+                  f, indent=1)
+    print(f"# wrote smoke results -> {path}")
 
 
 if __name__ == "__main__":
@@ -119,13 +209,17 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="regression gate vs round_baseline.json (exit 1 "
-                         "on >%.1fx flat-path slowdown)" % SMOKE_TOLERANCE)
+                    help="regression gate vs round_baseline.json (exit 1 on "
+                         ">%.1fx flat-path OR scanned-driver slowdown)"
+                         % SMOKE_TOLERANCE)
     ap.add_argument("--record", action="store_true",
                     help="re-record the baseline instead of gating")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the smoke ratios + verdicts as JSON "
+                         "(CI uploads this as an artifact)")
     ap.add_argument("--fast", action="store_true",
                     help="fewer timing rounds for the full benchmark")
     args = ap.parse_args()
     if args.smoke or args.record:
-        sys.exit(smoke(record=args.record))
+        sys.exit(smoke(record=args.record, json_out=args.json))
     main(fast=args.fast)

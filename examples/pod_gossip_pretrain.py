@@ -78,8 +78,9 @@ def main():
         for r in range(args.rounds):
             t0 = time.time()
             batch = {"tokens": tokens[r]}
-            params, v, w, loss = round_step(params, v, w, batch, P_pod)
-            print(f"round {r:3d} loss={float(loss):.4f} "
+            params, v, w, m = round_step(params, v, w, batch, P_pod)
+            print(f"round {r:3d} loss={float(m['loss']):.4f} "
+                  f"acc={float(m['acc']):.4f} "
                   f"w={[round(float(x), 3) for x in w]} "
                   f"({time.time() - t0:.2f}s)")
         assert abs(float(w.sum()) - n_pods) < 1e-3, "push-sum mass conserved"

@@ -38,7 +38,10 @@ def main():
     for name, algo in runs:
         tr = FLTrainer(model.loss, model.init, cdata, algo, topo, seed=0,
                        participation=0.25)
-        tr.fit(rounds, test_data=testj, eval_every=5,
+        # superstep=10: each 10-round chunk is ONE lax.scan inside one jit
+        # (donated state, eval in-scan every 5 rounds); the log callback
+        # fires at superstep boundaries.
+        tr.fit(rounds, test_data=testj, eval_every=5, superstep=10,
                log=lambda r: print(f"  [{name}] round {r['round']:3d} "
                                    f"loss={r['loss']:.3f}"
                                    + (f" test_acc={r['test_acc']:.3f}"

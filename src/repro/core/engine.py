@@ -117,8 +117,10 @@ class FLTrainer:
         (default); ``False`` selects the seed per-leaf pytree path, kept as
         the kernel-free equivalence oracle.
 
-    For functional-style training (``lax.scan`` over rounds, donated state),
-    use ``self.program`` — or ``repro.core.make_program`` — directly.
+    ``fit`` drives ``program.run_superstep`` — jit-resident supersteps of
+    rounds with in-scan eval — and returns per-round history records; for
+    the stacked device-side history or custom schedules use
+    ``self.program`` (or ``repro.core.make_program``) directly.
     """
 
     def __init__(
@@ -182,10 +184,17 @@ class FLTrainer:
                 )
             self._round_jit = jax.jit(self._round_legacy, donate_argnums=0)
 
-        # Masked fixed-shape eval: every chunk is padded to the same batch
-        # size, so this compiles once per trainer and never re-traces on the
-        # ragged final chunk.  Per-example metrics are vmapped so the pad
-        # rows can be masked out of the sums exactly.
+        # Flat path: evaluate() compiles program.make_eval_fn — the same
+        # masked fixed-shape eval run_superstep uses in-scan, so the two
+        # can never drift numerically.  Entries hold a strong test_data
+        # reference so the id() key cannot alias a freed dict.
+        self._eval_cache: dict = {}
+
+        # Legacy (flat=False) path: per-chunk masked eval over the pytree
+        # params.  Every chunk is padded to the same batch size, so this
+        # compiles once per trainer and never re-traces on the ragged final
+        # chunk.  Per-example metrics are vmapped so the pad rows can be
+        # masked out of the sums exactly.
         def _masked_eval(params, chunk, mask):
             def one(ex):
                 return self.loss_fn(
@@ -302,6 +311,18 @@ class FLTrainer:
         return pushsum.consensus_error(self.state.params, self.state.w)
 
     def evaluate(self, test_data, batch: int = 1024):
+        if self.flat:
+            # Exactly the in-scan eval of run_superstep, jitted standalone.
+            key = (id(test_data), batch)
+            entry = self._eval_cache.get(key)
+            if entry is None:
+                entry = (
+                    jax.jit(self.program.make_eval_fn(test_data, batch)),
+                    test_data,
+                )
+                self._eval_cache[key] = entry
+            tl, ta = entry[0](self.state)
+            return float(tl), float(ta)
         params = self.average_model()
         n = test_data["x"].shape[0]
         tot_l, tot_a = 0.0, 0.0
@@ -321,7 +342,61 @@ class FLTrainer:
             tot_a += float(a)
         return tot_l / n, tot_a / n
 
-    def fit(self, rounds: int, test_data=None, eval_every: int = 0, log=None):
+    def fit(
+        self,
+        rounds: int,
+        test_data=None,
+        eval_every: int = 0,
+        log=None,
+        superstep: int = 0,
+    ):
+        """Train ``rounds`` rounds and return the per-round history.
+
+        On the flat path this drives ``program.run_superstep``: rounds are
+        ``lax.scan``-ned inside one jit per superstep with donated carry and
+        the eval runs *in-scan* at the ``eval_every`` cadence (keyed on the
+        global round counter, so chunked supersteps and checkpoint resume
+        keep the same schedule).  The host — history records and the ``log``
+        callback — is only touched at superstep boundaries.
+
+        Args:
+          superstep: rounds per jit-resident scan chunk; ``0`` (default)
+            runs all ``rounds`` as one superstep.  The ``flat=False`` oracle
+            path keeps the per-round Python loop regardless.
+        """
+        if not self.flat:
+            return self._fit_python_loop(rounds, test_data, eval_every, log)
+        history = []
+        done = 0
+        chunk = rounds if superstep <= 0 else superstep
+        cadence = eval_every if test_data is not None else 0
+        while done < rounds:
+            length = min(chunk, rounds - done)
+            self.state, hist = self.program.run_superstep(
+                self.state, length, cadence, test_data
+            )
+            # ONE device->host transfer per superstep boundary; indexing
+            # device arrays per round would re-introduce the per-round
+            # syncs the scanned driver exists to eliminate.
+            hist = jax.device_get(hist)
+            evals = hist.get("eval_mask")
+            for i in range(length):
+                rec = {
+                    "round": done + i,
+                    "loss": float(hist["loss"][i]),
+                    "acc": float(hist["acc"][i]),
+                }
+                if evals is not None and bool(evals[i]):
+                    rec["test_loss"] = float(hist["test_loss"][i])
+                    rec["test_acc"] = float(hist["test_acc"][i])
+                history.append(rec)
+                if log:
+                    log(rec)
+            done += length
+        return history
+
+    def _fit_python_loop(self, rounds, test_data, eval_every, log):
+        """Per-round host loop — the ``flat=False`` oracle's driver."""
         history = []
         for r in range(rounds):
             metrics = self.run_round()

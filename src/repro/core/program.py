@@ -11,7 +11,14 @@ usually resolved from an ``AlgoConfig`` via ``repro.core.stages`` — into a
 are plain jittable functions of traced state only (topology, data, and the
 stage composition are closed over as constants), optax-style.  Callers can
 ``jax.jit(program.step, donate_argnums=0)`` to update the (n, D) banks in
-place, or scan whole training runs inside one jit.  ``FLTrainer`` in
+place, or scan whole training runs inside one jit.
+
+``run_superstep`` is the production driver built on top: it jits one
+``lax.scan`` over a whole *superstep* of rounds with donated carry and
+performs the masked fixed-shape evaluation *in-scan* at the configured
+cadence, so the host is only touched at superstep boundaries (checkpoint /
+logging) — the Stochastic Gradient Push recipe for keeping the device,
+not the Python loop, as the wall-clock ceiling.  ``FLTrainer`` in
 ``repro.core.engine`` is a thin stateful wrapper around exactly this API.
 """
 from __future__ import annotations
@@ -68,6 +75,12 @@ class RoundProgram:
     selection: bool
     exp_cycle: Any  # (hops, n, n) stack for time-varying exponential graphs
 
+    def __post_init__(self):
+        # Per-program memo of compiled superstep drivers, keyed on the
+        # (rounds, eval cadence, test-data identity) signature — repeated
+        # supersteps of the same shape must hit the jit cache, not retrace.
+        object.__setattr__(self, "_superstep_cache", {})
+
     # -- pure state constructor ---------------------------------------------
 
     def init(self, key: jax.Array) -> FLState:
@@ -87,7 +100,9 @@ class RoundProgram:
     # -- mixing-matrix selection --------------------------------------------
 
     def mixing_matrix(self, tkey: jax.Array, state: FLState) -> jnp.ndarray:
-        k_link = max(int(self.participation * self.n), 1)
+        # Every sampled family honors the configured ``topo.k_out`` —
+        # ``participation`` only drives central (server) client sampling.
+        k_link = self.topo.k_out
         if self.mixer.kind == "symmetric":
             return topology.sample_symmetric_k_regular(tkey, self.n, k_link)
         if self.selection:
@@ -144,6 +159,123 @@ class RoundProgram:
         return jax.lax.scan(
             lambda s, _: self.step(s), state, None, length=rounds
         )
+
+    # -- jit-resident supersteps (the production driver) ---------------------
+
+    def make_eval_fn(self, test_data, batch: int = 1024):
+        """Jittable masked fixed-shape evaluation of the consensus model.
+
+        The test set is padded and stacked into ``(n_chunks, batch, ...)``
+        constants once, so ``eval_fn(state) -> (test_loss, test_acc)`` has a
+        single fixed shape regardless of the ragged final chunk and can run
+        inside ``lax.scan``/``lax.cond``.  Per-example metrics are vmapped
+        and the pad rows masked out of the sums exactly (``where``, not
+        multiply — a non-finite loss on a zero pad row must not poison the
+        sum via ``NaN * 0``).
+        """
+        n = test_data["x"].shape[0]
+        n_chunks = -(-n // batch)
+        total = n_chunks * batch
+        padded = {
+            k: jnp.concatenate(
+                [v, jnp.zeros((total - n,) + v.shape[1:], v.dtype)]
+            ).reshape((n_chunks, batch) + v.shape[1:])
+            for k, v in test_data.items()
+        }
+        mask = (jnp.arange(total) < n).reshape(n_chunks, batch)
+
+        def eval_fn(state: FLState):
+            row = (
+                state.params
+                if self.mixer.kind == "central"
+                else state.params.mean(axis=0)
+            )
+            params = self.spec.unravel(row)
+
+            def one(ex):
+                return self.loss_fn(
+                    params, jax.tree.map(lambda v: v[None], ex)
+                )
+
+            def chunk_sums(carry, cm):
+                chunk, m = cm
+                per_l, per_a = jax.vmap(one)(chunk)
+                return (
+                    carry[0] + jnp.sum(jnp.where(m, per_l, 0.0)),
+                    carry[1] + jnp.sum(jnp.where(m, per_a, 0.0)),
+                ), None
+
+            (tl, ta), _ = jax.lax.scan(
+                chunk_sums,
+                (jnp.float32(0.0), jnp.float32(0.0)),
+                (padded, mask),
+            )
+            return tl / n, ta / n
+
+        return eval_fn
+
+    def run_superstep(
+        self,
+        state: FLState,
+        rounds: int,
+        eval_every: int = 0,
+        test_data=None,
+        eval_batch: int = 1024,
+    ):
+        """One jit-resident superstep: ``lax.scan`` ``rounds`` rounds inside
+        a single jit with donated carry, evaluating *in-scan* on
+        ``test_data`` whenever the global round counter hits ``eval_every``
+        (the cadence follows ``state.round``, so it is stable across
+        superstep boundaries and checkpoint resume).
+
+        Returns ``(state, history)`` where every history leaf is stacked
+        ``(rounds,)``; with eval enabled, ``history`` additionally carries
+        ``test_loss`` / ``test_acc`` and the boolean ``eval_mask`` marking
+        which rounds the eval values are valid for (non-eval rounds hold
+        zeros).  Compiled drivers are memoized per (rounds, eval_every,
+        test_data identity, eval_batch), so repeated supersteps of the same
+        shape reuse one executable.
+        """
+        cache_key = (
+            int(rounds), int(eval_every),
+            id(test_data) if test_data is not None else None,
+            int(eval_batch),
+        )
+        # The cache entry keeps a strong reference to test_data: an id() in
+        # the key can only collide with a *live* dict, and a live id is the
+        # same object — so a hit can never serve constants baked from a
+        # different (freed, address-reused) test set.
+        entry = self._superstep_cache.get(cache_key)
+        fn = entry[0] if entry is not None else None
+        if fn is None:
+            eval_fn = (
+                self.make_eval_fn(test_data, eval_batch)
+                if test_data is not None and eval_every
+                else None
+            )
+
+            def body(s, _):
+                s, metrics = self.step(s)
+                if eval_fn is not None:
+                    # s.round is already the post-increment (1-based) count.
+                    do = jnp.mod(s.round, eval_every) == 0
+                    tl, ta = jax.lax.cond(
+                        do,
+                        eval_fn,
+                        lambda _s: (jnp.float32(0.0), jnp.float32(0.0)),
+                        s,
+                    )
+                    metrics = dict(
+                        metrics, test_loss=tl, test_acc=ta, eval_mask=do
+                    )
+                return s, metrics
+
+            fn = jax.jit(
+                lambda s: jax.lax.scan(body, s, None, length=rounds),
+                donate_argnums=0,
+            )
+            self._superstep_cache[cache_key] = (fn, test_data)
+        return fn(state)
 
 
 def make_program(

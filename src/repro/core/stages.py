@@ -209,8 +209,12 @@ class TopKEFCompressor:
         mag = jnp.abs(y)
         kth = jax.lax.top_k(mag, k)[0][:, -1:]
         mask = mag >= kth  # ties may keep a few extra coords — still sparse
-        Xc = y * mask
-        return y - Xc, Xc.astype(X.dtype)
+        # The transmitted payload is the bank-dtype cast; the residual must
+        # be taken against *that*, not the float32 top-k values, or the
+        # sub-f32 rounding error is silently dropped instead of fed back
+        # (compressed + residual' == X + residual then fails for bf16/f16).
+        Xc = (y * mask).astype(X.dtype)
+        return y - Xc.astype(jnp.float32), Xc
 
 
 # ---------------------------------------------------------------------------

@@ -45,17 +45,27 @@ class StepConfig:
 
 
 def _microbatched_loss(loss_fn, n_micro: int):
+    """Evaluate ``loss_fn`` as a checkpointed scan over equal batch chunks.
+
+    The ``(ce, acc)`` aux is accumulated through the scan alongside the
+    loss, so microbatched runs report the true metrics (equal-size chunks
+    make the mean-of-chunk-means equal the whole-batch mean).
+    """
+
     def loss(params, batch):
         chunks = jax.tree.map(
             lambda x: x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:]),
             batch)
 
-        def body(acc, chunk):
-            l, _ = loss_fn(params, chunk)
-            return acc + l, None
+        def body(carry, chunk):
+            tot_l, tot_ce, tot_acc = carry
+            l, (ce, acc) = loss_fn(params, chunk)
+            return (tot_l + l, tot_ce + ce, tot_acc + acc), None
 
-        total, _ = jax.lax.scan(jax.checkpoint(body), jnp.float32(0.0), chunks)
-        return total / n_micro, (total / n_micro, jnp.float32(0.0))
+        zeros = (jnp.float32(0.0), jnp.float32(0.0), jnp.float32(0.0))
+        (total, ce, acc), _ = jax.lax.scan(
+            jax.checkpoint(body), zeros, chunks)
+        return total / n_micro, (ce / n_micro, acc / n_micro)
 
     return loss
 
@@ -77,10 +87,10 @@ def make_train_step(api: ModelApi, step_cfg: StepConfig) -> Callable:
 
     def train_step(params, v, w, batch):
         z = jax.tree.map(lambda p: (p / w).astype(p.dtype), params)  # de-bias
-        g, (loss, _) = sam_gradient(loss_fn, z, batch, step_cfg.rho)
+        g, (loss, (_, acc)) = sam_gradient(loss_fn, z, batch, step_cfg.rho)
         v = momentum_update(v, g, step_cfg.alpha)
         params = apply_update(params, v, step_cfg.lr)
-        return params, v, loss
+        return params, v, {"loss": loss, "acc": acc}
 
     return train_step
 
@@ -93,7 +103,8 @@ def make_round_step(
     compressor=None,
 ) -> Callable:
     """Multi-pod DFL round: (stacked params, stacked v, w (n_pods,),
-    batch (n_pods, ...), P_pod (n_pods, n_pods)) -> updated + mean loss.
+    batch (n_pods, ...), P_pod (n_pods, n_pods)) -> updated state + mean
+    {loss, acc} metrics.
 
     Every leaf carries a leading replica axis sharded over "pod";
     ``spmd_axis_name`` threads that axis through all internal sharding
@@ -132,11 +143,11 @@ def make_round_step(
     def one_pod(params, v, w, batches):
         def body(carry, batch):
             p, vv = carry
-            p, vv, loss = local(p, vv, w, batch)
-            return (p, vv), loss
+            p, vv, m = local(p, vv, w, batch)
+            return (p, vv), (m["loss"], m["acc"])
 
-        (params, v), losses = jax.lax.scan(body, (params, v), batches)
-        return params, v, losses.mean()
+        (params, v), (losses, accs) = jax.lax.scan(body, (params, v), batches)
+        return params, v, losses.mean(), accs.mean()
 
     def mix_flat(params, w, P_pod):
         from jax.sharding import NamedSharding, PartitionSpec
@@ -175,11 +186,11 @@ def make_round_step(
         return params, mixer.mix_weights(P_pod, w)
 
     def round_step(params, v, w, batch, P_pod):
-        params, v, loss = jax.vmap(one_pod, spmd_axis_name="pod")(
+        params, v, loss, acc = jax.vmap(one_pod, spmd_axis_name="pod")(
             params, v, w, batch)
         # compress + gossip over "pod" (same stages as the engine)
         params, w = (mix_flat if flat_mix else mix_leafwise)(params, w, P_pod)
-        return params, v, w, loss.mean()
+        return params, v, w, {"loss": loss.mean(), "acc": acc.mean()}
 
     return round_step
 

@@ -3,9 +3,13 @@
 On real hardware every pod's (data, model) submesh shards one replica and
 the directed push-sum gossip crosses pods; on this container pass
 ``--host-mesh`` to run the identical program on forced host devices.
+``--superstep N`` scans N rounds device-resident inside one jit (donated
+carry) and only returns to the host at superstep boundaries for logging
+and checkpointing; ``--resume`` restarts either driver from the latest
+full round-state checkpoint.
 
   PYTHONPATH=src python -m repro.launch.train --arch xlstm-350m \
-      --host-mesh --rounds 5 --smoke
+      --host-mesh --rounds 6 --superstep 3 --smoke
 """
 from __future__ import annotations
 
@@ -27,6 +31,11 @@ def main():
     ap.add_argument("--alpha", type=float, default=0.9)
     ap.add_argument("--rho", type=float, default=0.05)
     ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--superstep", type=int, default=1,
+                    help="rounds per jit-resident lax.scan chunk: the whole "
+                         "chunk runs device-side in ONE dispatch and the "
+                         "host is only touched at superstep boundaries "
+                         "(logging + checkpointing); 1 = per-round dispatch")
     ap.add_argument("--compress", default="identity",
                     help="pod gossip compressor (stateless stage name, "
                          "e.g. int8_rows)")
@@ -66,7 +75,24 @@ def main():
                           local_steps=args.local_steps,
                           microbatches=args.microbatches,
                           compressor=args.compress)
-    round_step = jax.jit(make_round_step(api, step_cfg), donate_argnums=(0, 1))
+    raw_round = make_round_step(api, step_cfg)
+    round_step = jax.jit(raw_round, donate_argnums=(0, 1))
+
+    def _superstep(params, v, w, toks_chunk, P_pod):
+        """lax.scan a whole superstep of rounds inside one jit; per-round
+        (loss, acc, w-mass) come back stacked for boundary logging."""
+
+        def body(carry, batch):
+            params, v, w = carry
+            params, v, w, m = raw_round(params, v, w, {"tokens": batch}, P_pod)
+            return (params, v, w), (m["loss"], m["acc"], w.sum())
+
+        (params, v, w), ys = jax.lax.scan(body, (params, v, w), toks_chunk)
+        return params, v, w, ys
+
+    # One executable per distinct chunk length (at most two: the full
+    # superstep and the final remainder).
+    superstep_jit = jax.jit(_superstep, donate_argnums=(0, 1))
 
     with shlib.use_mesh(mesh, fsdp=cfg.fsdp):
         defs = api.param_defs()
@@ -110,20 +136,38 @@ def main():
                       f"(momentum bank restored)")
 
         print(f"[train] {cfg.name} | {n_pods} pods x {mesh.shape} | "
-              f"K={args.local_steps} rho={args.rho} alpha={args.alpha}")
-        for r in range(start, args.rounds):
+              f"K={args.local_steps} rho={args.rho} alpha={args.alpha} "
+              f"superstep={args.superstep}")
+        r = start
+        while r < args.rounds:
+            length = min(max(args.superstep, 1), args.rounds - r)
             t0 = time.time()
-            params, v, w, loss = round_step(params, v, w,
-                                            {"tokens": toks[r]}, P_pod)
-            print(f"[train] round {r:4d} loss={float(loss):.4f} "
-                  f"w_mass={float(w.sum()):.4f} dt={time.time() - t0:.2f}s",
-                  flush=True)
-            if args.ckpt_dir and (r + 1) % 5 == 0:
+            if args.superstep > 1:
+                params, v, w, (losses, accs, wmass) = superstep_jit(
+                    params, v, w, toks[r:r + length], P_pod)
+                dt = (time.time() - t0) / length
+                for i in range(length):
+                    print(f"[train] round {r + i:4d} "
+                          f"loss={float(losses[i]):.4f} "
+                          f"acc={float(accs[i]):.4f} "
+                          f"w_mass={float(wmass[i]):.4f} dt={dt:.2f}s",
+                          flush=True)
+                ckpt_due = args.ckpt_dir is not None  # superstep boundary
+            else:
+                params, v, w, m = round_step(params, v, w,
+                                             {"tokens": toks[r]}, P_pod)
+                print(f"[train] round {r:4d} loss={float(m['loss']):.4f} "
+                      f"acc={float(m['acc']):.4f} "
+                      f"w_mass={float(w.sum()):.4f} "
+                      f"dt={time.time() - t0:.2f}s", flush=True)
+                ckpt_due = args.ckpt_dir and (r + 1) % 5 == 0
+            r += length
+            if ckpt_due:
                 # Full round state — momentum bank and round index included,
                 # so restarts of momentum-persistent variants stay warm.
-                checkpoint.save(args.ckpt_dir, r,
+                checkpoint.save(args.ckpt_dir, r - 1,
                                 {"params": params, "v": v, "w": w,
-                                 "round": np.int32(r)})
+                                 "round": np.int32(r - 1)})
         assert abs(float(w.sum()) - n_pods) < 1e-3
 
 

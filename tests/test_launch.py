@@ -89,6 +89,58 @@ def test_train_step_matches_manual_sam_momentum():
                                    np.asarray(b, np.float32), rtol=2e-2, atol=2e-4)
 
 
+def test_microbatched_loss_matches_whole_batch_metrics():
+    """Gradient accumulation must not change the reported metrics: the
+    (loss, ce, acc) triple is accumulated through the microbatch scan, so
+    microbatches > 1 reports the TRUE accuracy (it used to hardcode 0)."""
+    from repro.configs.registry import get_config, make_batch
+    from repro.launch.steps import _microbatched_loss
+    from repro.models.registry import get_model_api
+
+    cfg = get_config("xlstm-350m", smoke=True)
+    api = get_model_api(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, 4, 16, seed=0)
+
+    loss_w, (ce_w, acc_w) = api.loss(params, batch)
+    loss_m, (ce_m, acc_m) = _microbatched_loss(api.loss, 2)(params, batch)
+    # equal-size chunks: mean-of-chunk-means == whole-batch mean
+    np.testing.assert_allclose(float(loss_m), float(loss_w), rtol=1e-5)
+    np.testing.assert_allclose(float(ce_m), float(ce_w), rtol=1e-5)
+    np.testing.assert_allclose(float(acc_m), float(acc_w), rtol=1e-5,
+                               atol=1e-7)
+    # the gradient path (checkpointed scan) agrees too
+    g_w, _ = jax.grad(api.loss, has_aux=True)(params, batch)
+    g_m, _ = jax.grad(_microbatched_loss(api.loss, 2), has_aux=True)(
+        params, batch)
+    for a, b in zip(jax.tree.leaves(g_m), jax.tree.leaves(g_w)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-6)
+
+
+def test_train_step_reports_metrics_dict():
+    """train_step surfaces {loss, acc} — microbatched or not."""
+    from repro.configs.registry import get_config, make_batch
+    from repro.models.registry import get_model_api
+    from repro.launch.steps import make_train_step
+
+    cfg = get_config("xlstm-350m", smoke=True)
+    api = get_model_api(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, 4, 16, seed=0)
+    v0 = jax.tree.map(jnp.zeros_like, params)
+    metrics = {}
+    for n_micro in (1, 2):
+        sc = StepConfig(lr=0.05, alpha=0.9, rho=0.0, microbatches=n_micro)
+        step = jax.jit(make_train_step(api, sc))
+        _, _, metrics[n_micro] = step(params, v0, jnp.float32(1.0), batch)
+    for m in metrics.values():
+        assert set(m) == {"loss", "acc"}
+        assert np.isfinite(float(m["loss"]))
+    np.testing.assert_allclose(float(metrics[2]["acc"]),
+                               float(metrics[1]["acc"]), rtol=1e-5, atol=1e-7)
+
+
 # ---------------------------------------------------------------------------
 # Multi-device pod gossip on a real (2,2,2) host mesh via subprocess.
 # ---------------------------------------------------------------------------

@@ -203,6 +203,63 @@ def test_topk_ef_residual_sums_to_signal(seed, n, d, ratio):
     assert nz.mean() <= max(k + 1, 1) + 1e-9
 
 
+@given(st.integers(0, 999), st.integers(1, 8), st.integers(2, 50),
+       st.floats(0.02, 0.9))
+@settings(max_examples=20, deadline=None)
+def test_topk_ef_exact_on_bf16_bank(seed, n, d, ratio):
+    """The residual is taken against the cast-back payload, so error
+    feedback is EXACT for sub-f32 banks: what the bf16 cast rounds off is
+    deferred to the residual, never dropped."""
+    comp = TopKEFCompressor(ratio=ratio)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    X = (3.0 * jax.random.normal(ks[0], (n, d), jnp.float32)).astype(
+        jnp.bfloat16)
+    resid = 0.1 * jax.random.normal(ks[1], (n, d), jnp.float32)
+    resid2, Xc = comp.apply(resid, X)
+    assert Xc.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(Xc, np.float32) + np.asarray(resid2),
+        np.asarray(X, np.float32) + np.asarray(resid))
+
+
+# ---------------------------------------------------------------------------
+# The configured topo.k_out is honored by EVERY sampled mixing family.
+# ---------------------------------------------------------------------------
+
+def test_mixing_matrix_honors_k_out(setting):
+    """The selective (DFedSGPSM-S) and symmetric branches must use
+    ``topo.k_out`` exactly like the plain k-out branch — not a link count
+    re-derived from ``participation``."""
+    from repro.core import make_program
+    from repro.core import topology as topo_mod
+
+    model, cdata = setting
+    # participation * n = 5 != k_out = 2: the bug would pick 5 links.
+    topo = TopologyConfig(kind="kout", n_clients=N_CLIENTS, k_out=2)
+    tkey = jax.random.PRNGKey(42)
+    losses = jnp.arange(N_CLIENTS, dtype=jnp.float32)
+
+    sel = make_program(model.loss, model.init, cdata,
+                       make_algo("dfedsgpsm_s"), topo, participation=0.625)
+    state = sel.init(jax.random.PRNGKey(0))._replace(losses=losses)
+    P = sel.mixing_matrix(tkey, state)
+    np.testing.assert_array_equal(
+        np.asarray(P),
+        np.asarray(topo_mod.sample_kout_selective(
+            tkey, losses, N_CLIENTS, topo.k_out)))
+    # out-degree per sender column: k_out receivers + the self-loop
+    assert np.all(np.count_nonzero(np.asarray(P), axis=0) == topo.k_out + 1)
+
+    sym = make_program(model.loss, model.init, cdata,
+                       make_algo("dfedsam"), topo, participation=0.625)
+    state = sym.init(jax.random.PRNGKey(0))
+    W = sym.mixing_matrix(tkey, state)
+    np.testing.assert_array_equal(
+        np.asarray(W),
+        np.asarray(topo_mod.sample_symmetric_k_regular(
+            tkey, N_CLIENTS, topo.k_out)))
+
+
 def test_topk_ef_converges_end_to_end(setting):
     model, cdata = setting
     algo = make_algo("dfedsgpsm", local_steps=2, batch_size=32,

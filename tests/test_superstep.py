@@ -1,0 +1,176 @@
+"""The jit-resident superstep driver: ``program.run_superstep`` scans whole
+supersteps of rounds inside one jit (donated carry, in-scan masked eval) and
+must reproduce the golden per-round metrics trace and the per-round Python
+loop exactly — including across checkpoint resume."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ALGORITHMS, FLTrainer, TopologyConfig, make_algo
+from repro.data.dirichlet import dirichlet_partition, stack_client_data
+from repro.data.synthetic import make_dataset
+from repro.models.small import mnist_2nn
+
+N_CLIENTS = 8
+
+_GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                       "round_traces.json")
+
+
+@pytest.fixture(scope="module")
+def setting():
+    train, test = make_dataset("mnist", 1200, 100, seed=0)
+    parts = dirichlet_partition(train["y"], N_CLIENTS, alpha=0.3, seed=0)
+    cdata = stack_client_data(train, parts, pad_to=128)
+    testj = {k: jnp.asarray(v) for k, v in test.items()}
+    return mnist_2nn(), {k: jnp.asarray(v) for k, v in cdata.items()}, testj
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(_GOLDEN) as f:
+        return json.load(f)
+
+
+def _trainer(setting, name, **kw):
+    model, cdata, _ = setting
+    algo = make_algo(name, local_steps=3, batch_size=32, **kw)
+    topo = TopologyConfig(kind="kout", n_clients=N_CLIENTS, k_out=2)
+    return FLTrainer(model.loss, model.init, cdata, algo, topo, seed=0,
+                     participation=0.25)
+
+
+# ---------------------------------------------------------------------------
+# The scanned driver is pinned by the same oracle as the round program:
+# tests/golden/round_traces.json, round for round.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(ALGORITHMS))
+def test_superstep_reproduces_golden_trace(setting, golden, name):
+    model, cdata, _ = setting
+    algo = make_algo(name, local_steps=golden["local_steps"],
+                     batch_size=golden["batch_size"])
+    topo = TopologyConfig(kind="kout", n_clients=N_CLIENTS, k_out=2)
+    tr = FLTrainer(model.loss, model.init, cdata, algo, topo, seed=0,
+                   participation=golden["participation"])
+    want = golden["traces"][name]
+    rounds = len(want["rounds"])
+    # Whole run = ONE superstep = one lax.scan inside one jit.
+    hist = tr.fit(rounds)
+    for r, g in enumerate(want["rounds"]):
+        np.testing.assert_allclose(hist[r]["loss"], g["loss"],
+                                   rtol=1e-4, atol=1e-5, err_msg=f"round {r}")
+        np.testing.assert_allclose(hist[r]["acc"], g["acc"],
+                                   rtol=1e-3, atol=1e-4, err_msg=f"round {r}")
+    np.testing.assert_allclose(np.asarray(tr.state.w), np.asarray(want["w"]),
+                               rtol=1e-5, atol=1e-6)
+    assert int(tr.state.round) == rounds
+
+
+# ---------------------------------------------------------------------------
+# fit (superstep-backed) == the per-round Python loop, metric for metric.
+# ---------------------------------------------------------------------------
+
+def test_fit_matches_python_loop_stream(setting):
+    """`fit` (chunked supersteps, in-scan eval) and a manual
+    run_round/evaluate loop produce identical metric streams and states."""
+    _, _, testj = setting
+    tr_scan = _trainer(setting, "dfedsgpsm")
+    hist = tr_scan.fit(5, test_data=testj, eval_every=2, superstep=3)
+
+    tr_loop = _trainer(setting, "dfedsgpsm")
+    for r in range(5):
+        m = tr_loop.run_round()
+        rec = hist[r]
+        assert rec["round"] == r
+        np.testing.assert_allclose(rec["loss"], float(m["loss"]), rtol=1e-5)
+        np.testing.assert_allclose(rec["acc"], float(m["acc"]), rtol=1e-5)
+        if (r + 1) % 2 == 0:
+            tl, ta = tr_loop.evaluate(testj)
+            np.testing.assert_allclose(rec["test_loss"], tl, rtol=1e-5)
+            np.testing.assert_allclose(rec["test_acc"], ta, rtol=1e-5)
+        else:
+            assert "test_acc" not in rec
+    np.testing.assert_allclose(np.asarray(tr_scan.state.params),
+                               np.asarray(tr_loop.state.params),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(tr_scan.state.w),
+                                  np.asarray(tr_loop.state.w))
+
+
+def test_run_superstep_history_shapes_and_mask(setting):
+    """Stacked (rounds,) history with a validity mask: eval slots are zero
+    (and masked) on non-eval rounds, populated at the cadence."""
+    _, _, testj = setting
+    tr = _trainer(setting, "dfedsgpsm")
+    state, hist = tr.program.run_superstep(tr.state, 6, eval_every=3,
+                                           test_data=testj)
+    for key in ("loss", "acc", "test_loss", "test_acc", "eval_mask"):
+        assert hist[key].shape == (6,), key
+    mask = np.asarray(hist["eval_mask"])
+    np.testing.assert_array_equal(
+        mask, [False, False, True, False, False, True])
+    ta = np.asarray(hist["test_acc"])
+    assert np.all(ta[~mask] == 0.0)
+    assert np.all(ta[mask] > 0.0)
+    assert int(state.round) == 6
+
+
+def test_superstep_eval_cadence_follows_global_round(setting):
+    """The eval schedule is part of the algorithm: it keys on the global
+    round counter, so chunked supersteps keep one schedule."""
+    _, _, testj = setting
+    tr = _trainer(setting, "dfedsgpsm")
+    tr.fit(2)  # advance to global round 2 without eval
+    _, hist = tr.program.run_superstep(tr.state, 4, eval_every=3,
+                                       test_data=testj)
+    # global rounds 3,4,5,6 -> eval at 3 and 6
+    np.testing.assert_array_equal(np.asarray(hist["eval_mask"]),
+                                  [True, False, False, True])
+
+
+# ---------------------------------------------------------------------------
+# Resume: a mid-run full-FLState checkpoint continues the same trajectory.
+# ---------------------------------------------------------------------------
+
+def test_superstep_resume_matches_uninterrupted(setting, tmp_path):
+    _, _, testj = setting
+    # topk_ef: the compressor residual bank must survive the round trip too.
+    tr = _trainer(setting, "dfedsgpsm", compressor="topk_ef")
+    tr.fit(2)
+    path = tr.save(str(tmp_path), 2)
+    ref = tr.fit(3, test_data=testj, eval_every=2)  # global rounds 3-5
+
+    tr2 = _trainer(setting, "dfedsgpsm", compressor="topk_ef")
+    state = tr2.restore(path)
+    assert int(state.round) == 2
+    resumed = tr2.fit(3, test_data=testj, eval_every=2)
+    for a, b in zip(ref, resumed):
+        assert set(a) == set(b)
+        np.testing.assert_allclose(a["loss"], b["loss"], rtol=1e-5)
+        np.testing.assert_allclose(a["acc"], b["acc"], rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(tr2.state.params),
+                               np.asarray(tr.state.params),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(tr2.state.w),
+                                  np.asarray(tr.state.w))
+
+
+# ---------------------------------------------------------------------------
+# Superstep drivers are memoized: same shape -> same executable.
+# ---------------------------------------------------------------------------
+
+def test_superstep_jit_cache_reused(setting):
+    _, _, testj = setting
+    tr = _trainer(setting, "dfedavg")
+    program = tr.program
+    program._superstep_cache.clear()
+    tr.fit(4, test_data=testj, eval_every=2, superstep=2)
+    # two chunks of the same (length, cadence, data) signature -> ONE entry
+    assert len(program._superstep_cache) == 1
+    tr.fit(3, superstep=2)  # lengths 2 and 1, no eval -> two new entries
+    assert len(program._superstep_cache) == 3
