@@ -32,6 +32,18 @@ def main(fast: bool = False):
     us_pal = _time(lambda p, x: ops.gossip_matmul(p, x), P, X)
     emit("kernel/gossip_matmul/pallas", us_pal, "interpret" if not ops.on_tpu() else "mosaic")
 
+    # Sparse neighbor-indexed gossip on the same bank: O(n*k*D) vs O(n^2*D).
+    nl = topo.sample_kout_neighbors(jax.random.PRNGKey(0), n, 10)
+    us_sref = _time(jax.jit(ref.gossip_gather_ref), nl.idx, nl.wgt, X)
+    emit("kernel/gossip_gather/ref", us_sref,
+         f"n={n},k_max={nl.idx.shape[1]},D={d}")
+    us_spal = _time(lambda i, w, x: ops.gossip_gather(i, w, x),
+                    nl.idx, nl.wgt, X)
+    emit("kernel/gossip_gather/pallas", us_spal,
+         "panelized-interpret" if not ops.on_tpu() else "mosaic")
+    emit("kernel/gossip_gather/vs_dense", us_pal / us_spal,
+         "dense_us/sparse_us at k/n=%.2f" % (nl.idx.shape[1] / n))
+
     D = 1 << (18 if fast else 22)
     x = jax.random.normal(jax.random.PRNGKey(0), (D,))
     v = jnp.zeros((D,))

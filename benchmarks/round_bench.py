@@ -1,5 +1,6 @@
 """End-to-end round timing: flat (n, D) bank path vs the seed pytree path,
-and the jit-resident scanned superstep driver vs the per-round Python loop.
+the jit-resident scanned superstep driver vs the per-round Python loop, and
+sparse neighbor-list gossip vs the dense mixing matmul across client counts.
 
 The flat path runs the whole round through the Pallas kernels — one
 ``gossip_matmul`` for the entire model and one ``fused_update`` per inner
@@ -9,13 +10,18 @@ DFedSGPSM and the DFedSAM baseline (Algorithm 1 with/without push-sum);
 their two-pass SAM gradients are the paper's hot path and amortize the
 bank <-> pytree boundary.  The scanned comparison times
 ``program.run_superstep`` (all rounds in ONE dispatch, donated carry)
-against the same number of per-round jit dispatches.  Emits min-of-N round
-times (robust to container scheduling noise) via ``common.emit``.
+against the same number of per-round jit dispatches.  The ``--n-clients``
+sweep scales the round from 16 to hundreds of clients at fixed ``k_out``
+and times the O(n * k_max * D) neighbor-gather gossip against the
+O(n^2 * D) dense matmul (gossip-dominated SGP config, K=1).  All timings
+are median-of-k after explicit warmup (robust to container scheduling
+noise) via ``common.emit``.
 """
 from __future__ import annotations
 
 import json
 import os
+import statistics
 import time
 
 import jax
@@ -30,51 +36,58 @@ N_CLIENTS = 16
 # more than this factor of its recorded loop-relative speedup (machine
 # speed cancels in both ratios).
 SMOKE_TOLERANCE = 1.3
+# Explicit warmup runs (beyond the compile call) before any timed window.
+WARMUP = 2
 BASELINE = os.path.join(os.path.dirname(__file__), "round_baseline.json")
 
 
-def _time_rounds(tr: FLTrainer, rounds: int) -> float:
-    """Best (min) microseconds per round after a compile+warmup round."""
-    tr.run_round()
+def _time_rounds(tr: FLTrainer, rounds: int, warmup: int = WARMUP) -> float:
+    """Median microseconds per round after compile + ``warmup`` rounds."""
+    for _ in range(1 + warmup):  # compile, then populate caches/allocator
+        tr.run_round()
     jax.block_until_ready(tr.state.params)
-    best = float("inf")
+    times = []
     for _ in range(rounds):
         t0 = time.perf_counter()
         tr.run_round()
         jax.block_until_ready(tr.state.params)
-        best = min(best, 1e6 * (time.perf_counter() - t0))
-    return best
+        times.append(1e6 * (time.perf_counter() - t0))
+    return statistics.median(times)
 
 
-def _time_loop(tr: FLTrainer, rounds: int, repeats: int = 3) -> float:
-    """Best us/round over ``repeats`` timed windows of ``rounds`` per-round
-    jit dispatches — the Python-loop driver's amortized cost."""
-    tr.run_round()
+def _time_loop(tr: FLTrainer, rounds: int, repeats: int = 5,
+               warmup: int = WARMUP) -> float:
+    """Median us/round over ``repeats`` timed windows of ``rounds``
+    per-round jit dispatches — the Python-loop driver's amortized cost."""
+    for _ in range(1 + warmup):
+        tr.run_round()
     jax.block_until_ready(tr.state.params)
-    best = float("inf")
+    times = []
     for _ in range(repeats):
         t0 = time.perf_counter()
         for _ in range(rounds):
             tr.run_round()
         jax.block_until_ready(tr.state.params)
-        best = min(best, 1e6 * (time.perf_counter() - t0) / rounds)
-    return best
+        times.append(1e6 * (time.perf_counter() - t0) / rounds)
+    return statistics.median(times)
 
 
-def _time_scanned(tr: FLTrainer, rounds: int, repeats: int = 3) -> float:
-    """Best us/round for ``program.run_superstep`` — the whole window of
+def _time_scanned(tr: FLTrainer, rounds: int, repeats: int = 5,
+                  warmup: int = WARMUP) -> float:
+    """Median us/round for ``program.run_superstep`` — the whole window of
     rounds is one ``lax.scan`` inside one jit with donated carry."""
     program = tr.program
     state = program.init(jax.random.PRNGKey(0))
-    state, _ = program.run_superstep(state, rounds)  # compile + warmup
+    for _ in range(1 + warmup):  # compile + warmup supersteps
+        state, _ = program.run_superstep(state, rounds)
     jax.block_until_ready(state.params)
-    best = float("inf")
+    times = []
     for _ in range(repeats):
         t0 = time.perf_counter()
         state, _ = program.run_superstep(state, rounds)
         jax.block_until_ready(state.params)
-        best = min(best, 1e6 * (time.perf_counter() - t0) / rounds)
-    return best
+        times.append(1e6 * (time.perf_counter() - t0) / rounds)
+    return statistics.median(times)
 
 
 def main(fast: bool = False):
@@ -93,7 +106,7 @@ def main(fast: bool = False):
             timings[path] = _time_rounds(tr, rounds)
             d = tr.spec.dim
             emit(f"round/{name}/{path}", timings[path],
-                 f"n={N_CLIENTS},D={d},rounds={rounds},min")
+                 f"n={N_CLIENTS},D={d},rounds={rounds},median")
         emit(f"round/{name}/speedup", timings["pytree"] / timings["flat"],
              "pytree_us/flat_us (>=1 means flat is no slower)")
 
@@ -103,11 +116,98 @@ def main(fast: bool = False):
                    participation=0.25)
     loop_us = _time_loop(tr, rounds)
     scan_us = _time_scanned(tr, rounds)
-    emit("round/dfedsgpsm/loop", loop_us, f"n={N_CLIENTS},rounds={rounds},min")
+    emit("round/dfedsgpsm/loop", loop_us,
+         f"n={N_CLIENTS},rounds={rounds},median")
     emit("round/dfedsgpsm/scanned", scan_us,
-         f"n={N_CLIENTS},rounds={rounds},min,one-jit")
+         f"n={N_CLIENTS},rounds={rounds},median,one-jit")
     emit("round/dfedsgpsm/scan_speedup", loop_us / scan_us,
          "loop_us/scanned_us (>=1 means the superstep driver is no slower)")
+
+
+# ---------------------------------------------------------------------------
+# Sparse-vs-dense gossip scaling sweep (--n-clients).
+# ---------------------------------------------------------------------------
+
+def scaling(ns: list[int], k_out: int = 10, rounds: int = 5,
+            record: bool = False, json_out: str | None = None) -> dict:
+    """Time one full round AND the isolated gossip phase per client count
+    with the mixing representation forced dense vs sparse (same family,
+    same ``k_out``): the paper-scale claim is that the O(n * k_max * D)
+    neighbor gather keeps the communication step near-flat in n where the
+    O(n^2 * D) matmul grows quadratically.
+
+    Uses the gossip-dominated SGP composition (K=1, batch 1) so the round
+    ratio is as close to the communication step as an honest full round
+    gets; the ``gossip_*`` columns time one ``mixer.mix`` (bank + push-sum
+    weights) on the live bank — the kernel-level number.  ``record``
+    merges the table into ``round_baseline.json`` under ``"scaling"``;
+    ``json_out`` writes it standalone (the CI artifact).
+    """
+    from repro.core import topology as topo_mod
+
+    results = {}
+    for n in ns:
+        net, cdata, _ = build_setting(
+            dataset="mnist", n_clients=n, samples_per_client=64)
+        k = min(k_out, n - 1)
+        topo = TopologyConfig(kind="kout", n_clients=n, k_out=k)
+        algo = make_algo("sgp", batch_size=1)  # K=1: gossip-dominated
+        t, tg = {}, {}
+        for mode in ("dense", "sparse"):
+            tr = FLTrainer(net.loss, net.init, cdata, algo, topo, seed=0,
+                           participation=0.25, gossip=mode)
+            t[mode] = _time_rounds(tr, rounds)
+            emit(f"round/scaling/n{n}/{mode}", t[mode],
+                 f"k_out={k},D={tr.spec.dim},rounds={rounds},median")
+            # Isolated gossip phase: one sampled operator, one mixer.mix
+            # (bank + weights) on the trained bank.
+            key = jax.random.PRNGKey(7)
+            P = (topo_mod.sample_kout_neighbors(key, n, k)
+                 if mode == "sparse" else topo_mod.sample_kout(key, n, k))
+            mix = jax.jit(tr.program.mixer.mix)
+            X, w = tr.state.params, tr.state.w
+            out = mix(P, X, w)
+            jax.block_until_ready(out[0])
+            times = []
+            for _ in range(max(rounds, 5)):
+                t0 = time.perf_counter()
+                out = mix(P, X, w)
+                jax.block_until_ready(out[0])
+                times.append(1e6 * (time.perf_counter() - t0))
+            tg[mode] = statistics.median(times)
+            emit(f"gossip/scaling/n{n}/{mode}", tg[mode],
+                 f"k_out={k},one mixer.mix,median")
+        ratio = t["dense"] / t["sparse"]
+        gratio = tg["dense"] / tg["sparse"]
+        emit(f"round/scaling/n{n}/speedup", ratio,
+             "dense_us/sparse_us (>=1 means sparse gossip wins)")
+        emit(f"gossip/scaling/n{n}/speedup", gratio,
+             "gossip-phase dense_us/sparse_us")
+        results[str(n)] = {"k_out": k,
+                           "dense_us": round(t["dense"], 1),
+                           "sparse_us": round(t["sparse"], 1),
+                           "speedup": round(ratio, 3),
+                           "gossip_dense_us": round(tg["dense"], 1),
+                           "gossip_sparse_us": round(tg["sparse"], 1),
+                           "gossip_speedup": round(gratio, 3)}
+    if record:
+        base = {}
+        if os.path.exists(BASELINE):
+            with open(BASELINE) as f:
+                base = json.load(f)
+        base.setdefault("scaling", {}).update(results)
+        base["scaling_note"] = (
+            "dense_us/sparse_us per round, median-of-%d after %d warmup "
+            "rounds; kout family, sgp (K=1) gossip-dominated config"
+            % (rounds, WARMUP))
+        with open(BASELINE, "w") as f:
+            json.dump(base, f, indent=1)
+        print(f"# recorded scaling table -> {BASELINE}")
+    if json_out:
+        with open(json_out, "w") as f:
+            json.dump({"scaling": results}, f, indent=1)
+        print(f"# wrote scaling results -> {json_out}")
+    return results
 
 
 def _smoke_speedups() -> dict:
@@ -125,13 +225,13 @@ def _smoke_speedups() -> dict:
         tr = FLTrainer(net.loss, net.init, cdata, algo, topo, seed=0,
                        participation=0.25, flat=(path == "flat"))
         timings[path] = _time_rounds(tr, 8)
-        emit(f"round/smoke/{path}", timings[path], "n=16,rounds=8,min")
+        emit(f"round/smoke/{path}", timings[path], "n=16,rounds=8,median")
     tr = FLTrainer(net.loss, net.init, cdata, algo, topo, seed=0,
                    participation=0.25)
     loop_us = _time_loop(tr, 8)
     scan_us = _time_scanned(tr, 8)
-    emit("round/smoke/loop", loop_us, "n=16,rounds=8,min")
-    emit("round/smoke/scanned", scan_us, "n=16,rounds=8,min,one-jit")
+    emit("round/smoke/loop", loop_us, "n=16,rounds=8,median")
+    emit("round/smoke/scanned", scan_us, "n=16,rounds=8,median,one-jit")
     return {"speedup": timings["pytree"] / timings["flat"],
             "scan_speedup": loop_us / scan_us}
 
@@ -140,34 +240,38 @@ def smoke(record: bool = False, json_out: str | None = None) -> int:
     """CI gate: compare the flat path's pytree-relative speedup AND the
     scanned superstep driver's loop-relative speedup against the recorded
     baselines.  Absolute round times vary wildly across runners; ratios of
-    two paths measured back-to-back on the same box do not, so a
-    >SMOKE_TOLERANCE drop means the path itself regressed.  ``record``
-    rewrites the baseline instead (run on a quiet machine); ``json_out``
-    additionally writes the measured ratios + verdicts as JSON (uploaded as
-    a CI artifact)."""
+    two paths measured back-to-back on the same box do not — and each
+    ratio is a median-of-k with explicit warmup, so a single scheduler
+    hiccup can no longer define the measurement.  A >SMOKE_TOLERANCE drop
+    of either median means the path itself regressed.  ``record`` rewrites
+    the baseline instead (run on a quiet machine; repeated --record runs
+    keep the minimum, widening the gate floor); ``json_out`` additionally
+    writes the measured ratios + verdicts as JSON (uploaded as a CI
+    artifact)."""
     measured = _smoke_speedups()
     emit("round/smoke/speedup", measured["speedup"], "pytree_us/flat_us")
     emit("round/smoke/scan_speedup", measured["scan_speedup"],
          "loop_us/scanned_us")
     if record:
-        # Record the MINIMUM of this and any previously recorded ratio —
-        # the gate floor must clear runner noise, and a single quiet-box
-        # run would otherwise tighten it to the point of flaking.
-        note = ("pytree_us/flat_us + loop_us/scanned_us, min over recorded "
-                "runs; each gate floor is ratio/tolerance - repeat --record "
-                "to widen")
+        # Keep the MINIMUM of this and any previously recorded ratio —
+        # the gate floor must clear runner noise; repeat --record to widen.
+        note = ("pytree_us/flat_us + loop_us/scanned_us, each a "
+                "median-of-8 rounds after %d warmup rounds; min over "
+                "recorded runs - repeat --record to widen" % WARMUP)
         recorded = dict(measured)
+        extra = {}
         if os.path.exists(BASELINE):
             with open(BASELINE) as f:
                 prev = json.load(f)
             for key in recorded:
                 recorded[key] = min(recorded[key],
                                     prev.get(key, recorded[key]))
-            note = prev.get("note", note)
+            extra = {k: prev[k] for k in ("scaling", "scaling_note")
+                     if k in prev}
         with open(BASELINE, "w") as f:
             json.dump({"algo": "dfedsgpsm", "n_clients": N_CLIENTS,
                        **{k: round(v, 4) for k, v in recorded.items()},
-                       "tolerance": SMOKE_TOLERANCE, "note": note},
+                       "tolerance": SMOKE_TOLERANCE, "note": note, **extra},
                       f, indent=1)
         print(f"# recorded baseline {recorded} -> {BASELINE}")
         if json_out:
@@ -213,13 +317,29 @@ if __name__ == "__main__":
                          ">%.1fx flat-path OR scanned-driver slowdown)"
                          % SMOKE_TOLERANCE)
     ap.add_argument("--record", action="store_true",
-                    help="re-record the baseline instead of gating")
+                    help="re-record the baseline (smoke ratios, or the "
+                         "scaling table when --n-clients is given) instead "
+                         "of gating")
+    ap.add_argument("--n-clients", default=None, metavar="N[,N...]",
+                    help="sparse-vs-dense gossip scaling sweep over these "
+                         "client counts (e.g. 16,64,256) at fixed --k-out")
+    ap.add_argument("--k-out", type=int, default=10,
+                    help="out-degree for the --n-clients sweep (paper "
+                         "setting: 10); clipped to n-1 per point")
+    ap.add_argument("--rounds", type=int, default=5,
+                    help="timed rounds per --n-clients point (median)")
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="also write the smoke ratios + verdicts as JSON "
-                         "(CI uploads this as an artifact)")
+                    help="also write the smoke ratios + verdicts (or the "
+                         "scaling table) as JSON (CI uploads this as an "
+                         "artifact)")
     ap.add_argument("--fast", action="store_true",
                     help="fewer timing rounds for the full benchmark")
     args = ap.parse_args()
+    if args.n_clients:
+        ns = [int(x) for x in args.n_clients.split(",") if x]
+        scaling(ns, k_out=args.k_out, rounds=args.rounds,
+                record=args.record, json_out=args.json)
+        sys.exit(0)
     if args.smoke or args.record:
         sys.exit(smoke(record=args.record, json_out=args.json))
     main(fast=args.fast)

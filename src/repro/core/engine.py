@@ -116,6 +116,9 @@ class FLTrainer:
       flat: run rounds on the flat (n, D) bank through the Pallas kernels
         (default); ``False`` selects the seed per-leaf pytree path, kept as
         the kernel-free equivalence oracle.
+      gossip: mixing-operator representation — ``"auto"`` (density rule:
+        neighbor-list sparse gossip once n is large and k_max/n small),
+        or force ``"sparse"`` / ``"dense"``.
 
     ``fit`` drives ``program.run_superstep`` — jit-resident supersteps of
     rounds with in-scan eval — and returns per-round history records; for
@@ -133,6 +136,7 @@ class FLTrainer:
         seed: int = 0,
         participation: float = 0.1,
         flat: bool = True,
+        gossip: str = "auto",
     ):
         if not flat and (
             algo.solver != "sam_momentum"
@@ -155,7 +159,8 @@ class FLTrainer:
         self.flat = flat
         self.n = topo.n_clients
         self.program = make_program(
-            loss_fn, init_fn, client_data, algo, topo, participation
+            loss_fn, init_fn, client_data, algo, topo, participation,
+            gossip=gossip,
         )
         self.spec = self.program.spec
         self._exp_cycle = self.program.exp_cycle

@@ -73,7 +73,16 @@ class RoundProgram:
     lr: float
     lr_decay: float
     selection: bool
-    exp_cycle: Any  # (hops, n, n) stack for time-varying exponential graphs
+    # Stack for time-varying exponential graphs: (hops, n, n) dense, or a
+    # stacked (hops, n, 2) NeighborList on the sparse path.
+    exp_cycle: Any
+    # Mixing-operator representation: with sparse_mix the round samples
+    # fixed-shape (n, k_max) neighbor lists and the whole push-sum step
+    # (bank AND weight vector) runs O(n * k_max * D) without ever
+    # materializing (n, n).  Resolved at build time by the density rule in
+    # repro.kernels.ops.use_sparse_gossip (gossip="auto") or forced.
+    gossip: str = "auto"
+    sparse_mix: bool = False
 
     def __post_init__(self):
         # Per-program memo of compiled superstep drivers, keyed on the
@@ -99,10 +108,30 @@ class RoundProgram:
 
     # -- mixing-matrix selection --------------------------------------------
 
-    def mixing_matrix(self, tkey: jax.Array, state: FLState) -> jnp.ndarray:
+    def mixing_matrix(self, tkey: jax.Array, state: FLState):
         # Every sampled family honors the configured ``topo.k_out`` —
         # ``participation`` only drives central (server) client sampling.
+        # Returns the dense (n, n) matrix, or the fixed-shape NeighborList
+        # when the density rule picked the sparse representation; every
+        # downstream consumer (mixers, pushsum, kernels) dispatches on the
+        # type.
         k_link = self.topo.k_out
+        if self.sparse_mix:
+            if self.mixer.kind == "symmetric":
+                return topology.sample_symmetric_neighbors(
+                    tkey, self.n, k_link
+                )
+            if self.selection:
+                return topology.sample_kout_selective_neighbors(
+                    tkey, state.losses, self.n, k_link
+                )
+            if self.exp_cycle is not None:
+                hops = self.exp_cycle.idx.shape[0]
+                t = jnp.mod(state.round, hops)
+                return topology.NeighborList(
+                    self.exp_cycle.idx[t], self.exp_cycle.wgt[t]
+                )
+            return topology.sample_neighbors(tkey, self.topo, t=0)
         if self.mixer.kind == "symmetric":
             return topology.sample_symmetric_k_regular(tkey, self.n, k_link)
         if self.selection:
@@ -285,12 +314,22 @@ def make_program(
     algo,
     topo: topology.TopologyConfig,
     participation: float = 0.1,
+    gossip: str = "auto",
 ) -> RoundProgram:
     """Compose an ``AlgoConfig`` into a :class:`RoundProgram`.
 
     The bank spec is built from ``jax.eval_shape`` of ``init_fn`` — no
     parameters are materialized here; ``program.init`` owns that.
+
+    ``gossip`` picks the mixing-operator representation: ``"auto"``
+    (default) applies the density rule in
+    :func:`repro.kernels.ops.use_sparse_gossip` to the family's static
+    ``k_max``; ``"sparse"`` / ``"dense"`` force neighbor-list or dense
+    sampling (benchmarks compare the two; small recorded configs always
+    resolve dense, keeping the golden traces bit-for-bit).
     """
+    from repro.kernels import ops as kops
+
     solver, compressor, mixer = make_stages(algo)
     if mixer.kind == "central" and not isinstance(
         compressor, IdentityCompressor
@@ -301,14 +340,32 @@ def make_program(
             "central (server) rounds do not model compressed communication; "
             f"drop compressor={algo.compressor!r}/quantize_gossip"
         )
+    if gossip not in ("auto", "sparse", "dense"):
+        raise ValueError(f"gossip must be auto|sparse|dense, got {gossip!r}")
+    if mixer.kind == "central":
+        sparse_mix = False
+    elif gossip == "sparse":
+        if topo.kind == "full":
+            raise ValueError(
+                "the full graph has no sparse neighbor-list form"
+            )
+        sparse_mix = True
+    elif gossip == "dense":
+        sparse_mix = False
+    else:
+        sparse_mix = kops.use_sparse_gossip(
+            topo.n_clients, topology.neighbor_k_max(topo, mixer.kind)
+        )
     spec = make_spec(jax.eval_shape(init_fn, jax.random.PRNGKey(0)))
     # Exponential graphs cycle through log2(n) hop matrices; precompute
     # the stack once so the (traced) round index can select the graph.
-    exp_cycle = (
-        topology.exponential_cycle(topo.n_clients)
-        if topo.kind == "exponential" and topo.time_varying
-        else None
-    )
+    exp_cycle = None
+    if topo.kind == "exponential" and topo.time_varying:
+        exp_cycle = (
+            topology.neighbors_exponential_cycle(topo.n_clients)
+            if sparse_mix
+            else topology.exponential_cycle(topo.n_clients)
+        )
     return RoundProgram(
         solver=solver,
         compressor=compressor,
@@ -324,4 +381,6 @@ def make_program(
         lr_decay=algo.lr_decay,
         selection=algo.selection,
         exp_cycle=exp_cycle,
+        gossip=gossip,
+        sparse_mix=sparse_mix,
     )

@@ -23,33 +23,53 @@ __all__ = [
 ]
 
 
-def gossip(P: jnp.ndarray, stacked_params, use_kernel: bool | None = None):
+def gossip(P, stacked_params, use_kernel: bool | None = None):
     """One mixing step ``X' = P @ X`` applied leaf-wise to a client-stacked
-    pytree (every leaf has leading dim n).  Backend selection is shared with
-    the bank path via :func:`repro.kernels.ops.gossip_mix`; pass
-    ``use_kernel=False`` to pin the kernel-free oracle."""
+    pytree (every leaf has leading dim n).  ``P`` may be the dense matrix
+    or a :class:`~repro.core.topology.NeighborList`; backend selection is
+    shared with the bank path via :func:`repro.kernels.ops.gossip_mix` /
+    ``gossip_mix_sparse``; pass ``use_kernel=False`` to pin the kernel-free
+    oracle."""
+    from repro.core.topology import NeighborList
     from repro.kernels import ops as kops
 
     def mix(x):
         flat = x.reshape(x.shape[0], -1)
-        return kops.gossip_mix(P, flat, use_kernel).reshape(x.shape)
+        if isinstance(P, NeighborList):
+            out = kops.gossip_mix_sparse(P.idx, P.wgt, flat, use_kernel)
+        else:
+            out = kops.gossip_mix(P, flat, use_kernel)
+        return out.reshape(x.shape)
 
     return jax.tree.map(mix, stacked_params)
 
 
-def gossip_bank(P: jnp.ndarray, X: jnp.ndarray,
+def gossip_bank(P, X: jnp.ndarray,
                 use_kernel: bool | None = None) -> jnp.ndarray:
     """One mixing step ``X' = P @ X`` on the flat (n, D) parameter bank —
-    the entire model in a single matmul.  Backend selection is shared with
-    the pytree path via :func:`repro.kernels.ops.gossip_mix` (the Pallas
-    kernel whenever the bank is big enough to amortize it)."""
+    the entire model in a single matmul, or a single O(n * k_max * D)
+    neighbor gather when ``P`` is a
+    :class:`~repro.core.topology.NeighborList`.  Backend selection is
+    shared with the pytree path via :func:`repro.kernels.ops.gossip_mix` /
+    ``gossip_mix_sparse`` (the Pallas kernel whenever the bank is big
+    enough to amortize it)."""
+    from repro.core.topology import NeighborList
     from repro.kernels import ops as kops
 
+    if isinstance(P, NeighborList):
+        return kops.gossip_mix_sparse(P.idx, P.wgt, X, use_kernel)
     return kops.gossip_mix(P, X, use_kernel)
 
 
-def gossip_weights(P: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
-    """Mix the push-sum weights: ``w' = P @ w`` (shape (n,))."""
+def gossip_weights(P, w: jnp.ndarray) -> jnp.ndarray:
+    """Mix the push-sum weights: ``w' = P @ w`` (shape (n,)) — the same
+    neighbor gather as the bank when ``P`` is a NeighborList, so the full
+    push-sum round never materializes (n, n)."""
+    from repro.core.topology import NeighborList
+
+    if isinstance(P, NeighborList):
+        wf = w.astype(jnp.float32)
+        return jnp.sum(P.wgt * wf[P.idx], axis=1).astype(w.dtype)
     return (P @ w.astype(jnp.float32)).astype(w.dtype)
 
 

@@ -94,13 +94,14 @@ class SamMomentumSolver:
             # Momentum off: v' = g exactly, so the momentum bank is never
             # read — keep it out of the scan carry and let XLA fold
             # ``0 * 0 + g`` and DCE the v write on the CPU inline path.
-            zeros = jnp.zeros(X.shape, jnp.float32)
+            # V0 doubles as the kernel's zero momentum operand (one (n, D)
+            # zero bank, not two identical ones).
 
             def step0(carry, _):
                 X, ks = carry
                 ks, G_tree, losses, accs = jax.vmap(grad_one)(X, w, ks, data)
                 G = spec.ravel_stacked(G_tree)  # one contiguous write
-                X, _, _ = kops.fused_update_bank(X, zeros, G, 0.0, lr, w)
+                X, _, _ = kops.fused_update_bank(X, V0, G, 0.0, lr, w)
                 return (X, ks), (losses, accs)
 
             (X, _), (losses, accs) = jax.lax.scan(

@@ -9,11 +9,19 @@ not row-stochastic.  The gossip step is ``x_i' = sum_j P[i, j] x_j`` i.e.
 
 Symmetric (undirected) baselines use doubly-stochastic Metropolis-Hastings
 weights on an undirected graph.
+
+Every sampled/structured family also exists in a **neighbor-list** form
+(:class:`NeighborList`): fixed-shape ``(n, k_max)`` receiver-side index and
+weight arrays with ``X'[i] = sum_l wgt[i, l] * X[idx[i, l]]`` — the sparse
+representation the ``gossip_gather`` kernel consumes, padded with zero-weight
+self-loops so it is jit/scan-safe.  ``dense_from_neighbors`` recovers the
+equivalent dense ``P`` (the equivalence the property tests pin).
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -21,6 +29,7 @@ import numpy as np
 
 __all__ = [
     "TopologyConfig",
+    "NeighborList",
     "column_stochastic_from_adjacency",
     "metropolis_weights",
     "directed_ring",
@@ -30,6 +39,15 @@ __all__ = [
     "sample_kout_selective",
     "sample_symmetric_k_regular",
     "sample_mixing",
+    "neighbors_ring",
+    "neighbors_exponential",
+    "neighbors_exponential_cycle",
+    "sample_kout_neighbors",
+    "sample_kout_selective_neighbors",
+    "sample_symmetric_neighbors",
+    "sample_neighbors",
+    "neighbor_k_max",
+    "dense_from_neighbors",
     "is_column_stochastic",
     "union_strongly_connected",
 ]
@@ -182,6 +200,177 @@ def sample_mixing(
         if losses is not None:
             return sample_kout_selective(key, losses, n, k)
         return sample_kout(key, n, k)
+    raise ValueError(f"unknown topology kind: {cfg.kind}")
+
+
+# ---------------------------------------------------------------------------
+# Neighbor-list (sparse) representation.
+# ---------------------------------------------------------------------------
+
+class NeighborList(NamedTuple):
+    """Receiver-side sparse mixing operator, fixed shape ``(n, k_max)``.
+
+    ``idx[i, l]`` names the l-th in-neighbor of client i (the sender) and
+    ``wgt[i, l]`` its mixing weight: ``X'[i] = sum_l wgt[i,l] * X[idx[i,l]]``.
+    Slot 0 is the self-loop by convention; padding slots point back at
+    ``i`` with weight 0, so ragged in-degrees share one jittable shape and
+    duplicate indices simply accumulate.  A NamedTuple, hence a pytree —
+    it rides through ``jax.lax.scan`` carries and ``jax.jit`` untouched,
+    and a stacked ``(hops, n, k_max)`` cycle indexes per-field.
+    """
+
+    idx: jnp.ndarray  # (n, k_max) int32 sender indices
+    wgt: jnp.ndarray  # (n, k_max) float32 mixing weights
+
+
+def dense_from_neighbors(nl: NeighborList, n: int) -> jnp.ndarray:
+    """Densify: P[i, idx[i, l]] += wgt[i, l] — the matrix the sparse gather
+    is equivalent to (duplicate slots accumulate, pads add 0)."""
+    rows = jnp.arange(n)[:, None]
+    return jnp.zeros((n, n), jnp.float32).at[rows, nl.idx].add(nl.wgt)
+
+
+def neighbors_ring(n: int) -> NeighborList:
+    """Static directed ring in neighbor form: i receives from i-1 and
+    itself, weight 1/2 each — exactly :func:`directed_ring`."""
+    i = jnp.arange(n, dtype=jnp.int32)
+    idx = jnp.stack([i, (i - 1) % n], axis=1)
+    return NeighborList(idx, jnp.full((n, 2), 0.5, jnp.float32))
+
+
+def neighbors_exponential(n: int, t: int = 0) -> NeighborList:
+    """One-peer exponential graph in neighbor form: i receives from
+    ``i - 2^(t mod log n)`` and itself — exactly
+    :func:`directed_exponential`."""
+    hops = max(int(np.ceil(np.log2(max(n, 2)))), 1)
+    step = 2 ** (t % hops)
+    i = jnp.arange(n, dtype=jnp.int32)
+    idx = jnp.stack([i, (i - step) % n], axis=1)
+    return NeighborList(idx, jnp.full((n, 2), 0.5, jnp.float32))
+
+
+def neighbors_exponential_cycle(n: int) -> NeighborList:
+    """All ``log2(n)`` exponential graphs stacked ``(hops, n, 2)`` — the
+    neighbor-form twin of :func:`exponential_cycle` (round t uses
+    ``jax.tree.map(lambda a: a[t % hops], cycle)``)."""
+    hops = max(int(np.ceil(np.log2(max(n, 2)))), 1)
+    nls = [neighbors_exponential(n, t) for t in range(hops)]
+    return NeighborList(
+        jnp.stack([nl.idx for nl in nls]), jnp.stack([nl.wgt for nl in nls])
+    )
+
+
+def _kin_weights(picks: jnp.ndarray, n: int) -> NeighborList:
+    """Column-stochastic weights for receiver-side picks.
+
+    ``picks[i]`` are the k distinct senders chosen by receiver i.  Sender
+    j's out-degree (receivers counting it, plus its self-loop) is computed
+    by one scatter-count, and every edge from j carries weight
+    ``1 / (out_degree(j) + 1)`` — columns sum to 1 exactly, matching the
+    paper's sender-normalized convention.
+    """
+    i = jnp.arange(n, dtype=jnp.int32)
+    outdeg = jnp.zeros((n,), jnp.float32).at[picks.reshape(-1)].add(1.0) + 1.0
+    idx = jnp.concatenate([i[:, None], picks.astype(jnp.int32)], axis=1)
+    return NeighborList(idx, 1.0 / outdeg[idx])
+
+
+@partial(jax.jit, static_argnums=(1, 2))
+def sample_kout_neighbors(key: jax.Array, n: int, k: int) -> NeighborList:
+    """Sparse twin of :func:`sample_kout`: fixed-shape ``(n, k+1)`` lists.
+
+    The dense sampler fixes each sender's out-degree (k-out); a fixed-shape
+    *gather* list must instead fix each receiver's in-degree, so this is the
+    k-in orientation of the same asymmetric sparse family — every receiver
+    picks k distinct in-neighbors uniformly and senders still normalize by
+    their (now variable) out-degree, keeping ``P`` exactly
+    column-stochastic.  Both satisfy Assumption 1 the same way.
+    """
+    scores = jax.random.uniform(key, (n, n))
+    scores = scores - 2.0 * jnp.eye(n)  # self rides in slot 0, not the picks
+    _, picks = jax.lax.top_k(scores, k)  # (n, k) senders per receiver
+    return _kin_weights(picks, n)
+
+
+@partial(jax.jit, static_argnums=(2, 3))
+def sample_kout_selective_neighbors(
+    key: jax.Array, losses: jnp.ndarray, n: int, k: int, temp: float = 1.0
+) -> NeighborList:
+    """Sparse twin of :func:`sample_kout_selective` (paper Eq. 2): the
+    selection score ``|f_i - f_j|`` is symmetric in (i, j), so the receiver
+    picks its k most loss-divergent in-neighbors via Gumbel-top-k —
+    the same criterion, gather-form fixed shape."""
+    diff = jnp.abs(losses[:, None] - losses[None, :]) / temp
+    logits = diff - 1e9 * jnp.eye(n)
+    gumbel = jax.random.gumbel(key, (n, n))
+    _, picks = jax.lax.top_k(logits + gumbel, k)
+    return _kin_weights(picks, n)
+
+
+@partial(jax.jit, static_argnums=(1, 2))
+def sample_symmetric_neighbors(key: jax.Array, n: int, k: int) -> NeighborList:
+    """Random undirected ~k-regular graph with Metropolis weights, degree
+    bounded by construction: the union of ``k`` random permutation
+    matchings (node i links to ``pi_t(i)`` and ``pi_t^{-1}(i)``), so every
+    node has at most 2k neighbors and the list shape is ``(n, 2k+1)``.
+
+    The dense :func:`sample_symmetric_k_regular` symmetrizes per-row top-k
+    picks, whose degree is unbounded in the tail — fine for a dense matrix,
+    unrepresentable in fixed-shape lists.  Weights are Metropolis with
+    multiplicity (``pi_t(i) = pi_s(i)`` duplicates accumulate on both
+    endpoints symmetrically), so the densified matrix is exactly doubly
+    stochastic; ``pi_t(i) = i`` self-hits are zero-weight pads.
+    """
+    perms = jnp.stack(
+        [jax.random.permutation(kk, n) for kk in jax.random.split(key, k)]
+    )  # (k, n): pi_t
+    invs = jnp.argsort(perms, axis=1)  # pi_t^{-1}
+    nbrs = jnp.concatenate([perms.T, invs.T], axis=1).astype(jnp.int32)
+    i = jnp.arange(n, dtype=jnp.int32)
+    nonself = nbrs != i[:, None]
+    deg = nonself.sum(axis=1).astype(jnp.float32)  # with multiplicity
+    w = nonself / (1.0 + jnp.maximum(deg[:, None], deg[nbrs]))
+    idx = jnp.concatenate([i[:, None], nbrs], axis=1)
+    wgt = jnp.concatenate([1.0 - w.sum(axis=1, keepdims=True), w], axis=1)
+    return NeighborList(idx, wgt.astype(jnp.float32))
+
+
+def neighbor_k_max(cfg: TopologyConfig, mixer_kind: str = "directed") -> int:
+    """Static ``k_max`` of the neighbor-list form for a topology family —
+    the number the density dispatch rule reasons about.  ``full`` has no
+    sparse form (k_max = n)."""
+    if mixer_kind == "symmetric" or cfg.kind == "symmetric":
+        return 2 * cfg.k_out + 1
+    if cfg.kind in ("ring", "exponential"):
+        return 2
+    if cfg.kind == "full":
+        return cfg.n_clients
+    if cfg.kind == "kout":
+        return cfg.k_out + 1
+    raise ValueError(f"unknown topology kind: {cfg.kind}")
+
+
+def sample_neighbors(
+    key: jax.Array,
+    cfg: TopologyConfig,
+    t: int = 0,
+    losses: jnp.ndarray | None = None,
+) -> NeighborList:
+    """Sample the round-t mixing operator in neighbor-list form — the
+    sparse twin of :func:`sample_mixing`."""
+    n, k = cfg.n_clients, cfg.k_out
+    if cfg.kind == "ring":
+        return neighbors_ring(n)
+    if cfg.kind == "exponential":
+        return neighbors_exponential(n, t if cfg.time_varying else 0)
+    if cfg.kind == "full":
+        raise ValueError("the full graph has no sparse neighbor-list form")
+    if cfg.kind == "symmetric":
+        return sample_symmetric_neighbors(key, n, k)
+    if cfg.kind == "kout":
+        if losses is not None:
+            return sample_kout_selective_neighbors(key, losses, n, k)
+        return sample_kout_neighbors(key, n, k)
     raise ValueError(f"unknown topology kind: {cfg.kind}")
 
 

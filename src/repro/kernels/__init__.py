@@ -1,6 +1,7 @@
 """Pallas TPU kernels for the framework's compute hot spots.
 
   gossip_matmul   — push-sum mixing P @ X (MXU-tiled; the paper's comm step)
+  gossip_gather   — sparse neighbor-indexed mixing, O(n * k_max * D)
   fused_update    — Algorithm-1 inner loop (de-bias + momentum + descent)
   flash_attention — VMEM-tiled online-softmax attention (causal/SW/GQA)
 

@@ -13,11 +13,15 @@ from repro.kernels.fused_update import (
     fused_update_bank_pallas,
     fused_update_pallas,
 )
+from repro.kernels.gossip_gather import gossip_gather_pallas
 from repro.kernels.gossip_matmul import gossip_matmul_pallas
 
 __all__ = [
     "gossip_matmul",
+    "gossip_gather",
     "gossip_mix",
+    "gossip_mix_sparse",
+    "use_sparse_gossip",
     "fused_update",
     "fused_update_bank",
     "flash_attention",
@@ -33,6 +37,26 @@ def on_tpu() -> bool:
 # kernel dominates on CPU and the plain einsum wins; on TPU the Mosaic
 # kernel is always the right choice.  One threshold, one place.
 _GOSSIP_KERNEL_MIN_ELEMS = 1 << 20
+
+# Sparse-vs-dense representation dispatch: the O(n * k_max * D) gather
+# wins once the neighbor lists are materially sparser than the dense
+# matrix AND n is big enough that the O(n^2 * D) matmul is the round's
+# dominant cost.  Below either bound the dense path stays — which pins
+# the recorded golden configs (n <= 16) to the dense samplers bit-for-bit.
+# One rule, one place (the sparse twin of _GOSSIP_KERNEL_MIN_ELEMS).
+_SPARSE_GOSSIP_MIN_CLIENTS = 32
+_SPARSE_GOSSIP_MAX_DENSITY = 0.25
+
+
+def use_sparse_gossip(n: int, k_max: int) -> bool:
+    """THE density rule: neighbor-list gossip iff ``n`` is at least
+    ``_SPARSE_GOSSIP_MIN_CLIENTS`` and ``k_max / n`` is at most
+    ``_SPARSE_GOSSIP_MAX_DENSITY``.  Static shapes in, static bool out —
+    callers decide the representation at trace time."""
+    return (
+        n >= _SPARSE_GOSSIP_MIN_CLIENTS
+        and k_max <= _SPARSE_GOSSIP_MAX_DENSITY * n
+    )
 
 
 def gossip_mix(P, M, use_kernel: bool | None = None):
@@ -57,6 +81,24 @@ def gossip_mix(P, M, use_kernel: bool | None = None):
     return out.astype(M.dtype)
 
 
+def gossip_mix_sparse(idx, wgt, M, use_kernel: bool | None = None):
+    """Sparse mixing ``M'[i] = sum_l wgt[i,l] * M[idx[i,l]]`` — the
+    neighbor-list twin of :func:`gossip_mix`, same centralized backend
+    rule: the Pallas gather kernel on TPU, on CPU only when ``M`` is big
+    enough to amortize it (the kernel's slot-loop also avoids the
+    reference path's ``(n, k_max, D)`` gather temporary, exactly when that
+    temporary would hurt)."""
+    import jax.numpy as jnp
+
+    if use_kernel is None:
+        use_kernel = on_tpu() or M.size >= _GOSSIP_KERNEL_MIN_ELEMS
+    if use_kernel:
+        return gossip_gather(idx, wgt.astype(jnp.float32), M)
+    from repro.kernels.ref import gossip_gather_ref
+
+    return gossip_gather_ref(idx, wgt, M)
+
+
 def gossip_matmul(P, X, **kw):
     interpret = kw.setdefault("interpret", not on_tpu())
     if interpret:
@@ -67,6 +109,20 @@ def gossip_matmul(P, X, **kw):
         kw.setdefault("block_n", X.shape[0])
         kw.setdefault("block_d", X.shape[1])
     return gossip_matmul_pallas(P, X, **kw)
+
+
+def gossip_gather(idx, wgt, X, **kw):
+    interpret = kw.pop("interpret", not on_tpu())
+    if interpret and "block_d" not in kw:
+        # Off-TPU the same kernel body runs as a fori_loop of (n, panel)
+        # column blocks: composed after the local solver, the whole-bank
+        # gather makes XLA CPU materialize one fresh (n, D) temp per
+        # neighbor slot (first-touch writes dominate); panel blocking
+        # keeps every intermediate cache-resident and bitwise identical.
+        from repro.kernels.gossip_gather import gossip_gather_panels
+
+        return gossip_gather_panels(idx, wgt, X, **kw)
+    return gossip_gather_pallas(idx, wgt, X, interpret=interpret, **kw)
 
 
 def fused_update(x, v, g, alpha, eta, w, **kw):

@@ -4,13 +4,23 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["gossip_matmul_ref", "fused_update_ref", "fused_update_bank_ref",
-           "flash_attention_ref"]
+__all__ = ["gossip_matmul_ref", "gossip_gather_ref", "fused_update_ref",
+           "fused_update_bank_ref", "flash_attention_ref"]
 
 
 def gossip_matmul_ref(P, X):
     return jnp.einsum(
         "ij,jd->id", P.astype(jnp.float32), X.astype(jnp.float32),
+        precision=jax.lax.Precision.HIGHEST).astype(X.dtype)
+
+
+def gossip_gather_ref(idx, wgt, X):
+    """Sparse gossip oracle: Y[i] = sum_l wgt[i,l] * X[idx[i,l]] via one
+    row gather + einsum (materializes the (n, k_max, D) gather — fine as
+    ground truth, the kernel accumulates slot-by-slot instead)."""
+    gathered = jnp.take(X, idx, axis=0).astype(jnp.float32)  # (n, k_max, D)
+    return jnp.einsum(
+        "nk,nkd->nd", wgt.astype(jnp.float32), gathered,
         precision=jax.lax.Precision.HIGHEST).astype(X.dtype)
 
 

@@ -153,8 +153,20 @@ def _lower_one(cfg, shape, mesh_kind: str, step_cfg):
                                      sharding=NamedSharding(mesh, P("pod")))
             batch = _abstract_batch(cfg, shape, mesh, True, stacked=True)
             P_pod = jax.ShapeDtypeStruct((n_pods, n_pods), jnp.float32)
+            # Abstract compressor carry: stateful stages (topk_ef) lower
+            # with their (n_pods, D) residual bank, stateless with ().
+            from repro.core.flat import make_spec
+            from repro.launch.steps import resolve_compressor
+
+            comp = ()
+            if resolve_compressor(step_cfg).stateful:
+                row_view = jax.tree.map(
+                    lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+                    params)
+                comp = jax.ShapeDtypeStruct(
+                    (n_pods, make_spec(row_view).dim), jnp.float32)
             fn = jax.jit(make_round_step(api, step_cfg), donate_argnums=(0, 1))
-            lowered = fn.lower(params, v, w, batch, P_pod)
+            lowered = fn.lower(params, v, w, comp, batch, P_pod)
         elif shape.kind == "train":
             params = _abstract_params(api, mesh, False, False)
             v = params

@@ -23,7 +23,8 @@ from repro.core.sam import apply_update, momentum_update, sam_gradient
 from repro.models.registry import ModelApi
 
 __all__ = ["StepConfig", "make_train_step", "make_round_step", "make_serve_step",
-           "pod_mixing_matrix"]
+           "pod_mixing_matrix", "pod_mixing_neighbors", "resolve_compressor",
+           "init_pod_comp_state"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,9 +40,11 @@ class StepConfig:
     # one chunk (peak memory / microbatches), at no extra HBM traffic.
     microbatches: int = 1
     # Communication stage for the pod gossip — a ``repro.core.stages``
-    # COMPRESSORS name.  Stateless compressors only (the pod round carries
-    # no compressor state across rounds).
+    # COMPRESSORS name.  Stateful stages (e.g. topk_ef) work too: their
+    # residual bank rides the round_step signature as the ``comp`` carry,
+    # exactly like ``FLState.comp`` in the simulation engine.
     compressor: str = "identity"
+    topk_ratio: float = 0.05  # kept fraction per row (topk_ef)
 
 
 def _microbatched_loss(loss_fn, n_micro: int):
@@ -78,6 +81,47 @@ def pod_mixing_matrix(n_pods: int) -> jnp.ndarray:
     return 0.5 * (eye + ring) if n_pods > 1 else eye
 
 
+def pod_mixing_neighbors(n_pods: int):
+    """:func:`pod_mixing_matrix` in neighbor-list form — the O(n_pods * D)
+    representation for rings wide enough to clear the density rule
+    (``repro.kernels.ops.use_sparse_gossip``); ``round_step`` accepts
+    either for ``P_pod``."""
+    from repro.core.topology import NeighborList, neighbors_ring
+
+    if n_pods == 1:
+        return NeighborList(
+            jnp.zeros((1, 1), jnp.int32), jnp.ones((1, 1), jnp.float32)
+        )
+    return neighbors_ring(n_pods)
+
+
+def resolve_compressor(step_cfg: StepConfig):
+    """``step_cfg.compressor`` -> the ``repro.core.stages`` stage object."""
+    from repro.core.stages import COMPRESSORS
+
+    try:
+        return COMPRESSORS[step_cfg.compressor](step_cfg)
+    except KeyError:
+        raise ValueError(
+            f"unknown compressor stage {step_cfg.compressor!r}; "
+            f"choose from {sorted(COMPRESSORS)}"
+        ) from None
+
+
+def init_pod_comp_state(compressor, params):
+    """Initial compressor carry for the pod round: the ``(n_pods, D)``
+    residual bank for stateful stages (D from the replicas' flat row
+    width), ``()`` for stateless ones."""
+    if not compressor.stateful:
+        return ()
+    from repro.core.flat import make_spec
+
+    row_view = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), params)
+    n_pods = jax.tree.leaves(params)[0].shape[0]
+    return compressor.init_state(n_pods, make_spec(row_view).dim)
+
+
 def make_train_step(api: ModelApi, step_cfg: StepConfig) -> Callable:
     """Single-client sharded local step: (params, v, w, batch) ->
     (params, v, metrics)."""
@@ -103,8 +147,8 @@ def make_round_step(
     compressor=None,
 ) -> Callable:
     """Multi-pod DFL round: (stacked params, stacked v, w (n_pods,),
-    batch (n_pods, ...), P_pod (n_pods, n_pods)) -> updated state + mean
-    {loss, acc} metrics.
+    comp, batch (n_pods, ...), P_pod) -> updated (params, v, w, comp) +
+    mean {loss, acc} metrics.
 
     Every leaf carries a leading replica axis sharded over "pod";
     ``spmd_axis_name`` threads that axis through all internal sharding
@@ -114,29 +158,23 @@ def make_round_step(
     simulation engine composes (``repro.core.stages``): with ``flat_mix``
     (default) replicas are ravelled into an ``(n_pods, D)`` bank, run
     through ``compressor.apply`` (``step_cfg.compressor`` when not given
-    explicitly; stateless only — the pod round carries no compressor state),
-    and mixed with one ``mixer.mix`` call — the flat ``gossip_matmul``
-    kernel — instead of a per-leaf einsum.  ``mixer`` defaults to the
-    directed push-sum stage; a ``SymmetricMixer`` swaps in doubly-stochastic
-    gossip with fixed weights.
+    explicitly), and mixed with one ``mixer.mix`` call — the flat gossip
+    kernel — instead of a per-leaf einsum.  ``comp`` is the compressor
+    carry (``init_pod_comp_state``): the error-feedback residual bank for
+    stateful stages like ``topk_ef``, ``()`` otherwise — threaded through
+    the round exactly like ``FLState.comp`` in ``core/program.py``.
+    ``P_pod`` is the dense ``(n_pods, n_pods)`` matrix or a
+    ``NeighborList`` (``pod_mixing_neighbors``); ``mixer`` defaults to the
+    directed push-sum stage; a ``SymmetricMixer`` swaps in
+    doubly-stochastic gossip with fixed weights.
     """
-    from repro.core.stages import COMPRESSORS, IdentityCompressor, PushSumMixer
+    from repro.core.stages import IdentityCompressor, PushSumMixer
+    from repro.core.topology import NeighborList
 
     local = make_train_step(api, step_cfg)
     mixer = mixer if mixer is not None else PushSumMixer()
     if compressor is None:
-        try:
-            compressor = COMPRESSORS[step_cfg.compressor](step_cfg)
-        except KeyError:
-            raise ValueError(
-                f"unknown compressor stage {step_cfg.compressor!r}; "
-                f"choose from {sorted(COMPRESSORS)}"
-            ) from None
-    if compressor.stateful:
-        raise ValueError(
-            "the pod round carries no compressor state across rounds; "
-            f"use a stateless compressor, not {type(compressor).__name__}"
-        )
+        compressor = resolve_compressor(step_cfg)
     if not flat_mix and not isinstance(compressor, IdentityCompressor):
         raise ValueError("compression requires flat_mix=True (bank layout)")
 
@@ -149,7 +187,7 @@ def make_round_step(
         (params, v), (losses, accs) = jax.lax.scan(body, (params, v), batches)
         return params, v, losses.mean(), accs.mean()
 
-    def mix_flat(params, w, P_pod):
+    def mix_flat(params, w, comp, P_pod):
         from jax.sharding import NamedSharding, PartitionSpec
         from repro.core.flat import make_spec
         from repro.launch import sharding as shlib
@@ -169,28 +207,41 @@ def make_round_step(
             if mesh is not None and "pod" in mesh.axis_names
             else None
         )
-        if row_sharding is not None:
-            bank = jax.lax.with_sharding_constraint(bank, row_sharding)
-        _, bank = compressor.apply((), bank)
-        bank, w = mixer.mix(P_pod, bank, w)
-        if row_sharding is not None:
-            bank = jax.lax.with_sharding_constraint(bank, row_sharding)
-        return spec.unravel_stacked(bank), w
 
-    def mix_leafwise(params, w, P_pod):
+        def pin(x):
+            return (jax.lax.with_sharding_constraint(x, row_sharding)
+                    if row_sharding is not None else x)
+
+        bank = pin(bank)
+        if compressor.stateful:
+            # The residual bank has the same (n_pods, D) row layout.
+            comp = pin(comp)
+        comp, bank = compressor.apply(comp, bank)
+        bank, w = mixer.mix(P_pod, bank, w)
+        bank = pin(bank)
+        if compressor.stateful:
+            comp = pin(comp)
+        return spec.unravel_stacked(bank), w, comp
+
+    def mix_leafwise(params, w, comp, P_pod):
+        if isinstance(P_pod, NeighborList):
+            raise ValueError(
+                "neighbor-list P_pod requires flat_mix=True (bank layout)")
+
         def mix(x):
             return jnp.einsum(
                 "ij,j...->i...", P_pod, x.astype(jnp.float32)).astype(x.dtype)
 
         params = jax.tree.map(mix, params)
-        return params, mixer.mix_weights(P_pod, w)
+        return params, mixer.mix_weights(P_pod, w), comp
 
-    def round_step(params, v, w, batch, P_pod):
+    def round_step(params, v, w, comp, batch, P_pod):
         params, v, loss, acc = jax.vmap(one_pod, spmd_axis_name="pod")(
             params, v, w, batch)
         # compress + gossip over "pod" (same stages as the engine)
-        params, w = (mix_flat if flat_mix else mix_leafwise)(params, w, P_pod)
-        return params, v, w, {"loss": loss.mean(), "acc": acc.mean()}
+        params, w, comp = (mix_flat if flat_mix else mix_leafwise)(
+            params, w, comp, P_pod)
+        return params, v, w, comp, {"loss": loss.mean(), "acc": acc.mean()}
 
     return round_step
 

@@ -37,8 +37,11 @@ def main():
                          "host is only touched at superstep boundaries "
                          "(logging + checkpointing); 1 = per-round dispatch")
     ap.add_argument("--compress", default="identity",
-                    help="pod gossip compressor (stateless stage name, "
-                         "e.g. int8_rows)")
+                    help="pod gossip compressor stage name (e.g. int8_rows, "
+                         "topk_ef — stateful stages carry their residual "
+                         "bank through the round and checkpoints)")
+    ap.add_argument("--topk-ratio", type=float, default=0.05,
+                    help="kept fraction per row for --compress topk_ef")
     ap.add_argument("--smoke", action="store_true", help="reduced config")
     ap.add_argument("--host-mesh", action="store_true",
                     help="(2,2,2) mesh over 8 forced host devices")
@@ -60,9 +63,17 @@ def main():
     from repro import checkpoint
     from repro.configs.registry import get_config
     from repro.data.synthetic import make_lm_stream
+    from repro.kernels import ops as kops
     from repro.launch import sharding as shlib
     from repro.launch.mesh import make_host_mesh, make_production_mesh
-    from repro.launch.steps import StepConfig, make_round_step, pod_mixing_matrix
+    from repro.launch.steps import (
+        StepConfig,
+        init_pod_comp_state,
+        make_round_step,
+        pod_mixing_matrix,
+        pod_mixing_neighbors,
+        resolve_compressor,
+    )
     from repro.models.pdefs import PDef
     from repro.models.registry import get_model_api
 
@@ -74,25 +85,29 @@ def main():
     step_cfg = StepConfig(lr=args.lr, alpha=args.alpha, rho=args.rho,
                           local_steps=args.local_steps,
                           microbatches=args.microbatches,
-                          compressor=args.compress)
-    raw_round = make_round_step(api, step_cfg)
-    round_step = jax.jit(raw_round, donate_argnums=(0, 1))
+                          compressor=args.compress,
+                          topk_ratio=args.topk_ratio)
+    compressor = resolve_compressor(step_cfg)
+    raw_round = make_round_step(api, step_cfg, compressor=compressor)
+    round_step = jax.jit(raw_round, donate_argnums=(0, 1, 3))
 
-    def _superstep(params, v, w, toks_chunk, P_pod):
+    def _superstep(params, v, w, comp, toks_chunk, P_pod):
         """lax.scan a whole superstep of rounds inside one jit; per-round
         (loss, acc, w-mass) come back stacked for boundary logging."""
 
         def body(carry, batch):
-            params, v, w = carry
-            params, v, w, m = raw_round(params, v, w, {"tokens": batch}, P_pod)
-            return (params, v, w), (m["loss"], m["acc"], w.sum())
+            params, v, w, comp = carry
+            params, v, w, comp, m = raw_round(
+                params, v, w, comp, {"tokens": batch}, P_pod)
+            return (params, v, w, comp), (m["loss"], m["acc"], w.sum())
 
-        (params, v, w), ys = jax.lax.scan(body, (params, v, w), toks_chunk)
-        return params, v, w, ys
+        (params, v, w, comp), ys = jax.lax.scan(
+            body, (params, v, w, comp), toks_chunk)
+        return params, v, w, comp, ys
 
     # One executable per distinct chunk length (at most two: the full
     # superstep and the final remainder).
-    superstep_jit = jax.jit(_superstep, donate_argnums=(0, 1))
+    superstep_jit = jax.jit(_superstep, donate_argnums=(0, 1, 3))
 
     with shlib.use_mesh(mesh, fsdp=cfg.fsdp):
         defs = api.param_defs()
@@ -108,7 +123,12 @@ def main():
                               is_leaf=lambda x: isinstance(x, PDef))
         v = jax.tree.map(jnp.zeros_like, params)
         w = jnp.ones((n_pods,))
-        P_pod = pod_mixing_matrix(n_pods)
+        comp = init_pod_comp_state(compressor, params)
+        # Directed pod ring, k_max = 2: neighbor-list form once the pod
+        # count clears the shared density rule, dense below it.
+        P_pod = (pod_mixing_neighbors(n_pods)
+                 if kops.use_sparse_gossip(n_pods, 2)
+                 else pod_mixing_matrix(n_pods))
         toks = make_lm_stream(
             cfg.vocab_size, args.seq,
             args.rounds * n_pods * args.local_steps * args.batch)
@@ -121,6 +141,11 @@ def main():
             if path is not None:
                 like = {"params": params, "v": v, "w": w,
                         "round": np.zeros((), np.int32)}
+                if compressor.stateful:
+                    # The EF residual bank is part of the round state; a
+                    # ckpt recorded without it fails the structure check
+                    # instead of silently restarting the residual at zero.
+                    like["comp"] = comp
                 restored = checkpoint.restore(path, like=like)
                 # Re-pin the restored (host) arrays to the live shardings so
                 # the warm restart costs one device_put, not a re-partition.
@@ -131,6 +156,8 @@ def main():
                     lambda x, ref: jax.device_put(jnp.asarray(x), ref.sharding),
                     restored["v"], v)
                 w = jnp.asarray(restored["w"])
+                if compressor.stateful:
+                    comp = jnp.asarray(restored["comp"])
                 start = int(restored["round"]) + 1
                 print(f"[train] resumed {path} at round {start} "
                       f"(momentum bank restored)")
@@ -143,8 +170,8 @@ def main():
             length = min(max(args.superstep, 1), args.rounds - r)
             t0 = time.time()
             if args.superstep > 1:
-                params, v, w, (losses, accs, wmass) = superstep_jit(
-                    params, v, w, toks[r:r + length], P_pod)
+                params, v, w, comp, (losses, accs, wmass) = superstep_jit(
+                    params, v, w, comp, toks[r:r + length], P_pod)
                 dt = (time.time() - t0) / length
                 for i in range(length):
                     print(f"[train] round {r + i:4d} "
@@ -154,8 +181,8 @@ def main():
                           flush=True)
                 ckpt_due = args.ckpt_dir is not None  # superstep boundary
             else:
-                params, v, w, m = round_step(params, v, w,
-                                             {"tokens": toks[r]}, P_pod)
+                params, v, w, comp, m = round_step(
+                    params, v, w, comp, {"tokens": toks[r]}, P_pod)
                 print(f"[train] round {r:4d} loss={float(m['loss']):.4f} "
                       f"acc={float(m['acc']):.4f} "
                       f"w_mass={float(w.sum()):.4f} "
@@ -163,11 +190,14 @@ def main():
                 ckpt_due = args.ckpt_dir and (r + 1) % 5 == 0
             r += length
             if ckpt_due:
-                # Full round state — momentum bank and round index included,
-                # so restarts of momentum-persistent variants stay warm.
-                checkpoint.save(args.ckpt_dir, r - 1,
-                                {"params": params, "v": v, "w": w,
-                                 "round": np.int32(r - 1)})
+                # Full round state — momentum bank, round index, and any
+                # compressor residual included, so restarts of momentum-
+                # persistent / error-feedback variants stay warm.
+                tree = {"params": params, "v": v, "w": w,
+                        "round": np.int32(r - 1)}
+                if compressor.stateful:
+                    tree["comp"] = comp
+                checkpoint.save(args.ckpt_dir, r - 1, tree)
         assert abs(float(w.sum()) - n_pods) < 1e-3
 
 

@@ -40,6 +40,25 @@ def test_train_cli_superstep_resume(tmp_path):
     assert "round    3" in r2.stdout.replace("round   3", "round    3")
 
 
+def test_train_cli_topk_ef_compressor(tmp_path):
+    """--compress topk_ef: the stateful EF residual bank threads through
+    the pod round (and superstep scan + checkpoint) instead of being
+    rejected as it was when the pod round was stateless-only."""
+    ckpt = str(tmp_path / "ck")
+    r = _run(["repro.launch.train", "--arch", "xlstm-350m", "--smoke",
+              "--host-mesh", "--rounds", "2", "--superstep", "2",
+              "--batch", "4", "--seq", "32", "--compress", "topk_ef",
+              "--topk-ratio", "0.1", "--ckpt-dir", ckpt])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "w_mass=2.0000" in r.stdout
+    r2 = _run(["repro.launch.train", "--arch", "xlstm-350m", "--smoke",
+               "--host-mesh", "--rounds", "4", "--superstep", "2",
+               "--batch", "4", "--seq", "32", "--compress", "topk_ef",
+               "--topk-ratio", "0.1", "--ckpt-dir", ckpt, "--resume"])
+    assert r2.returncode == 0, r2.stderr[-2000:]
+    assert "resumed" in r2.stdout and "at round 2" in r2.stdout
+
+
 def test_serve_cli():
     r = _run(["repro.launch.serve", "--arch", "glm4-9b", "--smoke",
               "--batch", "2", "--prompt-len", "8", "--new-tokens", "4"])

@@ -62,6 +62,17 @@ def test_pod_mixing_matrix_column_stochastic():
         np.testing.assert_allclose(Ppod.sum(0), 1.0, atol=1e-6)
 
 
+def test_pod_mixing_neighbors_densifies_to_matrix():
+    from repro.core.topology import dense_from_neighbors
+    from repro.launch.steps import pod_mixing_neighbors
+
+    for n in (1, 2, 4, 8):
+        nl = pod_mixing_neighbors(n)
+        np.testing.assert_allclose(
+            np.asarray(dense_from_neighbors(nl, n)),
+            np.asarray(pod_mixing_matrix(n)), atol=1e-6)
+
+
 # ---------------------------------------------------------------------------
 # Local-step semantics == FL-engine inner loop.
 # ---------------------------------------------------------------------------
@@ -139,6 +150,78 @@ def test_train_step_reports_metrics_dict():
         assert np.isfinite(float(m["loss"]))
     np.testing.assert_allclose(float(metrics[2]["acc"]),
                                float(metrics[1]["acc"]), rtol=1e-5, atol=1e-7)
+
+
+def _pod_setting(n_pods=2):
+    from repro.configs.registry import get_config, make_batch
+    from repro.models.registry import get_model_api
+
+    cfg = get_config("xlstm-350m", smoke=True)
+    api = get_model_api(cfg)
+    params = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n_pods,) + x.shape),
+        api.init(jax.random.PRNGKey(0)))
+    v = jax.tree.map(jnp.zeros_like, params)
+    w = jnp.ones((n_pods,))
+    batch = make_batch(cfg, 4, 16, seed=0)
+    batches = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n_pods, 1) + x.shape), batch)
+    return api, params, v, w, batches
+
+
+def test_round_step_accepts_neighbor_list_P_pod():
+    """The pod round mixes identically through the dense matrix and its
+    neighbor-list form — the sparse representation changes execution, not
+    the algorithm."""
+    from repro.launch.steps import StepConfig, make_round_step, \
+        pod_mixing_neighbors
+
+    api, params, v, w, batches = _pod_setting()
+    step = jax.jit(make_round_step(api, StepConfig(lr=0.05, rho=0.0)))
+    p1, v1, w1, _, m1 = step(params, v, w, (), batches, pod_mixing_matrix(2))
+    p2, v2, w2, _, m2 = step(params, v, w, (), batches,
+                             pod_mixing_neighbors(2))
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(w2), rtol=1e-6)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-6)
+    # leafwise mixing has no bank layout to gather from
+    leafwise = make_round_step(api, StepConfig(lr=0.05, rho=0.0),
+                               flat_mix=False)
+    with pytest.raises(ValueError, match="flat_mix"):
+        leafwise(params, v, w, (), batches, pod_mixing_neighbors(2))
+
+
+def test_round_step_threads_ef_residual_state():
+    """topk_ef in the pod round: the residual bank carries across rounds
+    (ROADMAP 'stateless compressors only' restriction lifted) and error
+    feedback holds exactly: compressed + residual' == bank + residual."""
+    from repro.core.flat import make_spec
+    from repro.launch.steps import (
+        StepConfig,
+        init_pod_comp_state,
+        make_round_step,
+        resolve_compressor,
+    )
+
+    api, params, v, w, batches = _pod_setting()
+    sc = StepConfig(lr=0.05, rho=0.0, compressor="topk_ef", topk_ratio=0.1)
+    comp = resolve_compressor(sc)
+    c0 = init_pod_comp_state(comp, params)
+    assert c0.shape[0] == 2 and not np.any(np.asarray(c0))
+    step = jax.jit(make_round_step(api, sc, compressor=comp))
+    p1, v1, w1, c1, m1 = step(params, v, w, c0, batches,
+                              pod_mixing_matrix(2))
+    assert c1.shape == c0.shape
+    assert np.any(np.asarray(c1))  # residual bank is live after round 1
+    assert np.isfinite(float(m1["loss"]))
+    # second round consumes the carried residual without shape drift
+    p2, v2, w2, c2, m2 = step(p1, v1, w1, c1, batches, pod_mixing_matrix(2))
+    assert c2.shape == c0.shape and np.isfinite(float(m2["loss"]))
+    np.testing.assert_allclose(float(w2.sum()), 2.0, atol=1e-4)
 
 
 # ---------------------------------------------------------------------------

@@ -363,17 +363,31 @@ def test_restore_state_rejects_params_only_checkpoint(tmp_path):
 # Pod path consumes the same stages.
 # ---------------------------------------------------------------------------
 
-def test_pod_round_step_rejects_stateful_compressor():
+def test_pod_round_step_compressor_stages():
+    """Stateful compressors are first-class in the pod round (the EF
+    residual rides the ``comp`` carry); only genuinely unrepresentable
+    combinations are rejected."""
     from repro.configs.registry import get_config
-    from repro.launch.steps import StepConfig, make_round_step
+    from repro.launch.steps import (
+        StepConfig,
+        init_pod_comp_state,
+        make_round_step,
+        resolve_compressor,
+    )
     from repro.models.registry import get_model_api
 
     api = get_model_api(get_config("xlstm-350m", smoke=True))
-    with pytest.raises(ValueError, match="stateless"):
-        make_round_step(api, StepConfig(), compressor=TopKEFCompressor())
-    # ...also when the stateful stage arrives by StepConfig name
-    with pytest.raises(ValueError, match="stateless"):
-        make_round_step(api, StepConfig(compressor="topk_ef"))
+    # topk_ef resolves (by object and by StepConfig name) instead of raising
+    make_round_step(api, StepConfig(), compressor=TopKEFCompressor())
+    make_round_step(api, StepConfig(compressor="topk_ef", topk_ratio=0.1))
+    comp = resolve_compressor(StepConfig(compressor="topk_ef"))
+    assert comp.stateful
+    params = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (2,) + x.shape),
+        api.init(jax.random.PRNGKey(0)))
+    c0 = init_pod_comp_state(comp, params)
+    assert c0.shape[0] == 2 and c0.dtype == jnp.float32
+    assert init_pod_comp_state(IdentityCompressor(), params) == ()
     with pytest.raises(ValueError, match="unknown compressor"):
         make_round_step(api, StepConfig(compressor="bogus"))
     with pytest.raises(ValueError, match="flat_mix"):
