@@ -125,6 +125,68 @@ def main(fast: bool = False):
 
 
 # ---------------------------------------------------------------------------
+# Degraded-link scenario (--link-drop [--link-delay/--event-threshold]).
+# ---------------------------------------------------------------------------
+
+def degraded(drop: float, delay: int = 0, event_threshold: float = 0.0,
+             rounds: int = 5, json_out: str | None = None) -> dict:
+    """Time the flagship round under the unreliable-link scenario vs
+    perfect links (same seed, same family) and verify the two invariants
+    the subsystem is pinned by: the dropped mixing operator stays exactly
+    column-stochastic (no mass leak), and total push-sum mass — in-flight
+    shares included under delays — equals n every round.  The link model
+    costs one drop-mask renormalization per round (plus B+1 sliced mixes
+    when delayed), so the overhead ratio is the number to watch.
+    """
+    from repro.core import LinkModel, make_algo
+
+    net, cdata, _ = build_setting(
+        dataset="mnist", n_clients=N_CLIENTS, samples_per_client=128)
+    topo = TopologyConfig(
+        kind="kout", n_clients=N_CLIENTS, k_out=max(N_CLIENTS // 4, 1))
+    algo = make_algo("dfedsgpsm", local_steps=3, batch_size=32)
+    link = LinkModel(drop=drop, delay=delay,
+                     event_threshold=event_threshold)
+    timings, mass_err = {}, 0.0
+    for scenario in ("clean", "degraded"):
+        tr = FLTrainer(net.loss, net.init, cdata, algo, topo, seed=0,
+                       participation=0.25,
+                       link=link if scenario == "degraded" else None)
+        timings[scenario] = _time_rounds(tr, rounds)
+        emit(f"round/link/{scenario}", timings[scenario],
+             f"n={N_CLIENTS},drop={drop},delay={delay},rounds={rounds}")
+        if scenario == "degraded":
+            state, hist = tr.program.run_superstep(tr.state, rounds)
+            import numpy as np
+
+            # An all-zero model is the (valid) perfect-link control: the
+            # program carries no per-round w_mass metric, so check the
+            # final node mass instead.
+            mass = (np.asarray(hist["w_mass"]) if "w_mass" in hist
+                    else np.asarray(state.w.sum())[None])
+            mass_err = float(np.abs(mass - N_CLIENTS).max())
+            emit("round/link/mass_err", mass_err,
+                 f"max |sum w - n| over {rounds} degraded rounds "
+                 "(in-flight mass included)")
+            assert mass_err < 1e-3, (
+                f"push-sum mass leaked under drops/delays: {mass_err}")
+    overhead = timings["degraded"] / timings["clean"]
+    emit("round/link/overhead", overhead,
+         "degraded_us/clean_us (link-model cost per round)")
+    results = {"drop": drop, "delay": delay,
+               "event_threshold": event_threshold,
+               "clean_us": round(timings["clean"], 1),
+               "degraded_us": round(timings["degraded"], 1),
+               "overhead": round(overhead, 3),
+               "mass_err": mass_err}
+    if json_out:
+        with open(json_out, "w") as f:
+            json.dump({"degraded_link": results}, f, indent=1)
+        print(f"# wrote degraded-link results -> {json_out}")
+    return results
+
+
+# ---------------------------------------------------------------------------
 # Sparse-vs-dense gossip scaling sweep (--n-clients).
 # ---------------------------------------------------------------------------
 
@@ -320,6 +382,15 @@ if __name__ == "__main__":
                     help="re-record the baseline (smoke ratios, or the "
                          "scaling table when --n-clients is given) instead "
                          "of gating")
+    ap.add_argument("--link-drop", type=float, default=None, metavar="P",
+                    help="degraded-link scenario: time the round with "
+                         "per-edge drop probability P (vs perfect links) "
+                         "and assert exact push-sum mass conservation")
+    ap.add_argument("--link-delay", type=int, default=0,
+                    help="staleness bound B for the --link-drop scenario")
+    ap.add_argument("--event-threshold", type=float, default=0.0,
+                    help="event-trigger threshold for the --link-drop "
+                         "scenario (0 = always transmit)")
     ap.add_argument("--n-clients", default=None, metavar="N[,N...]",
                     help="sparse-vs-dense gossip scaling sweep over these "
                          "client counts (e.g. 16,64,256) at fixed --k-out")
@@ -335,6 +406,11 @@ if __name__ == "__main__":
     ap.add_argument("--fast", action="store_true",
                     help="fewer timing rounds for the full benchmark")
     args = ap.parse_args()
+    if args.link_drop is not None:
+        degraded(args.link_drop, delay=args.link_delay,
+                 event_threshold=args.event_threshold,
+                 rounds=args.rounds, json_out=args.json)
+        sys.exit(0)
     if args.n_clients:
         ns = [int(x) for x in args.n_clients.split(",") if x]
         scaling(ns, k_out=args.k_out, rounds=args.rounds,

@@ -78,7 +78,8 @@ def main():
         for r in range(args.rounds):
             t0 = time.time()
             batch = {"tokens": tokens[r]}
-            params, v, w, _, m = round_step(params, v, w, (), batch, P_pod)
+            params, v, w, _, _, m = round_step(params, v, w, (), (), batch,
+                                               P_pod)
             print(f"round {r:3d} loss={float(m['loss']):.4f} "
                   f"acc={float(m['acc']):.4f} "
                   f"w={[round(float(x), 3) for x in w]} "

@@ -134,9 +134,11 @@ def save_state(directory: str, step: int, state, spec, keep: int = 3) -> str:
     """Checkpoint a full ``repro.core.FLState`` through the bank fast path.
 
     The params bank rides as ``__bank__``; momentum bank, push-sum weights,
-    RNG key, round counter, last losses, and any array-valued compressor
-    state (e.g. the top-k error-feedback residual) ride as extras — so a
-    restore is a genuinely warm restart, not just a parameter copy.
+    RNG key, round counter, last losses, any array-valued compressor
+    state (e.g. the top-k error-feedback residual), and the unreliable-link
+    carry (PRNG stream + in-flight payload buffers / event caches) ride as
+    extras — so a restore is a genuinely warm restart, not just a
+    parameter copy.
     """
     extra = {
         "w": state.w,
@@ -150,6 +152,13 @@ def save_state(directory: str, step: int, state, spec, keep: int = 3) -> str:
         isinstance(state.comp, tuple) and state.comp == ()
     ):
         extra["comp"] = state.comp
+    link = getattr(state, "link", ())
+    if not (isinstance(link, tuple) and link == ()):
+        extra["link_key"] = link.key
+        for field in ("bufx", "bufw", "last"):
+            val = getattr(link, field)
+            if not isinstance(val, tuple):
+                extra[f"link_{field}"] = val
     return save_bank(directory, step, state.params, spec, extra=extra,
                      keep=keep)
 
@@ -159,12 +168,21 @@ def restore_state(path: str, spec):
     import jax.numpy as jnp
 
     from repro.core.program import FLState
+    from repro.core.stages import LinkState
 
     bank, extra, _ = restore_bank(path, spec=spec)
     for k in ("w", "key", "round", "losses"):
         if k not in extra:
             raise ValueError(f"{path} is not a full-FLState checkpoint "
                              f"(missing {k!r})")
+    link = ()
+    if "link_key" in extra:
+        link = LinkState(
+            key=jnp.asarray(extra["link_key"]),
+            **{f: jnp.asarray(extra[f"link_{f}"])
+               for f in ("bufx", "bufw", "last")
+               if f"link_{f}" in extra},
+        )
     return FLState(
         params=jnp.asarray(bank),
         mom=jnp.asarray(extra["mom"]) if "mom" in extra else None,
@@ -173,6 +191,7 @@ def restore_state(path: str, spec):
         round=jnp.asarray(extra["round"]),
         losses=jnp.asarray(extra["losses"]),
         comp=jnp.asarray(extra["comp"]) if "comp" in extra else (),
+        link=link,
     )
 
 

@@ -18,8 +18,14 @@ from repro.core.engine import (
     make_program,
 )
 from repro.core.flat import BankSpec, make_spec
-from repro.core.stages import COMPRESSORS, MIXERS, SOLVERS, make_stages
-from repro.core.topology import TopologyConfig
+from repro.core.stages import (
+    COMPRESSORS,
+    MIXERS,
+    SOLVERS,
+    LinkState,
+    make_stages,
+)
+from repro.core.topology import LinkModel, TopologyConfig
 
 __all__ = [
     "ALGORITHMS",
@@ -28,6 +34,8 @@ __all__ = [
     "COMPRESSORS",
     "FLState",
     "FLTrainer",
+    "LinkModel",
+    "LinkState",
     "MIXERS",
     "RoundProgram",
     "SOLVERS",

@@ -119,6 +119,10 @@ class FLTrainer:
       gossip: mixing-operator representation — ``"auto"`` (density rule:
         neighbor-list sparse gossip once n is large and k_max/n small),
         or force ``"sparse"`` / ``"dense"``.
+      link: unreliable-link scenario (``topology.LinkModel``): per-round
+        edge drops (exactly column-stochastic after renormalization),
+        bounded delivery delays, or event-triggered transmission.  ``None``
+        (default) or an all-zero model is bitwise the perfect-link round.
 
     ``fit`` drives ``program.run_superstep`` — jit-resident supersteps of
     rounds with in-scan eval — and returns per-round history records; for
@@ -137,7 +141,14 @@ class FLTrainer:
         participation: float = 0.1,
         flat: bool = True,
         gossip: str = "auto",
+        link: topology.LinkModel | None = None,
     ):
+        if not flat and link is not None and link.active:
+            # The oracle predates the link subsystem; silently ignoring the
+            # scenario would invalidate it as an equivalence baseline.
+            raise ValueError(
+                "the flat=False oracle path models perfect links only"
+            )
         if not flat and (
             algo.solver != "sam_momentum"
             or algo.compressor not in ("identity", "int8_rows")
@@ -160,7 +171,7 @@ class FLTrainer:
         self.n = topo.n_clients
         self.program = make_program(
             loss_fn, init_fn, client_data, algo, topo, participation,
-            gossip=gossip,
+            gossip=gossip, link=link,
         )
         self.spec = self.program.spec
         self._exp_cycle = self.program.exp_cycle
@@ -250,13 +261,26 @@ class FLTrainer:
             self._local_update, in_axes=(0, 0, 0, 0, None)
         )(state.params, state.w, ckeys, self.data, lr)
 
+        x_send = x_half
         if algo.quantize_gossip or algo.compressor == "int8_rows":
-            x_half = _quantize_dequantize(x_half)
+            x_send = _quantize_dequantize(x_half)
 
         P = self._mixing(tkey, state)
         # The oracle path stays off-kernel by construction — it is what the
         # kernel-backed flat path is validated against.
-        x_new = pushsum.gossip(P, x_half, use_kernel=False)
+        x_new = pushsum.gossip(P, x_send, use_kernel=False)
+        if x_send is not x_half:
+            # Same compressed-gossip semantics as the flat path: the
+            # self-loop P[ii]·x_i is local memory and is never quantized.
+            from repro.core.stages import _self_weights
+
+            s = _self_weights(P)
+
+            def fresh_self(xn, xh, xq):
+                shape = (xn.shape[0],) + (1,) * (xn.ndim - 1)
+                return xn + (s.reshape(shape) * (xh - xq)).astype(xn.dtype)
+
+            x_new = jax.tree.map(fresh_self, x_new, x_half, x_send)
         w_new = (
             pushsum.gossip_weights(P, state.w)
             if algo.comm == "directed"
@@ -277,8 +301,11 @@ class FLTrainer:
 
         xs, losses, accs = jax.vmap(client)(sel, ckeys[:m])
         new_params = jax.tree.map(lambda s: s.mean(axis=0), xs)
+        # Refresh the sampled clients' loss slots (parity with the flat
+        # central step — the vector rides checkpoints and selection).
         new_state = FLState(
-            new_params, state.mom, state.w, key, state.round + 1, state.losses
+            new_params, state.mom, state.w, key, state.round + 1,
+            state.losses.at[sel].set(losses)
         )
         return new_state, {"loss": losses.mean(), "acc": accs.mean()}
 
@@ -391,6 +418,11 @@ class FLTrainer:
                     "loss": float(hist["loss"][i]),
                     "acc": float(hist["acc"][i]),
                 }
+                # Link-scenario extras: transmitted fraction (event-
+                # triggered rounds) and the exact-mass invariant.
+                for k in ("comm_fraction", "w_mass", "w_inflight"):
+                    if k in hist:
+                        rec[k] = float(hist[k][i])
                 if evals is not None and bool(evals[i]):
                     rec["test_loss"] = float(hist["test_loss"][i])
                     rec["test_acc"] = float(hist["test_acc"][i])
@@ -450,5 +482,33 @@ class FLTrainer:
                 f"{path} carries compressor state, but this trainer's "
                 f"compressor={self.algo.compressor!r} is stateless"
             )
+        has_link = not (isinstance(state.link, tuple) and state.link == ())
+        if self.program.linked != has_link:
+            raise ValueError(
+                f"{path} {'carries' if has_link else 'carries no'} "
+                "unreliable-link state, but this trainer's link scenario "
+                f"{'does not use' if has_link else 'needs'} it — restore "
+                "with the composition that saved it"
+            )
+        if has_link:
+            # Presence is not enough: a delayed carry restored into an
+            # event-triggered program (or a different delay bound) would
+            # crash opaquely inside the next traced round — compare the
+            # buffer structure against what this mixer actually carries.
+            want = self.program.mixer.link_buffers(state.params)
+            for field in ("bufx", "bufw", "last"):
+                have = getattr(state.link, field)
+                exp = want.get(field)
+                have_arr = not isinstance(have, tuple)
+                if have_arr != (exp is not None) or (
+                    have_arr and tuple(have.shape) != tuple(exp.shape)
+                ):
+                    raise ValueError(
+                        f"{path} link carry field {field!r} is "
+                        f"{tuple(have.shape) if have_arr else 'absent'}, "
+                        "but this trainer's link composition expects "
+                        f"{tuple(exp.shape) if exp is not None else 'none'}"
+                        " — restore with the composition that saved it"
+                    )
         self.state = state
         return self.state

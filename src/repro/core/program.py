@@ -31,7 +31,13 @@ import jax.numpy as jnp
 
 from repro.core import topology
 from repro.core.flat import BankSpec, make_spec
-from repro.core.stages import IdentityCompressor, make_stages
+from repro.core.stages import (
+    DelayedPushSumMixer,
+    EventTriggeredMixer,
+    IdentityCompressor,
+    LinkState,
+    make_stages,
+)
 
 __all__ = ["FLState", "RoundProgram", "make_program"]
 
@@ -50,6 +56,10 @@ class FLState(NamedTuple):
     round: jnp.ndarray  # int32 scalar
     losses: jnp.ndarray  # (n,) last local losses (drives selection)
     comp: Any = ()  # compressor state (e.g. error-feedback residual bank)
+    # Unreliable-link carry (stages.LinkState): its own PRNG stream for
+    # drop/delay draws plus the delayed in-flight payload buffers or the
+    # event-trigger last-broadcast cache.  () on perfect-link programs.
+    link: Any = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,6 +93,13 @@ class RoundProgram:
     # repro.kernels.ops.use_sparse_gossip (gossip="auto") or forced.
     gossip: str = "auto"
     sparse_mix: bool = False
+    # Unreliable-link scenario (topology.LinkModel) — None models perfect
+    # links and keeps the round bitwise identical to the pre-link program.
+    # ``linked`` is the static routing flag: True when the link model is
+    # active or the mixer carries link state, in which case the step
+    # threads ``state.link`` and samples drops/delays from its key.
+    link: Any = None
+    linked: bool = False
 
     def __post_init__(self):
         # Per-program memo of compiled superstep drivers, keyed on the
@@ -104,7 +121,16 @@ class RoundProgram:
         bank = jnp.broadcast_to(row, (self.n, self.spec.dim))
         mom = jnp.zeros((self.n, self.spec.dim), jnp.float32)
         comp = self.compressor.init_state(self.n, self.spec.dim)
-        return FLState(bank, mom, w0, skey, jnp.int32(0), losses0, comp)
+        link = ()
+        if self.linked:
+            # The link stream is folded off the seed key so the main
+            # params/round stream stays exactly the perfect-link one.
+            link = LinkState(
+                key=jax.random.fold_in(key, 0x11AB),
+                **self.mixer.link_buffers(bank),
+            )
+        return FLState(bank, mom, w0, skey, jnp.int32(0), losses0, comp,
+                       link)
 
     # -- mixing-matrix selection --------------------------------------------
 
@@ -157,13 +183,37 @@ class RoundProgram:
             self.loss_fn, self.spec, state.params, state.w, ckeys,
             self.data, lr
         )
-        comp, X = self.compressor.apply(state.comp, X)
+        # The compressor shapes what leaves each client over the network;
+        # the self-loop contribution P[ii]·X[i] is local memory and stays
+        # full precision — mix_round mixes
+        # X'[i] = P[ii]·X[i] + sum_{j != i} P[ij]·C(X)[j]
+        # (with identity compression Xc is X and nothing changes bitwise).
+        comp, Xc = self.compressor.apply(state.comp, X)
         P = self.mixing_matrix(tkey, state)
-        X, w_new = self.mixer.mix(P, X, state.w)
-        new_state = FLState(
-            X, V, w_new, key, state.round + 1, losses, comp
+        link, lkey = state.link, None
+        if self.linked:
+            lkey, nkey = jax.random.split(link.key)
+            link = link._replace(key=nkey)
+            if self.link is not None and self.link.drop > 0:
+                dkey, lkey = jax.random.split(lkey)
+                P = self.link.drop_links(
+                    dkey, P, symmetric=self.mixer.kind == "symmetric"
+                )
+        X, w_new, link, extras = self.mixer.mix_round(
+            P, Xc, state.w, link, lkey, X
         )
-        return new_state, {"loss": losses.mean(), "acc": accs.mean()}
+        new_state = FLState(
+            X, V, w_new, key, state.round + 1, losses, comp, link
+        )
+        metrics = {"loss": losses.mean(), "acc": accs.mean(), **extras}
+        if self.linked:
+            # Total push-sum mass, in-flight shares included — the exact
+            # conservation invariant the link subsystem is pinned by.
+            inflight = (link.bufw.sum()
+                        if not isinstance(link.bufw, tuple)
+                        else jnp.float32(0.0))
+            metrics["w_mass"] = w_new.sum() + inflight
+        return new_state, metrics
 
     def _central_step(self, state: FLState, lr, key, tkey, ckeys):
         m = max(int(self.participation * self.n), 1)
@@ -175,9 +225,13 @@ class RoundProgram:
             self.loss_fn, self.spec, Xrep, ones, ckeys[:m], data_sel, lr
         )
         new_params = self.mixer.reduce(X)
+        # The sampled clients' end-of-round losses refresh their slots in
+        # the (n,) loss vector (it rides checkpoints and drives selection);
+        # it used to be returned unchanged — zeros forever on this path.
+        new_losses = state.losses.at[sel].set(losses)
         new_state = FLState(
             new_params, state.mom, state.w, key, state.round + 1,
-            state.losses, state.comp
+            new_losses, state.comp, state.link
         )
         return new_state, {"loss": losses.mean(), "acc": accs.mean()}
 
@@ -315,6 +369,7 @@ def make_program(
     topo: topology.TopologyConfig,
     participation: float = 0.1,
     gossip: str = "auto",
+    link: topology.LinkModel | None = None,
 ) -> RoundProgram:
     """Compose an ``AlgoConfig`` into a :class:`RoundProgram`.
 
@@ -327,10 +382,35 @@ def make_program(
     ``k_max``; ``"sparse"`` / ``"dense"`` force neighbor-list or dense
     sampling (benchmarks compare the two; small recorded configs always
     resolve dense, keeping the golden traces bit-for-bit).
+
+    ``link`` is the unreliable-link scenario (:class:`topology.LinkModel`):
+    per-round i.i.d. edge drops (renormalized before the send, so ``P_t``
+    stays exactly column-stochastic), bounded per-edge delivery delays
+    (``DelayedPushSumMixer`` with its in-flight buffers in the round
+    state), or event-triggered transmission (``EventTriggeredMixer`` with
+    the ``comm_fraction`` metric).  ``None`` — or a model whose fields are
+    all zero — builds the exact perfect-link program, bitwise.
     """
     from repro.kernels import ops as kops
 
     solver, compressor, mixer = make_stages(algo)
+    link = link if link is not None and link.active else None
+    if link is not None:
+        if mixer.kind == "central":
+            raise ValueError(
+                "the central (server) round has no peer links to degrade; "
+                "drop the link model for comm='central'"
+            )
+        if mixer.kind != "directed" and (link.delay or link.event_threshold):
+            raise ValueError(
+                "delayed / event-triggered mixing is push-sum (directed) "
+                f"only, not comm={algo.comm!r}; symmetric gossip supports "
+                "link drops alone"
+            )
+        if link.delay:
+            mixer = DelayedPushSumMixer(delay=link.delay)
+        elif link.event_threshold:
+            mixer = EventTriggeredMixer(threshold=link.event_threshold)
     if mixer.kind == "central" and not isinstance(
         compressor, IdentityCompressor
     ):
@@ -355,6 +435,12 @@ def make_program(
     else:
         sparse_mix = kops.use_sparse_gossip(
             topo.n_clients, topology.neighbor_k_max(topo, mixer.kind)
+        )
+    if (link is not None and link.drop > 0 and sparse_mix
+            and mixer.kind == "symmetric"):
+        raise ValueError(
+            "link drops on the symmetric neighbor-list form are "
+            "unsupported; pass gossip='dense' for symmetric + drops"
         )
     spec = make_spec(jax.eval_shape(init_fn, jax.random.PRNGKey(0)))
     # Exponential graphs cycle through log2(n) hop matrices; precompute
@@ -383,4 +469,6 @@ def make_program(
         exp_cycle=exp_cycle,
         gossip=gossip,
         sparse_mix=sparse_mix,
+        link=link,
+        linked=link is not None or mixer.link_stateful,
     )

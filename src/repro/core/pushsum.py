@@ -64,13 +64,21 @@ def gossip_bank(P, X: jnp.ndarray,
 def gossip_weights(P, w: jnp.ndarray) -> jnp.ndarray:
     """Mix the push-sum weights: ``w' = P @ w`` (shape (n,)) — the same
     neighbor gather as the bank when ``P`` is a NeighborList, so the full
-    push-sum round never materializes (n, n)."""
+    push-sum round never materializes (n, n).  The dense path pins
+    ``Precision.HIGHEST`` exactly like the bank matmul in
+    ``repro.kernels.ops.gossip_mix``: on TPU a default-precision ``P @ w``
+    would run the weight mixing in bf16 while the bank mixes in f32,
+    drifting the de-bias ratio z = x / w between the two."""
     from repro.core.topology import NeighborList
 
     if isinstance(P, NeighborList):
         wf = w.astype(jnp.float32)
         return jnp.sum(P.wgt * wf[P.idx], axis=1).astype(w.dtype)
-    return (P @ w.astype(jnp.float32)).astype(w.dtype)
+    out = jnp.einsum(
+        "ij,j->i", P, w.astype(jnp.float32),
+        precision=jax.lax.Precision.HIGHEST,
+    )
+    return out.astype(w.dtype)
 
 
 def debias(stacked_params, w: jnp.ndarray):

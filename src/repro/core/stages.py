@@ -24,6 +24,7 @@ fields to stage instances.
 from __future__ import annotations
 
 import dataclasses
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -38,8 +39,11 @@ __all__ = [
     "IdentityCompressor",
     "Int8RowCompressor",
     "TopKEFCompressor",
+    "LinkState",
     "PushSumMixer",
     "SymmetricMixer",
+    "DelayedPushSumMixer",
+    "EventTriggeredMixer",
     "CentralMixer",
     "SOLVERS",
     "COMPRESSORS",
@@ -139,6 +143,29 @@ class ProximalSolver(SamMomentumSolver):
         X0 = X  # round-start reference, constant through the local scan
         V0 = jnp.zeros_like(X, jnp.float32)
 
+        if self.alpha == 0.0:
+            # Same alpha==0 treatment as SamMomentumSolver: v' = g exactly,
+            # so the momentum bank leaves the scan carry and V0 doubles as
+            # the kernel's zero momentum operand — one (n, D) zero bank.
+            def step0(carry, _):
+                X, ks = carry
+                ks, G_tree, losses, accs = jax.vmap(grad_one)(X, w, ks, data)
+                G = spec.ravel_stacked(G_tree)
+                G = G + self.mu * (X - X0).astype(G.dtype)
+                X, _, _ = kops.fused_update_bank(X, V0, G, 0.0, lr, w)
+                return (X, ks), (losses, accs)
+
+            (X, _), (losses, accs) = jax.lax.scan(
+                step0, (X, keys), None, length=self.local_steps
+            )
+            return X, V0, losses.mean(axis=0), accs.mean(axis=0)
+        return self._update_momentum(grad_one, spec, X, X0, V0, w, keys,
+                                     data, lr)
+
+    def _update_momentum(self, grad_one, spec, X, X0, V0, w, keys, data, lr):
+        """Generic momentum-carrying path (also valid, if wasteful, at
+        alpha == 0 — the fast path above is pinned bitwise against it)."""
+
         def step(carry, _):
             X, V, ks = carry
             ks, G_tree, losses, accs = jax.vmap(grad_one)(X, w, ks, data)
@@ -220,7 +247,60 @@ class TopKEFCompressor:
 
 # ---------------------------------------------------------------------------
 # Mixer: init_weights(n) -> w; mix(P, X, w) -> (X', w').
+#
+# ``mix_round`` is the full communication phase the round program drives:
+#   mix_round(P, X, w, link, key, X_full) -> (X', w', link', extras)
+# where X is the (possibly compressed) transmitted bank and X_full the
+# uncompressed bank.  Every mixer keeps client i's OWN contribution at full
+# precision — X'[i] = P[ii]·X_full[i] + sum_{j != i} P[ij]·X[j] — because no
+# client quantizes/sparsifies the copy it hands to itself (the self-loop is
+# local memory, not a network link).  ``link`` is the LinkState carry for
+# stateful mixers (delayed payload buffers, event-trigger caches); stateless
+# mixers thread it through untouched.
 # ---------------------------------------------------------------------------
+
+
+class LinkState(NamedTuple):
+    """Unreliable-link carry threaded through the round state.
+
+    ``key`` drives the per-round link randomness (drop masks, delay draws)
+    on its own PRNG stream, so link-free programs keep a bit-identical main
+    stream.  ``bufx``/``bufw`` are the bounded-staleness in-flight payload
+    buffers of :class:`DelayedPushSumMixer` — ``bufx[r]`` is the ``(n, D)``
+    mass arriving ``r + 1`` rounds from now, so total push-sum mass
+    ``w.sum() + bufw.sum() == n`` exactly.  ``last`` is the ``(n, D)``
+    last-broadcast cache of :class:`EventTriggeredMixer`.  Unused fields
+    stay ``()`` and drop out of the pytree.
+    """
+
+    key: jax.Array
+    bufx: Any = ()  # (B, n, D) in-flight payload mass (delayed mixer)
+    bufw: Any = ()  # (B, n) in-flight push-sum mass (delayed mixer)
+    last: Any = ()  # (n, D) last transmitted rows (event-triggered mixer)
+
+
+def _self_weights(P):
+    """The self-loop weight per receiver: ``diag(P)`` for a dense matrix,
+    slot 0 for a NeighborList (the self-loop by convention; pads and
+    permutation self-hits carry weight 0 elsewhere)."""
+    from repro.core.topology import NeighborList
+
+    if isinstance(P, NeighborList):
+        return P.wgt[:, 0]
+    return jnp.diagonal(P)
+
+
+def _selfloop_correction(P, X, X_full, mixed):
+    """Replace the self-loop contribution ``P[ii]·X[i]`` inside ``mixed``
+    with the full-precision ``P[ii]·X_full[i]``.  When ``X_full is X``
+    (identity compressor) this is a trace-time no-op, keeping those
+    compositions bitwise unchanged."""
+    if X_full is X:
+        return mixed
+    s = _self_weights(P)[:, None]
+    return mixed + (s * (X_full.astype(jnp.float32) - X.astype(jnp.float32))
+                    ).astype(mixed.dtype)
+
 
 @dataclasses.dataclass(frozen=True)
 class PushSumMixer:
@@ -228,15 +308,23 @@ class PushSumMixer:
     (Algorithm 1 lines 12-14): X' = P X, w' = P w."""
 
     kind = "directed"
+    link_stateful = False
 
     def init_weights(self, n: int):
         return jnp.ones((n,), jnp.float32)
+
+    def link_buffers(self, bank) -> dict:
+        return {}
 
     def mix_weights(self, P, w):
         return pushsum.gossip_weights(P, w)
 
     def mix(self, P, X, w):
         return pushsum.gossip_bank(P, X), self.mix_weights(P, w)
+
+    def mix_round(self, P, X, w, link, key, X_full):
+        Xm, wm = self.mix(P, X, w)
+        return _selfloop_correction(P, X, X_full, Xm), wm, link, {}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -245,15 +333,149 @@ class SymmetricMixer:
     DFedSAM family): X' = W X, push-sum weights stay all-ones."""
 
     kind = "symmetric"
+    link_stateful = False
 
     def init_weights(self, n: int):
         return jnp.ones((n,), jnp.float32)
+
+    def link_buffers(self, bank) -> dict:
+        return {}
 
     def mix_weights(self, P, w):
         return w
 
     def mix(self, P, X, w):
         return pushsum.gossip_bank(P, X), self.mix_weights(P, w)
+
+    def mix_round(self, P, X, w, link, key, X_full):
+        Xm, wm = self.mix(P, X, w)
+        return _selfloop_correction(P, X, X_full, Xm), wm, link, {}
+
+
+def _delay_slices(key, P, bound: int):
+    """Per-edge delivery delays in {0..bound} as a list of ``bound + 1``
+    disjoint mixing operators: slice d carries exactly the edges arriving
+    d rounds late; self-loops always land in slice 0.  Summing the slices
+    recovers ``P`` exactly, so each column's total outgoing mass is still
+    1 — it is merely spread over delivery times."""
+    from repro.core.topology import NeighborList
+
+    if isinstance(P, NeighborList):
+        d = jax.random.randint(key, P.idx.shape, 0, bound + 1)
+        d = d.at[:, 0].set(0)  # the self-loop is local: never delayed
+        return [
+            NeighborList(P.idx, jnp.where(d == t, P.wgt, 0.0))
+            for t in range(bound + 1)
+        ]
+    n = P.shape[0]
+    d = jax.random.randint(key, (n, n), 0, bound + 1)
+    d = jnp.where(jnp.eye(n, dtype=bool), 0, d)
+    return [P * (d == t) for t in range(bound + 1)]
+
+
+@dataclasses.dataclass(frozen=True)
+class DelayedPushSumMixer:
+    """Push-sum over links with bounded random delays (staleness <= B).
+
+    Every surviving edge (j -> i) samples a delivery delay d in {0..B}
+    each round; the share ``P[ij]·(x_j, w_j)`` it carries is *in flight*
+    for d rounds, riding the ``(B, n, D)`` / ``(B, n)`` buffers in
+    :class:`LinkState`, and is added to receiver i when it matures.  The
+    self-loop is local memory and always delivers instantly.  Because a
+    sender's full column mass leaves every round (just spread over
+    delivery times), total push-sum mass is exact at every round:
+    ``w.sum() + bufw.sum() == n`` — no silent mass leak, and the de-biased
+    ratio z = x / w still converges to the true average (Assran et al.
+    2019 treat exactly this overlap/staleness regime for SGP).
+    """
+
+    delay: int = 1
+    kind = "directed"
+    link_stateful = True
+
+    def __post_init__(self):
+        if self.delay < 1:
+            raise ValueError("DelayedPushSumMixer needs delay >= 1; "
+                             "use PushSumMixer for instantaneous links")
+
+    def init_weights(self, n: int):
+        return jnp.ones((n,), jnp.float32)
+
+    def link_buffers(self, bank) -> dict:
+        n = bank.shape[0]
+        return {
+            "bufx": jnp.zeros((self.delay,) + bank.shape, bank.dtype),
+            "bufw": jnp.zeros((self.delay, n), jnp.float32),
+        }
+
+    def mix_weights(self, P, w):
+        return pushsum.gossip_weights(P, w)
+
+    def mix_round(self, P, X, w, link: LinkState, key, X_full):
+        slices = _delay_slices(key, P, self.delay)
+        sent_x = [pushsum.gossip_bank(Ps, X) for Ps in slices]
+        sent_w = [pushsum.gossip_weights(Ps, w) for Ps in slices]
+        # Slice 0 holds the self-loop: keep it full precision.
+        sent_x[0] = _selfloop_correction(P, X, X_full, sent_x[0])
+        X_new = sent_x[0] + link.bufx[0].astype(sent_x[0].dtype)
+        w_new = sent_w[0] + link.bufw[0]
+        # Shift the buffers one round closer to delivery and enqueue the
+        # newly sent delayed shares.
+        bufx = jnp.concatenate(
+            [link.bufx[1:], jnp.zeros_like(link.bufx[:1])], axis=0
+        ) + jnp.stack(sent_x[1:]).astype(link.bufx.dtype)
+        bufw = jnp.concatenate(
+            [link.bufw[1:], jnp.zeros_like(link.bufw[:1])], axis=0
+        ) + jnp.stack(sent_w[1:])
+        link = link._replace(bufx=bufx, bufw=bufw)
+        return X_new, w_new, link, {"w_inflight": bufw.sum()}
+
+
+@dataclasses.dataclass(frozen=True)
+class EventTriggeredMixer:
+    """Directed push-sum where a client transmits a fresh row only when it
+    drifted more than ``threshold`` (L2) from its last transmission;
+    neighbors otherwise mix the receiver-side cached last broadcast
+    (`LinkState.last`).  The self-loop always uses the live full-precision
+    row — a client never reads itself through the network.  Push-sum
+    weights are scalars (n floats per round, vs n·D for the bank) and are
+    always mixed fresh, so mass stays exactly n; the consensus error this
+    scheme admits is bounded by the threshold, which is the knob the
+    ``comm_fraction`` extra (fraction of clients that transmitted) trades
+    against.
+    """
+
+    threshold: float = 0.01
+    kind = "directed"
+    link_stateful = True
+
+    def init_weights(self, n: int):
+        return jnp.ones((n,), jnp.float32)
+
+    def link_buffers(self, bank) -> dict:
+        # Every client's initial row is common knowledge (broadcast init),
+        # so the cache starts warm: round 1 only transmits real movement.
+        # A copy, not the bank itself — the carry is donated and two
+        # aliases of one buffer cannot both be.
+        return {"last": jnp.array(bank)}
+
+    def mix_weights(self, P, w):
+        return pushsum.gossip_weights(P, w)
+
+    def mix_round(self, P, X, w, link: LinkState, key, X_full):
+        drift = X.astype(jnp.float32) - link.last.astype(jnp.float32)
+        send = jnp.sqrt(jnp.sum(drift * drift, axis=1)) > self.threshold
+        B = jnp.where(send[:, None], X, link.last.astype(X.dtype))
+        Xm = pushsum.gossip_bank(P, B)
+        # The self-loop never reads the cache: always the live full bank
+        # (B is a fresh array, so the helper's is-X short-circuit never
+        # swallows the correction).
+        Xm = _selfloop_correction(P, B, X_full, Xm)
+        wm = pushsum.gossip_weights(P, w)
+        link = link._replace(last=B)
+        return Xm, wm, link, {
+            "comm_fraction": send.astype(jnp.float32).mean()
+        }
 
 
 @dataclasses.dataclass(frozen=True)
@@ -262,9 +484,13 @@ class CentralMixer:
     into the single global row; no mixing matrix, no push-sum weights."""
 
     kind = "central"
+    link_stateful = False
 
     def init_weights(self, n: int):
         return jnp.ones((n,), jnp.float32)
+
+    def link_buffers(self, bank) -> dict:
+        return {}
 
     def reduce(self, X):
         return X.mean(axis=0)

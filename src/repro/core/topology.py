@@ -29,7 +29,10 @@ import numpy as np
 
 __all__ = [
     "TopologyConfig",
+    "LinkModel",
     "NeighborList",
+    "drop_links_dense",
+    "drop_links_neighbors",
     "column_stochastic_from_adjacency",
     "metropolis_weights",
     "directed_ring",
@@ -66,6 +69,131 @@ class TopologyConfig:
     def __post_init__(self):
         if self.k_out >= self.n_clients:
             raise ValueError("k_out must be < n_clients")
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkModel:
+    """Per-round unreliable-link effects, the scenario the paper motivates
+    ("susceptible to the impact of network link quality") but perfect
+    mixers cannot exercise.
+
+    ``drop``: i.i.d. failure probability per directed non-self edge each
+    round.  Drops are applied to the *adjacency* before sender
+    normalization (:func:`drop_links_dense` / :func:`drop_links_neighbors`),
+    so the effective ``P_t`` stays exactly column-stochastic and push-sum
+    mass ``sum_i w_i == n`` is conserved under any drop pattern — a sender
+    whose every outgoing link failed simply keeps all its mass on the
+    self-loop, which never drops.
+
+    ``delay``: staleness bound B (rounds).  ``delay >= 1`` swaps the
+    directed mixer for ``DelayedPushSumMixer``: every surviving edge
+    samples a delivery delay in {0..B} per round and undelivered payloads
+    ride an in-flight buffer carried in the round state, so
+    node mass + in-flight mass == n exactly at every round.
+
+    ``event_threshold``: > 0 swaps in ``EventTriggeredMixer`` — a client
+    broadcasts a fresh row only when it moved more than the threshold from
+    its last transmission; neighbors otherwise mix the cached broadcast.
+
+    All-zero fields mean perfect links; ``make_program`` then builds the
+    exact unmodified round (bitwise identical to a link-free program).
+    """
+
+    drop: float = 0.0
+    delay: int = 0
+    event_threshold: float = 0.0
+
+    def __post_init__(self):
+        if not 0.0 <= self.drop < 1.0:
+            raise ValueError("drop probability must be in [0, 1)")
+        if self.delay < 0:
+            raise ValueError("delay bound must be >= 0")
+        if self.event_threshold < 0.0:
+            raise ValueError("event_threshold must be >= 0")
+        if self.delay and self.event_threshold:
+            raise ValueError(
+                "delayed and event-triggered mixing do not compose; "
+                "pick one of delay / event_threshold"
+            )
+        if self.drop and self.event_threshold:
+            # The event mixer keeps ONE last-broadcast row per sender; with
+            # per-edge drops a receiver whose link was down during the
+            # transmission would later read a broadcast it never received
+            # (sound modeling needs per-receiver caches, (n, n, D)).
+            raise ValueError(
+                "event-triggered mixing assumes reliable links (the shared "
+                "last-broadcast cache cannot model per-receiver misses); "
+                "drop and event_threshold do not compose"
+            )
+
+    @property
+    def active(self) -> bool:
+        return bool(self.drop or self.delay or self.event_threshold)
+
+    def drop_links(self, key: jax.Array, P, symmetric: bool = False):
+        """Sample this round's link failures into the mixing operator
+        (dense matrix or :class:`NeighborList`), preserving exact
+        column-stochasticity (or double stochasticity when ``symmetric``)."""
+        if isinstance(P, NeighborList):
+            if symmetric:
+                raise ValueError(
+                    "link drops on the symmetric neighbor-list form are "
+                    "unsupported (per-edge masks cannot be kept consistent "
+                    "across both endpoints' fixed-shape lists); force "
+                    "gossip='dense'"
+                )
+            return drop_links_neighbors(key, P, drop=self.drop)
+        return drop_links_dense(key, P, drop=self.drop, symmetric=symmetric)
+
+
+def drop_links_dense(
+    key: jax.Array, P: jnp.ndarray, drop: float, symmetric: bool = False
+) -> jnp.ndarray:
+    """Fail each non-self edge of ``P``'s support i.i.d. with probability
+    ``drop``, then re-normalize from the SURVIVING adjacency.
+
+    The drop mask hits the adjacency *before* sender normalization: a
+    sender divides by its surviving out-degree (self-loop always included),
+    so every column of the returned matrix sums to exactly 1 — no mass
+    leaks through dead links, it stays on the sender.  With ``symmetric``
+    the mask is symmetrized (one coin per undirected edge) and Metropolis
+    weights are recomputed on the surviving graph, keeping the operator
+    exactly doubly stochastic.
+    """
+    n = P.shape[0]
+    u = jax.random.uniform(key, (n, n))
+    if symmetric:
+        u = jnp.triu(u, 1)
+        u = u + u.T  # one coin per undirected edge
+    keep = u >= drop
+    adj = (P > 0) & keep
+    adj = jnp.asarray(adj, jnp.float32)
+    if symmetric:
+        return metropolis_weights(adj * (1.0 - jnp.eye(n)))
+    return column_stochastic_from_adjacency(adj)
+
+
+def drop_links_neighbors(
+    key: jax.Array, nl: "NeighborList", drop: float
+) -> "NeighborList":
+    """Sparse twin of :func:`drop_links_dense` (directed families).
+
+    Each real non-self slot fails i.i.d.; slot 0 (the self-loop) never
+    drops.  Sender out-degrees are re-counted over the *surviving* edges by
+    one scatter-add and every surviving edge from sender j carries weight
+    ``1 / out_degree(j)`` — exactly the column-stochastic sender
+    normalization of ``_kin_weights``, applied after the drops.
+    """
+    n = nl.idx.shape[0]
+    keep = jax.random.uniform(key, nl.idx.shape) >= drop
+    keep = keep.at[:, 0].set(True)  # the self-loop never drops
+    live = keep & (nl.wgt > 0)  # zero-weight pads stay inert
+    # Surviving out-degree per sender (self-loop slots count themselves).
+    outdeg = jnp.zeros((n,), jnp.float32).at[
+        jnp.where(live, nl.idx, n)
+    ].add(1.0, mode="drop")
+    wgt = jnp.where(live, 1.0 / outdeg[nl.idx], 0.0)
+    return NeighborList(nl.idx, wgt.astype(jnp.float32))
 
 
 # ---------------------------------------------------------------------------

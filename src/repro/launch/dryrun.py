@@ -166,7 +166,7 @@ def _lower_one(cfg, shape, mesh_kind: str, step_cfg):
                 comp = jax.ShapeDtypeStruct(
                     (n_pods, make_spec(row_view).dim), jnp.float32)
             fn = jax.jit(make_round_step(api, step_cfg), donate_argnums=(0, 1))
-            lowered = fn.lower(params, v, w, comp, batch, P_pod)
+            lowered = fn.lower(params, v, w, comp, (), batch, P_pod)
         elif shape.kind == "train":
             params = _abstract_params(api, mesh, False, False)
             v = params

@@ -24,7 +24,7 @@ from repro.models.registry import ModelApi
 
 __all__ = ["StepConfig", "make_train_step", "make_round_step", "make_serve_step",
            "pod_mixing_matrix", "pod_mixing_neighbors", "resolve_compressor",
-           "init_pod_comp_state"]
+           "init_pod_comp_state", "resolve_pod_mixer", "init_pod_link_state"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,6 +45,14 @@ class StepConfig:
     # exactly like ``FLState.comp`` in the simulation engine.
     compressor: str = "identity"
     topk_ratio: float = 0.05  # kept fraction per row (topk_ef)
+    # Unreliable pod interconnect (``repro.core.topology.LinkModel``):
+    # per-round link drops on the pod graph, bounded delivery delays
+    # (in-flight buffers ride the round_step ``link`` carry, exactly like
+    # ``comp``), or event-triggered transmission.  All-zero = perfect
+    # links, bitwise identical to the pre-link round.
+    link_drop: float = 0.0
+    link_delay: int = 0
+    event_threshold: float = 0.0
 
 
 def _microbatched_loss(loss_fn, n_micro: int):
@@ -122,6 +130,53 @@ def init_pod_comp_state(compressor, params):
     return compressor.init_state(n_pods, make_spec(row_view).dim)
 
 
+def resolve_pod_link(step_cfg: StepConfig):
+    """``step_cfg``'s link fields -> a ``topology.LinkModel`` or ``None``
+    (perfect links — the round is built exactly as before)."""
+    from repro.core.topology import LinkModel
+
+    model = LinkModel(drop=step_cfg.link_drop, delay=step_cfg.link_delay,
+                      event_threshold=step_cfg.event_threshold)
+    return model if model.active else None
+
+
+def resolve_pod_mixer(step_cfg: StepConfig, link_model=None):
+    """The pod mixer for a link scenario: delayed / event-triggered
+    push-sum when the model asks for it, plain push-sum otherwise."""
+    from repro.core.stages import (
+        DelayedPushSumMixer,
+        EventTriggeredMixer,
+        PushSumMixer,
+    )
+
+    if link_model is None:
+        link_model = resolve_pod_link(step_cfg)
+    if link_model is not None and link_model.delay:
+        return DelayedPushSumMixer(delay=link_model.delay)
+    if link_model is not None and link_model.event_threshold:
+        return EventTriggeredMixer(threshold=link_model.event_threshold)
+    return PushSumMixer()
+
+
+def init_pod_link_state(mixer, link_model, params, seed: int = 0):
+    """Initial unreliable-link carry for the pod round (mirrors
+    ``program.init``): ``()`` on perfect links, otherwise a
+    ``stages.LinkState`` with its own PRNG stream and the mixer's payload
+    buffers sized from the ``(n_pods, D)`` replica bank."""
+    if link_model is None and not getattr(mixer, "link_stateful", False):
+        return ()
+    from repro.core.flat import make_spec
+    from repro.core.stages import LinkState
+
+    spec = make_spec(jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), params))
+    bank = spec.ravel_stacked(params)
+    return LinkState(
+        key=jax.random.fold_in(jax.random.PRNGKey(seed), 0x11AB),
+        **mixer.link_buffers(bank),
+    )
+
+
 def make_train_step(api: ModelApi, step_cfg: StepConfig) -> Callable:
     """Single-client sharded local step: (params, v, w, batch) ->
     (params, v, metrics)."""
@@ -145,10 +200,11 @@ def make_round_step(
     flat_mix: bool = True,
     mixer=None,
     compressor=None,
+    link_model=None,
 ) -> Callable:
     """Multi-pod DFL round: (stacked params, stacked v, w (n_pods,),
-    comp, batch (n_pods, ...), P_pod) -> updated (params, v, w, comp) +
-    mean {loss, acc} metrics.
+    comp, link, batch (n_pods, ...), P_pod) -> updated
+    (params, v, w, comp, link) + mean {loss, acc} metrics.
 
     Every leaf carries a leading replica axis sharded over "pod";
     ``spmd_axis_name`` threads that axis through all internal sharding
@@ -158,25 +214,46 @@ def make_round_step(
     simulation engine composes (``repro.core.stages``): with ``flat_mix``
     (default) replicas are ravelled into an ``(n_pods, D)`` bank, run
     through ``compressor.apply`` (``step_cfg.compressor`` when not given
-    explicitly), and mixed with one ``mixer.mix`` call — the flat gossip
-    kernel — instead of a per-leaf einsum.  ``comp`` is the compressor
-    carry (``init_pod_comp_state``): the error-feedback residual bank for
-    stateful stages like ``topk_ef``, ``()`` otherwise — threaded through
-    the round exactly like ``FLState.comp`` in ``core/program.py``.
+    explicitly), and mixed with one ``mixer.mix_round`` call — the flat
+    gossip kernel, with the self-loop contribution kept full precision
+    under compression.  ``comp`` is the compressor carry
+    (``init_pod_comp_state``): the error-feedback residual bank for
+    stateful stages like ``topk_ef``, ``()`` otherwise.  ``link`` is the
+    unreliable-link carry (``init_pod_link_state``): per-round drop masks
+    draw from its PRNG stream (``link_model`` /
+    ``step_cfg.link_drop`` — applied to the pod graph *before* sender
+    normalization, keeping it exactly column-stochastic) and the
+    delayed-mixer in-flight buffers or event caches ride it, exactly like
+    ``FLState.link`` in ``core/program.py``; ``()`` on perfect links.
     ``P_pod`` is the dense ``(n_pods, n_pods)`` matrix or a
     ``NeighborList`` (``pod_mixing_neighbors``); ``mixer`` defaults to the
-    directed push-sum stage; a ``SymmetricMixer`` swaps in
-    doubly-stochastic gossip with fixed weights.
+    link-appropriate directed push-sum stage (``resolve_pod_mixer``); a
+    ``SymmetricMixer`` swaps in doubly-stochastic gossip with fixed
+    weights.
     """
-    from repro.core.stages import IdentityCompressor, PushSumMixer
+    from repro.core.stages import IdentityCompressor
     from repro.core.topology import NeighborList
 
     local = make_train_step(api, step_cfg)
-    mixer = mixer if mixer is not None else PushSumMixer()
+    if link_model is None:
+        link_model = resolve_pod_link(step_cfg)
+    mixer = mixer if mixer is not None else resolve_pod_mixer(
+        step_cfg, link_model)
     if compressor is None:
         compressor = resolve_compressor(step_cfg)
+    linked = link_model is not None or getattr(mixer, "link_stateful", False)
     if not flat_mix and not isinstance(compressor, IdentityCompressor):
         raise ValueError("compression requires flat_mix=True (bank layout)")
+    if not flat_mix and linked:
+        raise ValueError("link scenarios require flat_mix=True (bank layout)")
+    if (link_model is not None and mixer.kind != "directed"
+            and (link_model.delay or link_model.event_threshold)):
+        # Same composition rule make_program enforces: staleness and
+        # event triggering are push-sum constructions.
+        raise ValueError(
+            "delayed / event-triggered mixing is push-sum (directed) only; "
+            f"the configured mixer is {mixer.kind!r}"
+        )
 
     def one_pod(params, v, w, batches):
         def body(carry, batch):
@@ -187,7 +264,7 @@ def make_round_step(
         (params, v), (losses, accs) = jax.lax.scan(body, (params, v), batches)
         return params, v, losses.mean(), accs.mean()
 
-    def mix_flat(params, w, comp, P_pod):
+    def mix_flat(params, w, comp, link, P_pod):
         from jax.sharding import NamedSharding, PartitionSpec
         from repro.core.flat import make_spec
         from repro.launch import sharding as shlib
@@ -208,22 +285,48 @@ def make_round_step(
             else None
         )
 
-        def pin(x):
-            return (jax.lax.with_sharding_constraint(x, row_sharding)
-                    if row_sharding is not None else x)
+        def pin(x, lead: int = 0):
+            if row_sharding is None:
+                return x
+            if lead:  # (B, n_pods, D) buffers: pod rows on axis `lead`
+                spec3 = PartitionSpec(*([None] * lead), "pod",
+                                      *([None] * (x.ndim - lead - 1)))
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, spec3))
+            return jax.lax.with_sharding_constraint(x, row_sharding)
+
+        def pin_link(lk):
+            if not linked or isinstance(lk, tuple):
+                return lk
+            return lk._replace(
+                bufx=lk.bufx if isinstance(lk.bufx, tuple)
+                else pin(lk.bufx, lead=1),
+                bufw=lk.bufw,
+                last=lk.last if isinstance(lk.last, tuple) else pin(lk.last),
+            )
 
         bank = pin(bank)
         if compressor.stateful:
             # The residual bank has the same (n_pods, D) row layout.
             comp = pin(comp)
-        comp, bank = compressor.apply(comp, bank)
-        bank, w = mixer.mix(P_pod, bank, w)
-        bank = pin(bank)
+        comp, sent = compressor.apply(comp, bank)
+        if linked:
+            lkey, nkey = jax.random.split(link.key)
+            link = link._replace(key=nkey)
+            if link_model is not None and link_model.drop > 0:
+                dkey, lkey = jax.random.split(lkey)
+                P_pod = link_model.drop_links(
+                    dkey, P_pod, symmetric=mixer.kind == "symmetric")
+            link = pin_link(link)
+        mixed, w, link, extras = mixer.mix_round(
+            P_pod, sent, w, link, lkey if linked else None, bank)
+        bank = pin(mixed)
         if compressor.stateful:
             comp = pin(comp)
-        return spec.unravel_stacked(bank), w, comp
+        link = pin_link(link)
+        return spec.unravel_stacked(bank), w, comp, link, extras
 
-    def mix_leafwise(params, w, comp, P_pod):
+    def mix_leafwise(params, w, comp, link, P_pod):
         if isinstance(P_pod, NeighborList):
             raise ValueError(
                 "neighbor-list P_pod requires flat_mix=True (bank layout)")
@@ -233,15 +336,17 @@ def make_round_step(
                 "ij,j...->i...", P_pod, x.astype(jnp.float32)).astype(x.dtype)
 
         params = jax.tree.map(mix, params)
-        return params, mixer.mix_weights(P_pod, w), comp
+        return params, mixer.mix_weights(P_pod, w), comp, link, {}
 
-    def round_step(params, v, w, comp, batch, P_pod):
+    def round_step(params, v, w, comp, link, batch, P_pod):
         params, v, loss, acc = jax.vmap(one_pod, spmd_axis_name="pod")(
             params, v, w, batch)
         # compress + gossip over "pod" (same stages as the engine)
-        params, w, comp = (mix_flat if flat_mix else mix_leafwise)(
-            params, w, comp, P_pod)
-        return params, v, w, comp, {"loss": loss.mean(), "acc": acc.mean()}
+        params, w, comp, link, extras = (
+            mix_flat if flat_mix else mix_leafwise)(
+            params, w, comp, link, P_pod)
+        return params, v, w, comp, link, {
+            "loss": loss.mean(), "acc": acc.mean(), **extras}
 
     return round_step
 

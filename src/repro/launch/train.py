@@ -42,6 +42,21 @@ def main():
                          "bank through the round and checkpoints)")
     ap.add_argument("--topk-ratio", type=float, default=0.05,
                     help="kept fraction per row for --compress topk_ef")
+    ap.add_argument("--link-drop", type=float, default=0.0,
+                    help="per-round i.i.d. failure probability of each "
+                         "directed pod link; drops renormalize the graph "
+                         "BEFORE the send, so it stays exactly "
+                         "column-stochastic and no push-sum mass leaks")
+    ap.add_argument("--link-delay", type=int, default=0,
+                    help="staleness bound B: each surviving link delivers "
+                         "0..B rounds late; in-flight payloads ride the "
+                         "round state (and checkpoints), node + in-flight "
+                         "mass == n_pods exactly")
+    ap.add_argument("--event-threshold", type=float, default=0.0,
+                    help="event-triggered gossip: a pod retransmits only "
+                         "after drifting this far (L2) from its last "
+                         "broadcast; neighbors mix the cached row "
+                         "otherwise (comm_fraction is logged)")
     ap.add_argument("--smoke", action="store_true", help="reduced config")
     ap.add_argument("--host-mesh", action="store_true",
                     help="(2,2,2) mesh over 8 forced host devices")
@@ -69,10 +84,13 @@ def main():
     from repro.launch.steps import (
         StepConfig,
         init_pod_comp_state,
+        init_pod_link_state,
         make_round_step,
         pod_mixing_matrix,
         pod_mixing_neighbors,
         resolve_compressor,
+        resolve_pod_link,
+        resolve_pod_mixer,
     )
     from repro.models.pdefs import PDef
     from repro.models.registry import get_model_api
@@ -86,28 +104,42 @@ def main():
                           local_steps=args.local_steps,
                           microbatches=args.microbatches,
                           compressor=args.compress,
-                          topk_ratio=args.topk_ratio)
+                          topk_ratio=args.topk_ratio,
+                          link_drop=args.link_drop,
+                          link_delay=args.link_delay,
+                          event_threshold=args.event_threshold)
     compressor = resolve_compressor(step_cfg)
-    raw_round = make_round_step(api, step_cfg, compressor=compressor)
-    round_step = jax.jit(raw_round, donate_argnums=(0, 1, 3))
+    link_model = resolve_pod_link(step_cfg)
+    mixer = resolve_pod_mixer(step_cfg, link_model)
+    raw_round = make_round_step(api, step_cfg, mixer=mixer,
+                                compressor=compressor, link_model=link_model)
+    round_step = jax.jit(raw_round, donate_argnums=(0, 1, 3, 4))
 
-    def _superstep(params, v, w, comp, toks_chunk, P_pod):
+    def _mass(w, link):
+        """Total push-sum mass: node weights + any in-flight shares."""
+        inflight = (link.bufw.sum()
+                    if link != () and not isinstance(link.bufw, tuple)
+                    else 0.0)
+        return w.sum() + inflight
+
+    def _superstep(params, v, w, comp, link, toks_chunk, P_pod):
         """lax.scan a whole superstep of rounds inside one jit; per-round
         (loss, acc, w-mass) come back stacked for boundary logging."""
 
         def body(carry, batch):
-            params, v, w, comp = carry
-            params, v, w, comp, m = raw_round(
-                params, v, w, comp, {"tokens": batch}, P_pod)
-            return (params, v, w, comp), (m["loss"], m["acc"], w.sum())
+            params, v, w, comp, link = carry
+            params, v, w, comp, link, m = raw_round(
+                params, v, w, comp, link, {"tokens": batch}, P_pod)
+            return (params, v, w, comp, link), (
+                m["loss"], m["acc"], _mass(w, link))
 
-        (params, v, w, comp), ys = jax.lax.scan(
-            body, (params, v, w, comp), toks_chunk)
-        return params, v, w, comp, ys
+        (params, v, w, comp, link), ys = jax.lax.scan(
+            body, (params, v, w, comp, link), toks_chunk)
+        return params, v, w, comp, link, ys
 
     # One executable per distinct chunk length (at most two: the full
     # superstep and the final remainder).
-    superstep_jit = jax.jit(_superstep, donate_argnums=(0, 1, 3))
+    superstep_jit = jax.jit(_superstep, donate_argnums=(0, 1, 3, 4))
 
     with shlib.use_mesh(mesh, fsdp=cfg.fsdp):
         defs = api.param_defs()
@@ -124,6 +156,7 @@ def main():
         v = jax.tree.map(jnp.zeros_like, params)
         w = jnp.ones((n_pods,))
         comp = init_pod_comp_state(compressor, params)
+        link = init_pod_link_state(mixer, link_model, params)
         # Directed pod ring, k_max = 2: neighbor-list form once the pod
         # count clears the shared density rule, dense below it.
         P_pod = (pod_mixing_neighbors(n_pods)
@@ -146,6 +179,10 @@ def main():
                     # ckpt recorded without it fails the structure check
                     # instead of silently restarting the residual at zero.
                     like["comp"] = comp
+                if link != ():
+                    # Same for the link carry: in-flight payloads / event
+                    # caches resume instead of silently resetting.
+                    like["link"] = link
                 restored = checkpoint.restore(path, like=like)
                 # Re-pin the restored (host) arrays to the live shardings so
                 # the warm restart costs one device_put, not a re-partition.
@@ -158,6 +195,8 @@ def main():
                 w = jnp.asarray(restored["w"])
                 if compressor.stateful:
                     comp = jnp.asarray(restored["comp"])
+                if link != ():
+                    link = jax.tree.map(jnp.asarray, restored["link"])
                 start = int(restored["round"]) + 1
                 print(f"[train] resumed {path} at round {start} "
                       f"(momentum bank restored)")
@@ -170,8 +209,9 @@ def main():
             length = min(max(args.superstep, 1), args.rounds - r)
             t0 = time.time()
             if args.superstep > 1:
-                params, v, w, comp, (losses, accs, wmass) = superstep_jit(
-                    params, v, w, comp, toks[r:r + length], P_pod)
+                params, v, w, comp, link, (losses, accs, wmass) = \
+                    superstep_jit(params, v, w, comp, link,
+                                  toks[r:r + length], P_pod)
                 dt = (time.time() - t0) / length
                 for i in range(length):
                     print(f"[train] round {r + i:4d} "
@@ -181,24 +221,31 @@ def main():
                           flush=True)
                 ckpt_due = args.ckpt_dir is not None  # superstep boundary
             else:
-                params, v, w, comp, m = round_step(
-                    params, v, w, comp, {"tokens": toks[r]}, P_pod)
+                params, v, w, comp, link, m = round_step(
+                    params, v, w, comp, link, {"tokens": toks[r]}, P_pod)
+                comm = (f" comm={float(m['comm_fraction']):.2f}"
+                        if "comm_fraction" in m else "")
                 print(f"[train] round {r:4d} loss={float(m['loss']):.4f} "
                       f"acc={float(m['acc']):.4f} "
-                      f"w_mass={float(w.sum()):.4f} "
+                      f"w_mass={float(_mass(w, link)):.4f}{comm} "
                       f"dt={time.time() - t0:.2f}s", flush=True)
                 ckpt_due = args.ckpt_dir and (r + 1) % 5 == 0
             r += length
             if ckpt_due:
                 # Full round state — momentum bank, round index, and any
-                # compressor residual included, so restarts of momentum-
-                # persistent / error-feedback variants stay warm.
+                # compressor residual or link carry included, so restarts
+                # of momentum-persistent / error-feedback / delayed-link
+                # variants stay warm.
                 tree = {"params": params, "v": v, "w": w,
                         "round": np.int32(r - 1)}
                 if compressor.stateful:
                     tree["comp"] = comp
+                if link != ():
+                    tree["link"] = link
                 checkpoint.save(args.ckpt_dir, r - 1, tree)
-        assert abs(float(w.sum()) - n_pods) < 1e-3
+        # Exact mass conservation — in-flight shares included, so the
+        # invariant holds under drops AND bounded delays.
+        assert abs(float(_mass(w, link)) - n_pods) < 1e-3
 
 
 if __name__ == "__main__":

@@ -59,6 +59,29 @@ def test_train_cli_topk_ef_compressor(tmp_path):
     assert "resumed" in r2.stdout and "at round 2" in r2.stdout
 
 
+def test_train_cli_unreliable_links(tmp_path):
+    """--link-drop/--link-delay: per-round pod link failures + bounded
+    staleness; the printed w_mass counts in-flight shares, so exact mass
+    conservation is visible (and asserted by the driver) even while
+    payloads are delayed; the link carry checkpoints and resumes."""
+    ckpt = str(tmp_path / "ck")
+    r = _run(["repro.launch.train", "--arch", "xlstm-350m", "--smoke",
+              "--host-mesh", "--rounds", "2", "--superstep", "2",
+              "--batch", "4", "--seq", "32",
+              "--link-drop", "0.3", "--link-delay", "1",
+              "--ckpt-dir", ckpt])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "w_mass=2.0000" in r.stdout
+    r2 = _run(["repro.launch.train", "--arch", "xlstm-350m", "--smoke",
+               "--host-mesh", "--rounds", "4", "--superstep", "2",
+               "--batch", "4", "--seq", "32",
+               "--link-drop", "0.3", "--link-delay", "1",
+               "--ckpt-dir", ckpt, "--resume"])
+    assert r2.returncode == 0, r2.stderr[-2000:]
+    assert "resumed" in r2.stdout
+    assert "w_mass=2.0000" in r2.stdout
+
+
 def test_serve_cli():
     r = _run(["repro.launch.serve", "--arch", "glm4-9b", "--smoke",
               "--batch", "2", "--prompt-len", "8", "--new-tokens", "4"])

@@ -178,9 +178,10 @@ def test_round_step_accepts_neighbor_list_P_pod():
 
     api, params, v, w, batches = _pod_setting()
     step = jax.jit(make_round_step(api, StepConfig(lr=0.05, rho=0.0)))
-    p1, v1, w1, _, m1 = step(params, v, w, (), batches, pod_mixing_matrix(2))
-    p2, v2, w2, _, m2 = step(params, v, w, (), batches,
-                             pod_mixing_neighbors(2))
+    p1, v1, w1, _, _, m1 = step(params, v, w, (), (), batches,
+                                pod_mixing_matrix(2))
+    p2, v2, w2, _, _, m2 = step(params, v, w, (), (), batches,
+                                pod_mixing_neighbors(2))
     for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b, np.float32),
@@ -192,7 +193,7 @@ def test_round_step_accepts_neighbor_list_P_pod():
     leafwise = make_round_step(api, StepConfig(lr=0.05, rho=0.0),
                                flat_mix=False)
     with pytest.raises(ValueError, match="flat_mix"):
-        leafwise(params, v, w, (), batches, pod_mixing_neighbors(2))
+        leafwise(params, v, w, (), (), batches, pod_mixing_neighbors(2))
 
 
 def test_round_step_threads_ef_residual_state():
@@ -213,15 +214,49 @@ def test_round_step_threads_ef_residual_state():
     c0 = init_pod_comp_state(comp, params)
     assert c0.shape[0] == 2 and not np.any(np.asarray(c0))
     step = jax.jit(make_round_step(api, sc, compressor=comp))
-    p1, v1, w1, c1, m1 = step(params, v, w, c0, batches,
-                              pod_mixing_matrix(2))
+    p1, v1, w1, c1, _, m1 = step(params, v, w, c0, (), batches,
+                                 pod_mixing_matrix(2))
     assert c1.shape == c0.shape
     assert np.any(np.asarray(c1))  # residual bank is live after round 1
     assert np.isfinite(float(m1["loss"]))
     # second round consumes the carried residual without shape drift
-    p2, v2, w2, c2, m2 = step(p1, v1, w1, c1, batches, pod_mixing_matrix(2))
+    p2, v2, w2, c2, _, m2 = step(p1, v1, w1, c1, (), batches,
+                                 pod_mixing_matrix(2))
     assert c2.shape == c0.shape and np.isfinite(float(m2["loss"]))
     np.testing.assert_allclose(float(w2.sum()), 2.0, atol=1e-4)
+
+
+def test_round_step_threads_link_carry():
+    """Unreliable pod links: per-round drop masks draw from the link
+    carry's PRNG stream, the dropped pod graph stays exactly
+    column-stochastic, and delayed in-flight shares ride the carry —
+    node mass + in-flight mass == n_pods at every round."""
+    from repro.launch.steps import (
+        StepConfig,
+        init_pod_link_state,
+        make_round_step,
+        resolve_pod_link,
+        resolve_pod_mixer,
+    )
+
+    api, params, v, w, batches = _pod_setting()
+    sc = StepConfig(lr=0.05, rho=0.0, link_drop=0.3, link_delay=2)
+    lm = resolve_pod_link(sc)
+    mixer = resolve_pod_mixer(sc, lm)
+    link = link0 = init_pod_link_state(mixer, lm, params)
+    assert link0.bufx.shape[0] == 2 and link0.bufw.shape == (2, 2)
+    step = jax.jit(make_round_step(api, sc, mixer=mixer, link_model=lm))
+    for _ in range(3):
+        params, v, w, _, link, m = step(params, v, w, (), link, batches,
+                                        pod_mixing_matrix(2))
+        np.testing.assert_allclose(
+            float(w.sum() + link.bufw.sum()), 2.0, atol=1e-4)
+        assert np.isfinite(float(m["loss"]))
+    # the carry's stream advanced (fresh drop masks each round)
+    assert not np.array_equal(np.asarray(link.key), np.asarray(link0.key))
+    # perfect-link configs stay link-free: no carry, no extra state
+    assert init_pod_link_state(
+        resolve_pod_mixer(StepConfig()), None, params) == ()
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,451 @@
+"""Unreliable-link gossip: dropped operators stay exactly column-stochastic
+(drops hit the adjacency BEFORE sender normalization), push-sum mass is
+conserved to float tolerance across long degraded runs — in-flight shares
+included under bounded delays — event-triggered rounds report their
+communication fraction, and the all-zero link configuration is bitwise the
+perfect-link program.  Plus the compressed-gossip self-loop semantics:
+client i's own contribution P[ii]·X[i] is never quantized/sparsified."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # graceful tier-1 degradation (see tests/_hyp.py)
+    from _hyp import given, settings, st
+
+from repro.core import (
+    FLTrainer,
+    LinkModel,
+    TopologyConfig,
+    make_algo,
+    make_program,
+)
+from repro.core import pushsum
+from repro.core import topology as topo
+from repro.core.stages import (
+    DelayedPushSumMixer,
+    EventTriggeredMixer,
+    Int8RowCompressor,
+    LinkState,
+    PushSumMixer,
+    SymmetricMixer,
+    TopKEFCompressor,
+)
+
+N_CLIENTS = 8
+
+
+def _dense_family(family, key, n, k, losses=None):
+    if family == "kout":
+        return topo.sample_kout(key, n, k)
+    if family == "kout_selective":
+        l = jax.random.normal(key, (n,)) if losses is None else losses
+        return topo.sample_kout_selective(key, l, n, k)
+    if family == "ring":
+        return topo.directed_ring(n)
+    if family == "exponential":
+        return topo.directed_exponential(n, k)  # k doubles as the hop
+    if family == "full":
+        return jnp.full((n, n), 1.0 / n, jnp.float32)
+    raise AssertionError(family)
+
+
+_DENSE_FAMILIES = ["kout", "kout_selective", "ring", "exponential", "full"]
+
+
+# ---------------------------------------------------------------------------
+# Dropped operators: exactly column-stochastic, for every family.
+# ---------------------------------------------------------------------------
+
+@given(st.sampled_from(_DENSE_FAMILIES), st.integers(3, 40),
+       st.floats(0.0, 0.95), st.integers(0, 9999))
+@settings(max_examples=30, deadline=None)
+def test_dropped_dense_exactly_column_stochastic(family, n, drop, seed):
+    k = max(1, min(n - 1, n // 3))
+    P = _dense_family(family, jax.random.PRNGKey(seed), n, k)
+    Pd = topo.drop_links_dense(jax.random.PRNGKey(seed + 1), P, drop)
+    A = np.asarray(Pd)
+    # drops renormalize the surviving adjacency — nothing leaks (the only
+    # slack is the f32 rounding of count * (1/count))
+    np.testing.assert_allclose(A.sum(axis=0), 1.0, atol=1e-6)
+    assert np.all(A >= 0)
+    assert np.all(np.diag(A) > 0)  # self-loops never drop
+    # support shrinks, never grows
+    assert np.all((A > 0) <= (np.asarray(P) > 0))
+
+
+@given(st.sampled_from(["kout", "kout_selective", "ring", "exponential"]),
+       st.integers(3, 40), st.floats(0.0, 0.95), st.integers(0, 9999))
+@settings(max_examples=30, deadline=None)
+def test_dropped_neighbors_exactly_column_stochastic(family, n, drop, seed):
+    k = max(1, min(n - 1, n // 3))
+    key = jax.random.PRNGKey(seed)
+    if family == "kout":
+        nl = topo.sample_kout_neighbors(key, n, k)
+    elif family == "kout_selective":
+        nl = topo.sample_kout_selective_neighbors(
+            key, jax.random.normal(key, (n,)), n, k)
+    elif family == "ring":
+        nl = topo.neighbors_ring(n)
+    else:
+        nl = topo.neighbors_exponential(n, k)
+    nld = topo.drop_links_neighbors(jax.random.PRNGKey(seed + 1), nl, drop)
+    A = np.asarray(topo.dense_from_neighbors(nld, n))
+    np.testing.assert_allclose(A.sum(axis=0), 1.0, atol=1e-6)
+    assert np.all(np.diag(A) > 0)
+    assert np.all(np.asarray(nld.wgt)[:, 0] > 0)  # slot-0 self-loop kept
+
+
+@given(st.integers(4, 30), st.floats(0.0, 0.9), st.integers(0, 9999))
+@settings(max_examples=20, deadline=None)
+def test_dropped_symmetric_stays_doubly_stochastic(n, drop, seed):
+    k = max(1, n // 3)
+    W = topo.sample_symmetric_k_regular(jax.random.PRNGKey(seed), n, k)
+    Wd = np.asarray(topo.drop_links_dense(
+        jax.random.PRNGKey(seed + 1), W, drop, symmetric=True))
+    assert np.allclose(Wd, Wd.T, atol=1e-6)  # one coin per undirected edge
+    assert np.allclose(Wd.sum(0), 1.0, atol=1e-5)
+    assert np.allclose(Wd.sum(1), 1.0, atol=1e-5)
+
+
+def test_drop_zero_is_identity_on_both_representations():
+    """drop=0 must reproduce the undropped operator exactly — the
+    renormalization arithmetic may not perturb a single weight."""
+    n, k = 12, 3
+    key = jax.random.PRNGKey(0)
+    for P in (topo.sample_kout(key, n, k), topo.directed_ring(n),
+              topo.directed_exponential(n, 1)):
+        np.testing.assert_array_equal(
+            np.asarray(topo.drop_links_dense(jax.random.PRNGKey(1), P, 0.0)),
+            np.asarray(P))
+    for nl in (topo.sample_kout_neighbors(key, n, k),
+               topo.neighbors_ring(n), topo.neighbors_exponential(n, 1)):
+        nl0 = topo.drop_links_neighbors(jax.random.PRNGKey(1), nl, 0.0)
+        np.testing.assert_array_equal(np.asarray(nl0.idx),
+                                      np.asarray(nl.idx))
+        np.testing.assert_array_equal(np.asarray(nl0.wgt),
+                                      np.asarray(nl.wgt))
+
+
+def test_link_model_validation():
+    with pytest.raises(ValueError, match="drop probability"):
+        topo.LinkModel(drop=1.0)
+    with pytest.raises(ValueError, match="do not compose"):
+        topo.LinkModel(delay=2, event_threshold=0.1)
+    # one sender-side cache row cannot model per-receiver misses, so
+    # event triggering assumes reliable links
+    with pytest.raises(ValueError, match="do not compose"):
+        topo.LinkModel(drop=0.2, event_threshold=0.1)
+    with pytest.raises(ValueError, match="delay"):
+        DelayedPushSumMixer(delay=0)
+    assert not topo.LinkModel().active
+    assert topo.LinkModel(drop=0.1).active
+    with pytest.raises(ValueError, match="symmetric neighbor-list"):
+        topo.LinkModel(drop=0.5).drop_links(
+            jax.random.PRNGKey(0),
+            topo.sample_symmetric_neighbors(jax.random.PRNGKey(1), 8, 2),
+            symmetric=True)
+
+
+# ---------------------------------------------------------------------------
+# Exact push-sum mass under drops and bounded delays (operator level).
+# ---------------------------------------------------------------------------
+
+@given(st.integers(4, 24), st.floats(0.0, 0.8), st.integers(1, 3),
+       st.integers(0, 999))
+@settings(max_examples=15, deadline=None)
+def test_delayed_pushsum_mass_exact(n, drop, delay, seed):
+    """Node mass + in-flight mass == n at EVERY round, for any drop/delay
+    pattern — the invariant that makes the de-bias ratio trustworthy."""
+    d = 6
+    X = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+    w = jnp.ones((n,))
+    mixer = DelayedPushSumMixer(delay=delay)
+    link = LinkState(key=jax.random.PRNGKey(seed + 1),
+                     **mixer.link_buffers(X))
+    x_mass0 = np.asarray(X.sum(0))
+    for t in range(10):
+        P = topo.sample_kout(jax.random.PRNGKey(100 + t), n,
+                             max(1, n // 4))
+        lkey, dkey, nkey = jax.random.split(link.key, 3)
+        link = link._replace(key=nkey)
+        if drop > 0:
+            P = topo.drop_links_dense(dkey, P, drop)
+        X, w, link, _ = mixer.mix_round(P, X, w, link, lkey, X)
+        np.testing.assert_allclose(
+            float(w.sum() + link.bufw.sum()), n, rtol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(X.sum(0) + link.bufx.sum(axis=(0, 1))), x_mass0,
+            rtol=1e-4, atol=1e-4)
+
+
+def test_delayed_ring_consensus_converges():
+    """Push-sum over a directed ring with every link up to 2 rounds stale
+    still drives z = x / w to the exact initial average."""
+    n, d = 8, 7
+    X = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    target = np.asarray(X.mean(0))
+    w = jnp.ones((n,))
+    mixer = DelayedPushSumMixer(delay=2)
+    link = LinkState(key=jax.random.PRNGKey(1), **mixer.link_buffers(X))
+    P = topo.directed_ring(n)
+    # the ring's spectral gap is ~1/n^2 and staleness halves the rate:
+    # give the slow graph a long horizon
+    for _ in range(400):
+        lkey, nkey = jax.random.split(link.key)
+        link = link._replace(key=nkey)
+        X, w, link, _ = mixer.mix_round(P, X, w, link, lkey, X)
+    z = np.asarray(pushsum.debias_bank(X, w))
+    np.testing.assert_allclose(z, np.broadcast_to(target, (n, d)),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_event_triggered_thresholds_trade_comm_for_drift():
+    """threshold -> 0 transmits every round (comm_fraction 1) and matches
+    plain push-sum bitwise; a huge threshold stops transmitting after the
+    warm-start cache (comm_fraction 0) while mass stays exact."""
+    n, d = 10, 5
+    X0 = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    w0 = jnp.ones((n,))
+    P = topo.sample_kout(jax.random.PRNGKey(1), n, 3)
+
+    def run(threshold, rounds=3):
+        mixer = EventTriggeredMixer(threshold=threshold)
+        X, w = X0, w0
+        # a drifted cache: the mixer decides per round what to resend
+        link = LinkState(key=jax.random.PRNGKey(2),
+                         **mixer.link_buffers(0.5 * X0))
+        fracs = []
+        for t in range(rounds):
+            lkey, nkey = jax.random.split(link.key)
+            link = link._replace(key=nkey)
+            X, w, link, ex = mixer.mix_round(P, X, w, link, lkey, X)
+            fracs.append(float(ex["comm_fraction"]))
+            np.testing.assert_allclose(float(w.sum()), n, rtol=1e-5)
+        return X, w, fracs
+
+    X_eager, w_eager, fr_eager = run(0.0)
+    assert fr_eager == [1.0] * 3
+    ref, wref = X0, w0
+    for _ in range(3):
+        ref, wref = PushSumMixer().mix(P, ref, wref)
+    np.testing.assert_array_equal(np.asarray(X_eager), np.asarray(ref))
+    np.testing.assert_array_equal(np.asarray(w_eager), np.asarray(wref))
+
+    _, _, fr_lazy = run(1e9)
+    assert fr_lazy == [0.0] * 3
+
+
+# ---------------------------------------------------------------------------
+# Compressed gossip never compresses the self-loop (the headline bugfix).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mixer_cls", [PushSumMixer, SymmetricMixer])
+@pytest.mark.parametrize("sparse", [False, True])
+def test_selfloop_rides_full_precision(mixer_cls, sparse):
+    """mix_round must produce X'[i] = P[ii]·X[i] + sum_{j!=i} P[ij]·C(X)[j]
+    on both representations — with topk at ratio 0.05 the OLD semantics
+    kept only 5% of a client's own coordinates."""
+    n, d = 9, 40
+    X = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    Xc = np.asarray(TopKEFCompressor(ratio=0.1).apply(
+        jnp.zeros((n, d)), X)[1])
+    w = jnp.ones((n,))
+    if sparse:
+        P = topo.sample_kout_neighbors(jax.random.PRNGKey(1), n, 3)
+        dense = np.asarray(topo.dense_from_neighbors(P, n))
+        selfw = np.asarray(P.wgt[:, 0])
+    else:
+        P = topo.sample_kout(jax.random.PRNGKey(1), n, 3)
+        dense = np.asarray(P)
+        selfw = np.diag(dense)
+    got, _, _, _ = mixer_cls().mix_round(P, jnp.asarray(Xc), w, (), None, X)
+    want = (dense - np.diag(selfw)) @ Xc + selfw[:, None] * np.asarray(X)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-5)
+
+
+def test_selfloop_identity_composition_bitwise_unchanged():
+    """With identity compression (X_full is X) mix_round must be literally
+    mixer.mix — not 'equal up to fp', the same bits."""
+    n, d = 8, 33
+    X = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    w = jax.random.uniform(jax.random.PRNGKey(1), (n,), minval=0.5,
+                           maxval=1.5)
+    for P in (topo.sample_kout(jax.random.PRNGKey(2), n, 2),
+              topo.sample_kout_neighbors(jax.random.PRNGKey(2), n, 2)):
+        for mixer in (PushSumMixer(), SymmetricMixer()):
+            got = mixer.mix_round(P, X, w, (), None, X)
+            want = mixer.mix(P, X, w)
+            np.testing.assert_array_equal(np.asarray(got[0]),
+                                          np.asarray(want[0]))
+            np.testing.assert_array_equal(np.asarray(got[1]),
+                                          np.asarray(want[1]))
+
+
+def test_int8_round_preserves_self_contribution(setting):
+    """End to end: with int8 gossip, a client's own de-quantized row error
+    affects only what OTHERS receive; its self-contribution is exact.
+    Pin by decomposing one round's mix against the program internals."""
+    model, cdata = setting
+    algo = make_algo("dfedsgpsm", local_steps=1, batch_size=16,
+                     compressor="int8_rows")
+    t = TopologyConfig(kind="kout", n_clients=N_CLIENTS, k_out=2)
+    tr = FLTrainer(model.loss, model.init, cdata, algo, t, seed=0,
+                   participation=0.25)
+    first = tr.run_round()
+    for _ in range(3):
+        last = tr.run_round()
+    assert float(last["loss"]) < float(first["loss"])
+    np.testing.assert_allclose(float(tr.state.w.sum()), N_CLIENTS,
+                               atol=1e-3)
+    # operator-level pin with the live compressor on a live-sized bank
+    comp = Int8RowCompressor()
+    X = jax.random.normal(jax.random.PRNGKey(5), (N_CLIENTS, 64))
+    _, Xc = comp.apply((), X)
+    P = topo.sample_kout(jax.random.PRNGKey(6), N_CLIENTS, 2)
+    got = PushSumMixer().mix_round(P, Xc, jnp.ones((N_CLIENTS,)), (),
+                                   None, X)[0]
+    A = np.asarray(P)
+    want = ((A - np.diag(np.diag(A))) @ np.asarray(Xc)
+            + np.diag(A)[:, None] * np.asarray(X))
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Linked round programs end to end.
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def setting():
+    from repro.data.dirichlet import dirichlet_partition, stack_client_data
+    from repro.data.synthetic import make_dataset
+    from repro.models.small import mnist_2nn
+
+    train, _ = make_dataset("mnist", 800, 50, seed=0)
+    parts = dirichlet_partition(train["y"], N_CLIENTS, alpha=0.3, seed=0)
+    cdata = stack_client_data(train, parts, pad_to=64)
+    return mnist_2nn(), {k: jnp.asarray(v) for k, v in cdata.items()}
+
+
+def _trainer(setting, link=None, name="dfedsgpsm", **kw):
+    model, cdata = setting
+    algo = make_algo(name, local_steps=2, batch_size=16)
+    t = TopologyConfig(kind="kout", n_clients=N_CLIENTS, k_out=2)
+    return FLTrainer(model.loss, model.init, cdata, algo, t, seed=0,
+                     participation=0.25, link=link, **kw)
+
+
+def test_zero_link_model_is_bitwise_the_plain_program(setting):
+    """LinkModel() with all-zero fields must build the EXACT perfect-link
+    program: same states, same bits, dense and sparse."""
+    for gossip in ("dense", "sparse"):
+        a = _trainer(setting, link=None, gossip=gossip)
+        b = _trainer(setting, link=LinkModel(), gossip=gossip)
+        assert not b.program.linked
+        for _ in range(2):
+            ma, mb = a.run_round(), b.run_round()
+            assert float(ma["loss"]) == float(mb["loss"])
+        np.testing.assert_array_equal(np.asarray(a.state.params),
+                                      np.asarray(b.state.params))
+        np.testing.assert_array_equal(np.asarray(a.state.w),
+                                      np.asarray(b.state.w))
+
+
+def test_dropped_run_conserves_mass_50_rounds(setting):
+    """The acceptance invariant: under any sampled drop pattern the
+    per-round mass sum_i w_i == n holds to float tolerance across a
+    50-round run (drop-only: nothing is ever in flight)."""
+    tr = _trainer(setting, link=LinkModel(drop=0.3))
+    state, hist = tr.program.run_superstep(tr.state, 50)
+    mass = np.asarray(hist["w_mass"])
+    np.testing.assert_allclose(mass, N_CLIENTS, atol=2e-3)
+    assert np.all(np.isfinite(np.asarray(hist["loss"])))
+    assert float(hist["loss"][-1]) < float(hist["loss"][0])
+
+
+def test_delayed_run_conserves_total_mass(setting):
+    """With bounded delays the invariant counts the in-flight shares:
+    w_mass (node + buffer) == n every round, and training still makes
+    progress on stale payloads."""
+    tr = _trainer(setting, link=LinkModel(drop=0.2, delay=2))
+    assert isinstance(tr.program.mixer, DelayedPushSumMixer)
+    state, hist = tr.program.run_superstep(tr.state, 12)
+    np.testing.assert_allclose(np.asarray(hist["w_mass"]), N_CLIENTS,
+                               atol=1e-3)
+    assert float(hist["loss"][-1]) < float(hist["loss"][0])
+    # the node mass alone is NOT n — some is genuinely in flight
+    assert abs(float(state.w.sum()) - N_CLIENTS) > 1e-4
+    assert float(state.link.bufw.sum()) > 0
+
+
+def test_event_triggered_run_reports_comm_fraction(setting):
+    tr = _trainer(setting, link=LinkModel(event_threshold=1e-6))
+    assert isinstance(tr.program.mixer, EventTriggeredMixer)
+    hist = tr.fit(3)
+    assert all(rec["comm_fraction"] == 1.0 for rec in hist)
+    tr = _trainer(setting, link=LinkModel(event_threshold=1e9))
+    hist = tr.fit(3)
+    assert all(rec["comm_fraction"] == 0.0 for rec in hist)
+    assert all(abs(rec["w_mass"] - N_CLIENTS) < 1e-3 for rec in hist)
+
+
+def test_linked_checkpoint_roundtrip(setting, tmp_path):
+    """The link carry (PRNG stream + in-flight buffers) survives a full
+    save/restore: the resumed trajectory matches the uninterrupted one."""
+    link = LinkModel(drop=0.2, delay=2)
+    tr = _trainer(setting, link=link)
+    tr.run_round()
+    tr.run_round()
+    path = tr.save(str(tmp_path), 2)
+    m_ref = tr.run_round()
+
+    tr2 = _trainer(setting, link=link)
+    state = tr2.restore(path)
+    assert isinstance(state.link, LinkState)
+    m_res = tr2.run_round()
+    np.testing.assert_allclose(float(m_res["loss"]), float(m_ref["loss"]),
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(tr2.state.params),
+                               np.asarray(tr.state.params),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(tr2.state.link.bufw),
+                                  np.asarray(tr.state.link.bufw))
+    # a link-free trainer must refuse the linked checkpoint (and vice versa)
+    with pytest.raises(ValueError, match="link"):
+        _trainer(setting).restore(path)
+    # ...and so must a DIFFERENT link composition: a delayed carry in an
+    # event-triggered program (or another delay bound) fails the structure
+    # check up front instead of crashing inside the next traced round
+    with pytest.raises(ValueError, match="link carry field"):
+        _trainer(setting,
+                 link=LinkModel(event_threshold=0.1)).restore(path)
+    with pytest.raises(ValueError, match="link carry field"):
+        _trainer(setting, link=LinkModel(drop=0.2, delay=3)).restore(path)
+    plain = _trainer(setting)
+    plain.run_round()
+    p_plain = plain.save(str(tmp_path / "plain"), 1)
+    with pytest.raises(ValueError, match="link"):
+        _trainer(setting, link=link).restore(p_plain)
+
+
+def test_linked_program_composition_rules(setting):
+    model, cdata = setting
+    t = TopologyConfig(kind="kout", n_clients=N_CLIENTS, k_out=2)
+    with pytest.raises(ValueError, match="central"):
+        make_program(model.loss, model.init, cdata, make_algo("fedavg"), t,
+                     link=LinkModel(drop=0.2))
+    with pytest.raises(ValueError, match="directed"):
+        make_program(model.loss, model.init, cdata, make_algo("dfedsam"), t,
+                     link=LinkModel(delay=2))
+    # symmetric gossip + drops works on the dense representation
+    tr = _trainer(setting, link=LinkModel(drop=0.3), name="dfedsam",
+                  gossip="dense")
+    m = tr.run_round()
+    assert np.isfinite(float(m["loss"]))
+    with pytest.raises(ValueError, match="symmetric"):
+        _trainer(setting, link=LinkModel(drop=0.3), name="dfedsam",
+                 gossip="sparse")
+    with pytest.raises(ValueError, match="perfect links"):
+        _trainer(setting, link=LinkModel(drop=0.3), flat=False)

@@ -98,3 +98,25 @@ def test_debias_identity_when_weights_one():
     z = pushsum.debias(x, jnp.ones((5,)))
     for k in x:
         np.testing.assert_array_equal(np.asarray(x[k]), np.asarray(z[k]))
+
+
+@given(st.integers(4, 40), st.integers(0, 9999))
+@settings(max_examples=20, deadline=None)
+def test_weight_mixing_sparse_dense_agree(n, seed):
+    """gossip_weights must compute the SAME w' through the neighbor-list
+    gather and the (now HIGHEST-precision, like the bank matmul) dense
+    path — the de-bias ratio z = x / w may not depend on the mixing
+    representation."""
+    k = max(1, n // 4)
+    nl = topo.sample_kout_neighbors(jax.random.PRNGKey(seed), n, k)
+    P = topo.dense_from_neighbors(nl, n)
+    w = jax.random.uniform(jax.random.PRNGKey(seed + 1), (n,),
+                           minval=0.25, maxval=2.0)
+    np.testing.assert_allclose(
+        np.asarray(pushsum.gossip_weights(nl, w)),
+        np.asarray(pushsum.gossip_weights(P, w)),
+        rtol=1e-6, atol=1e-7)
+    # and both agree with the bank path's einsum on a (n, 1) column
+    bank = pushsum.gossip_bank(P, w[:, None], use_kernel=False)
+    np.testing.assert_allclose(np.asarray(pushsum.gossip_weights(P, w)),
+                               np.asarray(bank[:, 0]), rtol=1e-6, atol=1e-7)

@@ -279,6 +279,51 @@ def test_topk_ef_converges_end_to_end(setting):
 # Solver registry variants train.
 # ---------------------------------------------------------------------------
 
+def test_proximal_alpha_zero_fast_path_matches_momentum_path(setting):
+    """ProximalSolver at alpha == 0 mirrors the SamMomentumSolver fast
+    path (no momentum bank in the carry, V0 shared as the kernel's zero
+    operand) and must equal the generic momentum-carrying code bitwise."""
+    from repro.core.flat import make_spec
+    from repro.core.stages import ProximalSolver
+
+    model, cdata = setting
+    solver = ProximalSolver(local_steps=3, batch_size=16, rho=0.0,
+                            alpha=0.0, mu=0.1)
+    spec = make_spec(jax.eval_shape(model.init, jax.random.PRNGKey(0)))
+    row = spec.ravel(model.init(jax.random.PRNGKey(0)))
+    X = jnp.broadcast_to(row, (N_CLIENTS, spec.dim))
+    w = jnp.ones((N_CLIENTS,))
+    keys = jax.random.split(jax.random.PRNGKey(1), N_CLIENTS)
+
+    Xf, Vf, lf, af = solver.update(model.loss, spec, X, w, keys, cdata, 0.1)
+    grad_one = solver._grad_one(model.loss, spec)
+    V0 = jnp.zeros_like(X, jnp.float32)
+    Xg, Vg, lg, ag = solver._update_momentum(
+        grad_one, spec, X, X, V0, w, keys, cdata, 0.1)
+    np.testing.assert_array_equal(np.asarray(Xf), np.asarray(Xg))
+    np.testing.assert_array_equal(np.asarray(lf), np.asarray(lg))
+    np.testing.assert_array_equal(np.asarray(af), np.asarray(ag))
+    # momentum off: the fast path's reported bank is the shared zero bank
+    assert Xf is not Vf and not np.any(np.asarray(Vf))
+
+
+def test_central_round_refreshes_losses(setting):
+    """FLState.losses on the central path must pick up the sampled
+    clients' end-of-round losses (it rides checkpoints and drives
+    selection) — it used to stay zeros forever."""
+    model, cdata = setting
+    algo = make_algo("fedavg", local_steps=2, batch_size=16)
+    topo = TopologyConfig(kind="kout", n_clients=N_CLIENTS, k_out=2)
+    for flat in (True, False):
+        tr = FLTrainer(model.loss, model.init, cdata, algo, topo, seed=0,
+                       participation=0.25, flat=flat)
+        tr.run_round()
+        losses = np.asarray(tr.state.losses)
+        m = max(int(0.25 * N_CLIENTS), 1)
+        assert np.count_nonzero(losses) == m, (flat, losses)
+        assert np.all(losses[losses != 0] > 0)
+
+
 @pytest.mark.parametrize("solver", ["sgd", "proximal"])
 def test_alternative_solvers_train(setting, solver):
     model, cdata = setting
