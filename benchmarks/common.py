@@ -10,7 +10,12 @@ import jax.numpy as jnp
 from repro.core import FLTrainer, TopologyConfig, make_algo
 from repro.data.dirichlet import dirichlet_partition, stack_client_data
 from repro.data.synthetic import make_dataset
+from repro.launch.runtime import enable_compilation_cache
 from repro.models.small import get_model
+
+# Every bench entrypoint imports this module; cache executables across
+# invocations so repeated CI runs stop paying the XLA recompile tax.
+enable_compilation_cache()
 
 
 def build_setting(

@@ -13,14 +13,40 @@ bank <-> pytree boundary.  The scanned comparison times
 against the same number of per-round jit dispatches.  The ``--n-clients``
 sweep scales the round from 16 to hundreds of clients at fixed ``k_out``
 and times the O(n * k_max * D) neighbor-gather gossip against the
-O(n^2 * D) dense matmul (gossip-dominated SGP config, K=1).  All timings
-are median-of-k after explicit warmup (robust to container scheduling
-noise) via ``common.emit``.
+O(n^2 * D) dense matmul (gossip-dominated SGP config, K=1).  ``--shard``
+row-shards the whole round over a forced 8-device ``clients`` mesh
+(GSPMD) and pins sharded-vs-single-device equivalence + the push-sum mass
+invariant while recording both round times (``bench-shard.json``).  All
+timings are median-of-k after explicit warmup (robust to container
+scheduling noise) via ``common.emit``.
+
+Tuned-launcher environment for quiet, repeatable CPU numbers (mirrors the
+production run.sh recipe):
+
+    # thread-caching malloc: first-touch page faults dominate the big-bank
+    # paths without it
+    export LD_PRELOAD=/usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4
+    # pin XLA's host thread pool to the physical cores (oversubscription
+    # adds multi-ms jitter per dispatch)
+    export XLA_FLAGS="--xla_cpu_multi_thread_eigen=true \
+        --xla_force_host_platform_device_count=8"   # --shard runs only
+    # persistent compilation cache (benchmarks.common enables it; point it
+    # at a kept path to reuse executables across CI runs)
+    export JAX_COMPILATION_CACHE_DIR=~/.cache/jax
 """
 from __future__ import annotations
 
-import json
 import os
+import sys
+
+if "--shard" in sys.argv and "xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    # Must happen before jax initializes its platform (any jax import
+    # below): the sharded bench simulates an 8-device CPU mesh.
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8")
+
+import json
 import statistics
 import time
 
@@ -272,6 +298,99 @@ def scaling(ns: list[int], k_out: int = 10, rounds: int = 5,
     return results
 
 
+# ---------------------------------------------------------------------------
+# GSPMD row-sharded round (--shard): 8 simulated devices, clients mesh.
+# ---------------------------------------------------------------------------
+
+def shard_bench(n: int = 512, k_out: int = 10, n_pods: int = 8,
+                rounds: int = 3, json_out: str | None = None) -> dict:
+    """Run the n-client round single-device and GSPMD row-sharded over the
+    forced 8-device ``clients`` mesh, for the flat k_out family and the
+    hierarchical two-tier family (dense intra-pod gossip + ``k_out``
+    cross-pod edges, pods aligned with shards).
+
+    Pins the tentpole invariants: the sharded superstep matches the
+    single-device program to float tolerance, bank rows live on the
+    ``clients`` axis end to end, and push-sum mass stays n.  Records both
+    round times; on CI's single physical core the 8 simulated devices
+    timeshare, so ``ratio`` is collective-overhead-only — a *lower bound*
+    on real multi-device scaling (rows_per_device is the quantity that
+    drops 8x).  Uses the gossip-dominated SGP config (K=1, batch 1),
+    same as the scaling sweep.
+    """
+    from repro.core import make_program
+    from repro.launch.mesh import make_clients_mesh
+
+    n_dev = jax.device_count()
+    assert n_dev >= 2, (
+        f"--shard needs forced host devices (got {n_dev}); the module-top "
+        "XLA_FLAGS hook only works when --shard is on the command line")
+    mesh = make_clients_mesh()
+    net, cdata, _ = build_setting(
+        dataset="mnist", n_clients=n, samples_per_client=16)
+    algo = make_algo("sgp", batch_size=1)  # K=1: gossip-dominated
+
+    results = {"n_clients": n, "n_devices": n_dev,
+               "rows_per_device": n // n_dev}
+    ok = True
+    for fam in ("kout", "two_tier"):
+        kw = {"n_pods": n_pods} if fam == "two_tier" else {}
+        topo = TopologyConfig(kind=fam, n_clients=n, k_out=k_out,
+                              time_varying=False, **kw)
+        progs = {
+            "single": make_program(net.loss, net.init, cdata, algo, topo),
+            "sharded": make_program(net.loss, net.init, cdata, algo, topo,
+                                    mesh=mesh),
+        }
+        t, states = {}, {}
+        for mode, prog in progs.items():
+            state = prog.init(jax.random.PRNGKey(0))
+            state, _ = prog.run_superstep(state, rounds)  # compile + warm
+            jax.block_until_ready(state.params)
+            times = []
+            for _ in range(3):
+                t0 = time.perf_counter()
+                state, _ = prog.run_superstep(state, rounds)
+                jax.block_until_ready(state.params)
+                times.append(1e6 * (time.perf_counter() - t0) / rounds)
+            t[mode] = statistics.median(times)
+            states[mode] = state
+            emit(f"round/shard/{fam}/{mode}", t[mode],
+                 f"n={n},k_out={k_out},rounds={rounds},median")
+        sh = states["sharded"]
+        # Rows must still live on the clients axis after the superstep.
+        axis_spec = getattr(sh.params.sharding, "spec", None)
+        on_axis = axis_spec is not None and "clients" in tuple(axis_spec)
+        equiv_err = float(jax.numpy.max(jax.numpy.abs(
+            states["single"].params - jax.device_get(sh.params))))
+        mass_err = abs(float(jax.numpy.sum(sh.w)) - n)
+        ratio = t["single"] / t["sharded"]
+        emit(f"round/shard/{fam}/ratio", ratio,
+             "single_us/sharded_us (1-core CI: collective overhead only)")
+        emit(f"round/shard/{fam}/equiv_err", equiv_err,
+             "max |sharded - single| over the final bank")
+        emit(f"round/shard/{fam}/mass_err", mass_err, "|sum w - n|")
+        fam_ok = (on_axis and equiv_err < 5e-4 * rounds
+                  and mass_err < 1e-3 * n / 64)
+        ok = ok and fam_ok
+        results[fam] = {
+            "single_us": round(t["single"], 1),
+            "sharded_us": round(t["sharded"], 1),
+            "ratio": round(ratio, 3),
+            "equiv_err": equiv_err,
+            "mass_err": mass_err,
+            "rows_on_clients_axis": bool(on_axis),
+            "ok": bool(fam_ok),
+        }
+        del progs, states, sh
+    if json_out:
+        with open(json_out, "w") as f:
+            json.dump({"shard": results}, f, indent=1)
+        print(f"# wrote sharded-round results -> {json_out}")
+    assert ok, f"sharded round violated an invariant: {results}"
+    return results
+
+
 def _smoke_speedups() -> dict:
     """Both gate ratios for the flagship algorithm at the recorded sizes:
     ``speedup`` = pytree_us/flat_us (the flat bank must not regress) and
@@ -391,9 +510,17 @@ if __name__ == "__main__":
     ap.add_argument("--event-threshold", type=float, default=0.0,
                     help="event-trigger threshold for the --link-drop "
                          "scenario (0 = always transmit)")
+    ap.add_argument("--shard", action="store_true",
+                    help="GSPMD row-sharded round over 8 forced host "
+                         "devices: equivalence + mass invariants and "
+                         "single-vs-sharded round times at --n-clients "
+                         "(default 512); writes --json as bench-shard.json")
+    ap.add_argument("--n-pods", type=int, default=8,
+                    help="pod count for the two-tier family in --shard")
     ap.add_argument("--n-clients", default=None, metavar="N[,N...]",
                     help="sparse-vs-dense gossip scaling sweep over these "
-                         "client counts (e.g. 16,64,256) at fixed --k-out")
+                         "client counts (e.g. 16,64,256) at fixed --k-out; "
+                         "with --shard, the single sharded client count")
     ap.add_argument("--k-out", type=int, default=10,
                     help="out-degree for the --n-clients sweep (paper "
                          "setting: 10); clipped to n-1 per point")
@@ -406,6 +533,11 @@ if __name__ == "__main__":
     ap.add_argument("--fast", action="store_true",
                     help="fewer timing rounds for the full benchmark")
     args = ap.parse_args()
+    if args.shard:
+        n = int(args.n_clients.split(",")[0]) if args.n_clients else 512
+        shard_bench(n, k_out=args.k_out, n_pods=args.n_pods,
+                    rounds=args.rounds, json_out=args.json)
+        sys.exit(0)
     if args.link_drop is not None:
         degraded(args.link_drop, delay=args.link_delay,
                  event_threshold=args.event_threshold,

@@ -28,11 +28,21 @@ __all__ = [
 _STEP_RE = re.compile(r"ckpt_(\d+)\.npz$")
 
 
+def _to_host(v):
+    """Gather a (possibly GSPMD row-sharded) device array to one host
+    ndarray.  ``device_get`` assembles the shards before ``asarray``
+    copies, so a mesh-sharded bank checkpoints as the same single array a
+    single-device run writes."""
+    if isinstance(v, jax.Array):
+        v = jax.device_get(v)
+    return np.asarray(v)
+
+
 def _flatten_with_paths(tree):
     # jax.tree.flatten_with_path only exists in newer jax; use tree_util.
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     paths = ["/".join(str(k) for k in path) for path, _ in flat]
-    leaves = [np.asarray(v) for _, v in flat]
+    leaves = [_to_host(v) for _, v in flat]
     return paths, leaves, treedef
 
 
@@ -96,10 +106,10 @@ def save_bank(directory: str, step: int, bank, spec, extra=None,
     bank, round counter) saved alongside under their own keys.
     """
     os.makedirs(directory, exist_ok=True)
-    payload = {"__bank__": np.asarray(bank)}
+    payload = {"__bank__": _to_host(bank)}
     payload["__bank_meta__"] = np.array(json.dumps(_spec_meta(spec)))
     for k, v in (extra or {}).items():
-        payload[f"extra_{k}"] = np.asarray(v)
+        payload[f"extra_{k}"] = _to_host(v)
     final = os.path.join(directory, f"ckpt_{step}.npz")
     fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
     with os.fdopen(fd, "wb") as f:

@@ -142,7 +142,10 @@ class FLTrainer:
         flat: bool = True,
         gossip: str = "auto",
         link: topology.LinkModel | None = None,
+        mesh=None,
     ):
+        if not flat and mesh is not None:
+            raise ValueError("the flat=False oracle path is single-device")
         if not flat and link is not None and link.active:
             # The oracle predates the link subsystem; silently ignoring the
             # scenario would invalidate it as an equivalence baseline.
@@ -171,7 +174,7 @@ class FLTrainer:
         self.n = topo.n_clients
         self.program = make_program(
             loss_fn, init_fn, client_data, algo, topo, participation,
-            gossip=gossip, link=link,
+            gossip=gossip, link=link, mesh=mesh,
         )
         self.spec = self.program.spec
         self._exp_cycle = self.program.exp_cycle
@@ -510,5 +513,7 @@ class FLTrainer:
                         f"{tuple(exp.shape) if exp is not None else 'none'}"
                         " — restore with the composition that saved it"
                     )
-        self.state = state
+        # Re-place host-loaded leaves on the program mesh (identity when
+        # unsharded) so a resumed run is row-sharded from its first round.
+        self.state = self.program.shard_state(state)
         return self.state

@@ -36,6 +36,7 @@ from repro.core.stages import (
     EventTriggeredMixer,
     IdentityCompressor,
     LinkState,
+    comm_phase,
     make_stages,
 )
 
@@ -100,12 +101,24 @@ class RoundProgram:
     # threads ``state.link`` and samples drops/delays from its key.
     link: Any = None
     linked: bool = False
+    # GSPMD row-sharded bank: a 1-D device mesh whose ``shard_axis`` names
+    # the axis bank rows (params, momentum, EF residual, push-sum weights,
+    # link carry) are partitioned along.  None keeps the single-device
+    # program bitwise unchanged (all sharding constraints degrade to
+    # identity).
+    mesh: Any = None
+    shard_axis: str = "clients"
 
     def __post_init__(self):
         # Per-program memo of compiled superstep drivers, keyed on the
         # (rounds, eval cadence, test-data identity) signature — repeated
         # supersteps of the same shape must hit the jit cache, not retrace.
         object.__setattr__(self, "_superstep_cache", {})
+        from repro.launch.sharding import bank_row_pins
+
+        pin, pin_link = bank_row_pins(self.mesh, self.shard_axis)
+        object.__setattr__(self, "_pin", pin)
+        object.__setattr__(self, "_pin_link", pin_link)
 
     # -- pure state constructor ---------------------------------------------
 
@@ -129,8 +142,57 @@ class RoundProgram:
                 key=jax.random.fold_in(key, 0x11AB),
                 **self.mixer.link_buffers(bank),
             )
-        return FLState(bank, mom, w0, skey, jnp.int32(0), losses0, comp,
-                       link)
+        return self.shard_state(
+            FLState(bank, mom, w0, skey, jnp.int32(0), losses0, comp, link)
+        )
+
+    # -- GSPMD placement -----------------------------------------------------
+
+    def shard_state(self, state: FLState) -> FLState:
+        """Place every bank-row leaf of ``state`` on the ``shard_axis`` of
+        the program mesh (scalars/keys replicated).  Identity without a
+        mesh, so single-device callers — and ``init`` itself — compose
+        through unconditionally.  ``engine.FLTrainer.restore`` routes
+        host-loaded checkpoints through here so a resumed run is sharded
+        from its first round."""
+        if self.mesh is None or self.mixer.kind == "central":
+            return state
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        def _sh(lead, ndim):
+            spec = [None] * ndim
+            spec[lead] = self.shard_axis
+            return NamedSharding(self.mesh, PartitionSpec(*spec))
+
+        def row(x, lead=0):
+            if x is None or isinstance(x, tuple):
+                return x
+            return jax.device_put(x, _sh(lead, x.ndim))
+
+        def rep(x):
+            return jax.device_put(
+                x, NamedSharding(self.mesh, PartitionSpec())
+            )
+
+        link = state.link
+        if link:
+            link = link._replace(
+                key=rep(link.key),
+                bufx=row(link.bufx, 1),
+                bufw=rep(link.bufw) if not isinstance(
+                    link.bufw, tuple) else (),
+                last=row(link.last),
+            )
+        return state._replace(
+            params=row(state.params),
+            mom=row(state.mom),
+            w=row(state.w),
+            key=rep(state.key),
+            round=rep(state.round),
+            losses=row(state.losses),
+            comp=row(state.comp),
+            link=link,
+        )
 
     # -- mixing-matrix selection --------------------------------------------
 
@@ -179,28 +241,27 @@ class RoundProgram:
         if self.mixer.kind == "central":
             return self._central_step(state, lr, key, tkey, ckeys)
 
+        # Per-client PRNG rows and the solver outputs are pinned to the
+        # bank's row sharding so the vmapped local phase stays shard-local.
+        ckeys = self._pin(ckeys)
         X, V, losses, accs = self.solver.update(
             self.loss_fn, self.spec, state.params, state.w, ckeys,
             self.data, lr
         )
-        # The compressor shapes what leaves each client over the network;
-        # the self-loop contribution P[ii]·X[i] is local memory and stays
-        # full precision — mix_round mixes
-        # X'[i] = P[ii]·X[i] + sum_{j != i} P[ij]·C(X)[j]
-        # (with identity compression Xc is X and nothing changes bitwise).
-        comp, Xc = self.compressor.apply(state.comp, X)
+        V = self._pin(V) if V is not None else V
+        # The communication phase — compress, link drops/delays, mix — is
+        # the shared ``stages.comm_phase`` (also driving the pod
+        # ``round_step``): the compressor shapes what leaves each client
+        # over the network while the self-loop contribution P[ii]·X[i]
+        # stays full precision; with identity compression and no mesh the
+        # phase is bitwise the pre-extraction inline sequence.
         P = self.mixing_matrix(tkey, state)
-        link, lkey = state.link, None
-        if self.linked:
-            lkey, nkey = jax.random.split(link.key)
-            link = link._replace(key=nkey)
-            if self.link is not None and self.link.drop > 0:
-                dkey, lkey = jax.random.split(lkey)
-                P = self.link.drop_links(
-                    dkey, P, symmetric=self.mixer.kind == "symmetric"
-                )
-        X, w_new, link, extras = self.mixer.mix_round(
-            P, Xc, state.w, link, lkey, X
+        X, w_new, comp, link, extras = comm_phase(
+            self.compressor, self.mixer, P, X, state.w, state.comp,
+            state.link,
+            linked=self.linked, link_model=self.link,
+            symmetric=self.mixer.kind == "symmetric",
+            pin=self._pin, pin_link=self._pin_link,
         )
         new_state = FLState(
             X, V, w_new, key, state.round + 1, losses, comp, link
@@ -370,6 +431,8 @@ def make_program(
     participation: float = 0.1,
     gossip: str = "auto",
     link: topology.LinkModel | None = None,
+    mesh=None,
+    shard_axis: str = "clients",
 ) -> RoundProgram:
     """Compose an ``AlgoConfig`` into a :class:`RoundProgram`.
 
@@ -390,10 +453,28 @@ def make_program(
     state), or event-triggered transmission (``EventTriggeredMixer`` with
     the ``comm_fraction`` metric).  ``None`` — or a model whose fields are
     all zero — builds the exact perfect-link program, bitwise.
+
+    ``mesh`` row-shards the whole round: bank rows (and the client data)
+    are partitioned along ``shard_axis``, the mixers are re-backed onto
+    the plain-XLA gossip executors the GSPMD partitioner can cut, and
+    ``init``/``step``/``run_superstep`` then run sharded under one jit —
+    intra-shard edges stay local, cross-shard edges become one row
+    collective.  ``None`` is the exact single-device program.
     """
     from repro.kernels import ops as kops
 
     solver, compressor, mixer = make_stages(algo)
+    if topo.kind == "two_tier":
+        if mixer.kind != "directed":
+            raise ValueError(
+                "the two-tier family is directed push-sum gossip only; "
+                f"comm={algo.comm!r} has no two-tier form"
+            )
+        if algo.selection:
+            raise ValueError(
+                "loss-selective neighbor sampling has no two-tier form; "
+                "disable selection for kind='two_tier'"
+            )
     link = link if link is not None and link.active else None
     if link is not None:
         if mixer.kind == "central":
@@ -442,6 +523,43 @@ def make_program(
             "link drops on the symmetric neighbor-list form are "
             "unsupported; pass gossip='dense' for symmetric + drops"
         )
+    if (link is not None and link.drop > 0 and sparse_mix
+            and topo.kind == "two_tier"):
+        raise ValueError(
+            "link drops on the two-tier operator form are unsupported; "
+            "pass gossip='dense' for two_tier + drops"
+        )
+    if mesh is not None:
+        if shard_axis not in mesh.axis_names:
+            raise ValueError(
+                f"mesh has no {shard_axis!r} axis (axes: {mesh.axis_names})"
+            )
+        n_dev = mesh.shape[shard_axis]
+        if topo.n_clients % n_dev:
+            raise ValueError(
+                f"n_clients={topo.n_clients} must be divisible by the "
+                f"{shard_axis!r} axis size {n_dev} to row-shard the bank"
+            )
+        if mixer.kind == "central":
+            raise ValueError(
+                "the central (server) round keeps one global row — there "
+                "is no client bank to shard; drop the mesh"
+            )
+        # The interpret-mode kernel executors (pallas grids, fori_loop
+        # panel slicing) defeat the GSPMD partitioner; re-back the mixer
+        # onto the plain-XLA twins (same accumulation order, bitwise).
+        mixer = dataclasses.replace(mixer, backend="xla")
+        # Client-stacked data rows live with their bank rows, so the
+        # vmapped local phase never moves examples across shards.
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        def _row_put(x):
+            spec = [shard_axis] + [None] * (x.ndim - 1)
+            return jax.device_put(
+                x, NamedSharding(mesh, PartitionSpec(*spec))
+            )
+
+        client_data = jax.tree.map(_row_put, client_data)
     spec = make_spec(jax.eval_shape(init_fn, jax.random.PRNGKey(0)))
     # Exponential graphs cycle through log2(n) hop matrices; precompute
     # the stack once so the (traced) round index can select the graph.
@@ -471,4 +589,6 @@ def make_program(
         sparse_mix=sparse_mix,
         link=link,
         linked=link is not None or mixer.link_stateful,
+        mesh=mesh,
+        shard_axis=shard_axis,
     )

@@ -52,10 +52,24 @@ def gossip_bank(P, X: jnp.ndarray,
     :class:`~repro.core.topology.NeighborList`.  Backend selection is
     shared with the pytree path via :func:`repro.kernels.ops.gossip_mix` /
     ``gossip_mix_sparse`` (the Pallas kernel whenever the bank is big
-    enough to amortize it)."""
-    from repro.core.topology import NeighborList
+    enough to amortize it).  A :class:`~repro.core.topology.TwoTierOp`
+    splits into a shard-local batched intra-pod matmul plus one sparse
+    cross-pod gather — under a row-sharded bank the intra term never
+    leaves its device and the gather is the round's only collective."""
+    from repro.core.topology import NeighborList, TwoTierOp
     from repro.kernels import ops as kops
 
+    if isinstance(P, TwoTierOp):
+        n, D = X.shape
+        n_pods, ps, _ = P.intra.shape
+        intra = jnp.einsum(
+            "pij,pjd->pid", P.intra, X.reshape(n_pods, ps, D).astype(
+                jnp.float32),
+            precision=jax.lax.Precision.HIGHEST,
+        ).reshape(n, D).astype(X.dtype)
+        inter = kops.gossip_mix_sparse(
+            P.inter.idx, P.inter.wgt, X, use_kernel)
+        return intra + inter
     if isinstance(P, NeighborList):
         return kops.gossip_mix_sparse(P.idx, P.wgt, X, use_kernel)
     return kops.gossip_mix(P, X, use_kernel)
@@ -69,8 +83,17 @@ def gossip_weights(P, w: jnp.ndarray) -> jnp.ndarray:
     ``repro.kernels.ops.gossip_mix``: on TPU a default-precision ``P @ w``
     would run the weight mixing in bf16 while the bank mixes in f32,
     drifting the de-bias ratio z = x / w between the two."""
-    from repro.core.topology import NeighborList
+    from repro.core.topology import NeighborList, TwoTierOp
 
+    if isinstance(P, TwoTierOp):
+        n_pods, ps, _ = P.intra.shape
+        wf = w.astype(jnp.float32)
+        intra = jnp.einsum(
+            "pij,pj->pi", P.intra, wf.reshape(n_pods, ps),
+            precision=jax.lax.Precision.HIGHEST,
+        ).reshape(-1)
+        inter = jnp.sum(P.inter.wgt * wf[P.inter.idx], axis=1)
+        return (intra + inter).astype(w.dtype)
     if isinstance(P, NeighborList):
         wf = w.astype(jnp.float32)
         return jnp.sum(P.wgt * wf[P.idx], axis=1).astype(w.dtype)

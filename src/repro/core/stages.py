@@ -49,6 +49,7 @@ __all__ = [
     "COMPRESSORS",
     "MIXERS",
     "make_stages",
+    "comm_phase",
 ]
 
 
@@ -282,9 +283,13 @@ class LinkState(NamedTuple):
 def _self_weights(P):
     """The self-loop weight per receiver: ``diag(P)`` for a dense matrix,
     slot 0 for a NeighborList (the self-loop by convention; pads and
-    permutation self-hits carry weight 0 elsewhere)."""
-    from repro.core.topology import NeighborList
+    permutation self-hits carry weight 0 elsewhere).  For a TwoTierOp the
+    self-loop lives on the intra-pod block diagonals — its inter list's
+    slot 0 is a zero-weight pad."""
+    from repro.core.topology import NeighborList, TwoTierOp
 
+    if isinstance(P, TwoTierOp):
+        return jnp.diagonal(P.intra, axis1=1, axis2=2).reshape(-1)
     if isinstance(P, NeighborList):
         return P.wgt[:, 0]
     return jnp.diagonal(P)
@@ -305,8 +310,13 @@ def _selfloop_correction(P, X, X_full, mixed):
 @dataclasses.dataclass(frozen=True)
 class PushSumMixer:
     """Directed column-stochastic gossip + push-sum weight mixing
-    (Algorithm 1 lines 12-14): X' = P X, w' = P w."""
+    (Algorithm 1 lines 12-14): X' = P X, w' = P w.
 
+    ``backend`` is forwarded as ``use_kernel`` into the bank gossip —
+    ``None`` keeps the size-based kernel auto-selection; sharded programs
+    set ``"xla"`` so the GSPMD partitioner sees plain HLO."""
+
+    backend: Any = None
     kind = "directed"
     link_stateful = False
 
@@ -320,7 +330,7 @@ class PushSumMixer:
         return pushsum.gossip_weights(P, w)
 
     def mix(self, P, X, w):
-        return pushsum.gossip_bank(P, X), self.mix_weights(P, w)
+        return pushsum.gossip_bank(P, X, self.backend), self.mix_weights(P, w)
 
     def mix_round(self, P, X, w, link, key, X_full):
         Xm, wm = self.mix(P, X, w)
@@ -332,6 +342,7 @@ class SymmetricMixer:
     """Doubly-stochastic gossip over an undirected graph (DFedAvg /
     DFedSAM family): X' = W X, push-sum weights stay all-ones."""
 
+    backend: Any = None
     kind = "symmetric"
     link_stateful = False
 
@@ -345,7 +356,7 @@ class SymmetricMixer:
         return w
 
     def mix(self, P, X, w):
-        return pushsum.gossip_bank(P, X), self.mix_weights(P, w)
+        return pushsum.gossip_bank(P, X, self.backend), self.mix_weights(P, w)
 
     def mix_round(self, P, X, w, link, key, X_full):
         Xm, wm = self.mix(P, X, w)
@@ -390,6 +401,7 @@ class DelayedPushSumMixer:
     """
 
     delay: int = 1
+    backend: Any = None
     kind = "directed"
     link_stateful = True
 
@@ -413,7 +425,7 @@ class DelayedPushSumMixer:
 
     def mix_round(self, P, X, w, link: LinkState, key, X_full):
         slices = _delay_slices(key, P, self.delay)
-        sent_x = [pushsum.gossip_bank(Ps, X) for Ps in slices]
+        sent_x = [pushsum.gossip_bank(Ps, X, self.backend) for Ps in slices]
         sent_w = [pushsum.gossip_weights(Ps, w) for Ps in slices]
         # Slice 0 holds the self-loop: keep it full precision.
         sent_x[0] = _selfloop_correction(P, X, X_full, sent_x[0])
@@ -446,6 +458,7 @@ class EventTriggeredMixer:
     """
 
     threshold: float = 0.01
+    backend: Any = None
     kind = "directed"
     link_stateful = True
 
@@ -466,7 +479,7 @@ class EventTriggeredMixer:
         drift = X.astype(jnp.float32) - link.last.astype(jnp.float32)
         send = jnp.sqrt(jnp.sum(drift * drift, axis=1)) > self.threshold
         B = jnp.where(send[:, None], X, link.last.astype(X.dtype))
-        Xm = pushsum.gossip_bank(P, B)
+        Xm = pushsum.gossip_bank(P, B, self.backend)
         # The self-loop never reads the cache: always the live full bank
         # (B is a fresh array, so the helper's is-X short-circuit never
         # swallows the correction).
@@ -494,6 +507,54 @@ class CentralMixer:
 
     def reduce(self, X):
         return X.mean(axis=0)
+
+
+# ---------------------------------------------------------------------------
+# The shared communication phase (compress -> link -> mix) — one definition
+# driving both the flat-bank round program and the pod round_step.
+# ---------------------------------------------------------------------------
+
+
+def _identity(x):
+    return x
+
+
+def comm_phase(compressor, mixer, P, X, w, comp, link, *,
+               linked=False, link_model=None, symmetric=False,
+               pin=_identity, pin_link=_identity):
+    """One communication phase on a flat ``(n, D)`` bank:
+
+      compress -> split the link PRNG stream -> apply link drops ->
+      ``mixer.mix_round`` -> re-pin the sharded outputs.
+
+    ``pin``/``pin_link`` are GSPMD row-sharding constraints (identity when
+    unsharded — every op then reduces to exactly the sequence the program
+    and the pod ``round_step`` used to inline, bitwise).  Under a mesh they
+    re-assert the bank's ``clients``-axis layout at the phase boundaries so
+    the partitioner cannot rematerialize the bank replicated around the
+    compressor/mixer reshapes.
+
+    Returns ``(X_mixed, w_new, comp, link, extras)``.
+    """
+    X = pin(X)
+    if compressor.stateful:
+        comp = pin(comp)
+    comp, Xc = compressor.apply(comp, X)
+    lkey = None
+    if linked:
+        lkey, nkey = jax.random.split(link.key)
+        link = link._replace(key=nkey)
+        if link_model is not None and link_model.drop > 0:
+            dkey, lkey = jax.random.split(lkey)
+            P = link_model.drop_links(dkey, P, symmetric=symmetric)
+        link = pin_link(link)
+    Xm, w_new, link, extras = mixer.mix_round(P, Xc, w, link, lkey, X)
+    Xm = pin(Xm)
+    if compressor.stateful:
+        comp = pin(comp)
+    if linked:
+        link = pin_link(link)
+    return Xm, w_new, comp, link, extras
 
 
 # ---------------------------------------------------------------------------

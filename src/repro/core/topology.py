@@ -31,6 +31,9 @@ __all__ = [
     "TopologyConfig",
     "LinkModel",
     "NeighborList",
+    "TwoTierOp",
+    "sample_two_tier",
+    "dense_from_two_tier",
     "drop_links_dense",
     "drop_links_neighbors",
     "column_stochastic_from_adjacency",
@@ -60,15 +63,38 @@ __all__ = [
 class TopologyConfig:
     """Static description of the communication graph family."""
 
-    kind: str = "kout"  # kout | ring | exponential | symmetric | full
+    kind: str = "kout"  # kout | ring | exponential | symmetric | full | two_tier
     n_clients: int = 100
     # Number of out-neighbors each client picks (excluding the self-loop).
+    # For the two-tier family this is the number of *cross-pod* in-edges
+    # each client draws; intra-pod gossip is dense by construction.
     k_out: int = 10
     time_varying: bool = True
+    # Hierarchical two-tier family only: the clients are n_pods equal pods
+    # with dense push-sum gossip inside each pod and sparse directed k_out
+    # edges between pods — the natural fit for a bank whose rows are
+    # sharded over a mesh "clients" axis (intra-pod mixing stays
+    # shard-local; only the k_out inter-pod edges cross shards).
+    n_pods: int = 0
 
     def __post_init__(self):
         if self.k_out >= self.n_clients:
             raise ValueError("k_out must be < n_clients")
+        if self.kind == "two_tier":
+            if self.n_pods < 2:
+                raise ValueError("two_tier topology needs n_pods >= 2")
+            if self.n_clients % self.n_pods:
+                raise ValueError(
+                    "two_tier topology needs n_clients divisible by n_pods"
+                )
+            ps = self.n_clients // self.n_pods
+            if not 1 <= self.k_out <= self.n_clients - ps:
+                raise ValueError(
+                    "two_tier k_out must be in [1, n_clients - pod_size] "
+                    "(every cross-pod edge leaves the receiver's own pod)"
+                )
+        elif self.n_pods:
+            raise ValueError("n_pods is a two_tier-only field")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -134,6 +160,13 @@ class LinkModel:
         """Sample this round's link failures into the mixing operator
         (dense matrix or :class:`NeighborList`), preserving exact
         column-stochasticity (or double stochasticity when ``symmetric``)."""
+        if isinstance(P, TwoTierOp):
+            raise ValueError(
+                "link drops on the two-tier operator form are unsupported "
+                "(a dropped cross-pod edge changes every intra-pod weight "
+                "of its sender's pod); force gossip='dense' for two_tier + "
+                "link scenarios"
+            )
         if isinstance(P, NeighborList):
             if symmetric:
                 raise ValueError(
@@ -324,6 +357,8 @@ def sample_mixing(
         return jnp.full((n, n), 1.0 / n, jnp.float32)
     if cfg.kind == "symmetric":
         return sample_symmetric_k_regular(key, n, k)
+    if cfg.kind == "two_tier":
+        return dense_from_two_tier(sample_two_tier(key, n, cfg.n_pods, k))
     if cfg.kind == "kout":
         if losses is not None:
             return sample_kout_selective(key, losses, n, k)
@@ -466,7 +501,11 @@ def sample_symmetric_neighbors(key: jax.Array, n: int, k: int) -> NeighborList:
 def neighbor_k_max(cfg: TopologyConfig, mixer_kind: str = "directed") -> int:
     """Static ``k_max`` of the neighbor-list form for a topology family —
     the number the density dispatch rule reasons about.  ``full`` has no
-    sparse form (k_max = n)."""
+    sparse form (k_max = n).  For ``two_tier`` it is the effective
+    in-degree pod_size + k_out (the dense intra block plus the cross-pod
+    gather slots)."""
+    if cfg.kind == "two_tier":
+        return cfg.n_clients // cfg.n_pods + cfg.k_out
     if mixer_kind == "symmetric" or cfg.kind == "symmetric":
         return 2 * cfg.k_out + 1
     if cfg.kind in ("ring", "exponential"):
@@ -485,7 +524,8 @@ def sample_neighbors(
     losses: jnp.ndarray | None = None,
 ) -> NeighborList:
     """Sample the round-t mixing operator in neighbor-list form — the
-    sparse twin of :func:`sample_mixing`."""
+    sparse twin of :func:`sample_mixing` (a :class:`TwoTierOp` for the
+    hierarchical family)."""
     n, k = cfg.n_clients, cfg.k_out
     if cfg.kind == "ring":
         return neighbors_ring(n)
@@ -495,11 +535,76 @@ def sample_neighbors(
         raise ValueError("the full graph has no sparse neighbor-list form")
     if cfg.kind == "symmetric":
         return sample_symmetric_neighbors(key, n, k)
+    if cfg.kind == "two_tier":
+        return sample_two_tier(key, n, cfg.n_pods, k)
     if cfg.kind == "kout":
         if losses is not None:
             return sample_kout_selective_neighbors(key, losses, n, k)
         return sample_kout_neighbors(key, n, k)
     raise ValueError(f"unknown topology kind: {cfg.kind}")
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical two-tier family: dense push-sum gossip inside each pod,
+# sparse directed k_out edges between pods.
+# ---------------------------------------------------------------------------
+
+class TwoTierOp(NamedTuple):
+    """Structured mixing operator of the hierarchical two-tier family.
+
+    ``intra`` holds the ``(n_pods, pod_size, pod_size)`` dense
+    column-stochastic-within-the-full-matrix pod blocks — block p mixes the
+    contiguous row slice ``[p*ps, (p+1)*ps)`` of the bank, so under a
+    row-sharded layout whose shards align with pods the intra mixing is a
+    purely shard-local batched matmul.  ``inter`` is a
+    :class:`NeighborList` carrying each receiver's ``k_out`` cross-pod
+    in-edges (slot 0 is the conventional self slot at weight 0 — the self
+    contribution lives on the intra diagonal); the inter gather is the
+    only communication that crosses shards.  Columns of the densified sum
+    (:func:`dense_from_two_tier`) each total exactly 1: a sender j with
+    ``c_j`` external receivers has out-degree ``pod_size + c_j`` and every
+    one of its edges carries ``1 / (pod_size + c_j)``.
+    """
+
+    intra: jnp.ndarray  # (n_pods, ps, ps) float32 pod-block weights
+    inter: NeighborList  # (n, k_out + 1) cross-pod edges
+
+
+@partial(jax.jit, static_argnums=(1, 2, 3))
+def sample_two_tier(key: jax.Array, n: int, n_pods: int, k: int) -> TwoTierOp:
+    """Sample the two-tier operator: every client receives from its whole
+    pod (dense intra-pod gossip) plus ``k`` distinct uniformly-chosen
+    senders from *other* pods.  Sender normalization is global — one
+    scatter-count of external picks gives each sender's true out-degree —
+    so the operator is exactly column-stochastic and push-sum mass is
+    conserved across the pod boundary."""
+    ps = n // n_pods
+    i = jnp.arange(n, dtype=jnp.int32)
+    pod = i // ps
+    scores = jax.random.uniform(key, (n, n))
+    # Same-pod senders (self included) never appear among the cross picks.
+    scores = scores - 2.0 * (pod[:, None] == pod[None, :])
+    _, picks = jax.lax.top_k(scores, k)  # (n, k) external senders per receiver
+    # Sender out-degree: its whole pod (self-loop included) + external picks.
+    outdeg = ps + jnp.zeros((n,), jnp.float32).at[picks.reshape(-1)].add(1.0)
+    idx = jnp.concatenate([i[:, None], picks.astype(jnp.int32)], axis=1)
+    wgt = jnp.concatenate(
+        [jnp.zeros((n, 1), jnp.float32), 1.0 / outdeg[picks]], axis=1
+    )
+    intra = jnp.broadcast_to(
+        (1.0 / outdeg).reshape(n_pods, 1, ps), (n_pods, ps, ps)
+    ).astype(jnp.float32)
+    return TwoTierOp(intra, NeighborList(idx, wgt.astype(jnp.float32)))
+
+
+def dense_from_two_tier(op: TwoTierOp) -> jnp.ndarray:
+    """Densify: block-diagonal intra weights + scattered inter edges — the
+    (n, n) matrix the structured operator is exactly equivalent to."""
+    from jax.scipy.linalg import block_diag
+
+    n_pods, ps, _ = op.intra.shape
+    n = n_pods * ps
+    return block_diag(*op.intra) + dense_from_neighbors(op.inter, n)
 
 
 # ---------------------------------------------------------------------------

@@ -24,7 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["gossip_gather_pallas", "gossip_gather_panels"]
+__all__ = ["gossip_gather_pallas", "gossip_gather_panels",
+           "gossip_gather_xla"]
 
 
 def _kernel(idx_ref, wgt_ref, x_ref, o_ref):
@@ -76,6 +77,26 @@ def gossip_gather_pallas(
         interpret=interpret,
     )(idx, wgt, Xp)
     return out if d_pad == D else out[:, :D]
+
+
+def gossip_gather_xla(idx: jax.Array, wgt: jax.Array, X: jax.Array):
+    """GSPMD executor for the same kernel body: the whole-bank single-block
+    form, i.e. plain traced jnp with no loop/slice structure.
+
+    Under a row-sharded bank the partitioner sees ``k_max`` ordinary row
+    gathers and lowers them to one all-gather of ``X`` followed by
+    shard-local takes — the cross-shard edges of the neighbor list become
+    exactly one collective.  The panel executor's ``fori_loop`` +
+    ``dynamic_slice`` structure defeats that analysis (and the interpret
+    pallas_call grid cannot be partitioned at all), so sharded callers
+    route here.  The slot accumulation order is the kernel's own, so
+    results are bitwise identical to the other executors.
+    """
+    from repro.kernels.interpret import run_single_block
+
+    return run_single_block(
+        _kernel, [idx, wgt.astype(jnp.float32), X], [X.dtype]
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("panel",))

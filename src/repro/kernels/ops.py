@@ -43,20 +43,28 @@ _GOSSIP_KERNEL_MIN_ELEMS = 1 << 20
 # matrix AND n is big enough that the O(n^2 * D) matmul is the round's
 # dominant cost.  Below either bound the dense path stays — which pins
 # the recorded golden configs (n <= 16) to the dense samplers bit-for-bit.
+# The n floor is backend-aware: on TPU the Mosaic gather kernel wins from
+# n=32, but on CPU the interpret-mode gather's per-row take overhead beats
+# the heavily vectorized dense einsum until well past that — measured
+# gossip-phase time at k_out=10 was 0.22x dense speed at n=32 and 0.78x
+# at n=64 (round_bench scaling sweep), only crossing 1x around n=128.
 # One rule, one place (the sparse twin of _GOSSIP_KERNEL_MIN_ELEMS).
-_SPARSE_GOSSIP_MIN_CLIENTS = 32
+_SPARSE_GOSSIP_MIN_CLIENTS_TPU = 32
+_SPARSE_GOSSIP_MIN_CLIENTS_CPU = 128
 _SPARSE_GOSSIP_MAX_DENSITY = 0.25
 
 
 def use_sparse_gossip(n: int, k_max: int) -> bool:
-    """THE density rule: neighbor-list gossip iff ``n`` is at least
-    ``_SPARSE_GOSSIP_MIN_CLIENTS`` and ``k_max / n`` is at most
-    ``_SPARSE_GOSSIP_MAX_DENSITY``.  Static shapes in, static bool out —
-    callers decide the representation at trace time."""
-    return (
-        n >= _SPARSE_GOSSIP_MIN_CLIENTS
-        and k_max <= _SPARSE_GOSSIP_MAX_DENSITY * n
+    """THE density rule: neighbor-list gossip iff ``n`` is at least the
+    backend's ``_SPARSE_GOSSIP_MIN_CLIENTS_*`` floor and ``k_max / n`` is
+    at most ``_SPARSE_GOSSIP_MAX_DENSITY``.  Static shapes in, static bool
+    out — callers decide the representation at trace time."""
+    floor = (
+        _SPARSE_GOSSIP_MIN_CLIENTS_TPU
+        if on_tpu()
+        else _SPARSE_GOSSIP_MIN_CLIENTS_CPU
     )
+    return n >= floor and k_max <= _SPARSE_GOSSIP_MAX_DENSITY * n
 
 
 def gossip_mix(P, M, use_kernel: bool | None = None):
@@ -66,12 +74,17 @@ def gossip_mix(P, M, use_kernel: bool | None = None):
     routes through here.  ``use_kernel=None`` (the default everywhere)
     resolves automatically: the Pallas kernel on TPU, and on CPU only when
     ``M`` is large enough to amortize interpret-mode overhead — instead of
-    each call site hard-coding its own boolean.
+    each call site hard-coding its own boolean.  ``use_kernel="xla"``
+    forces the plain-XLA einsum regardless of size: under GSPMD the
+    partitioner must see ordinary HLO (no interpret-mode loop/slice
+    structure) to shard the mixing correctly.
     """
     import jax.numpy as jnp
 
     if use_kernel is None:
         use_kernel = on_tpu() or M.size >= _GOSSIP_KERNEL_MIN_ELEMS
+    elif use_kernel == "xla":
+        use_kernel = False
     if use_kernel:
         return gossip_matmul(P.astype(jnp.float32), M)
     out = jnp.einsum(
@@ -87,11 +100,19 @@ def gossip_mix_sparse(idx, wgt, M, use_kernel: bool | None = None):
     rule: the Pallas gather kernel on TPU, on CPU only when ``M`` is big
     enough to amortize it (the kernel's slot-loop also avoids the
     reference path's ``(n, k_max, D)`` gather temporary, exactly when that
-    temporary would hurt)."""
+    temporary would hurt).  ``use_kernel="xla"`` forces
+    :func:`~repro.kernels.gossip_gather.gossip_gather_xla` — the kernel
+    body as plain traced jnp, same accumulation order, no loop/slice
+    structure — so the GSPMD partitioner can turn the row gather into one
+    cross-shard collective."""
     import jax.numpy as jnp
 
     if use_kernel is None:
         use_kernel = on_tpu() or M.size >= _GOSSIP_KERNEL_MIN_ELEMS
+    elif use_kernel == "xla":
+        from repro.kernels.gossip_gather import gossip_gather_xla
+
+        return gossip_gather_xla(idx, wgt, M)
     if use_kernel:
         return gossip_gather(idx, wgt.astype(jnp.float32), M)
     from repro.kernels.ref import gossip_gather_ref

@@ -16,7 +16,8 @@ try:  # AxisType only exists in newer jax; older versions imply Auto.
 except ImportError:  # pragma: no cover - depends on installed jax
     AxisType = None
 
-__all__ = ["make_production_mesh", "make_host_mesh", "HARDWARE"]
+__all__ = ["make_production_mesh", "make_host_mesh", "make_clients_mesh",
+           "HARDWARE"]
 
 
 def _make_mesh(shape, axes):
@@ -43,3 +44,16 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh over however many host devices exist (tests/examples)."""
     return _make_mesh(shape, axes)
+
+
+def make_clients_mesh(n_devices: int | None = None):
+    """1-D mesh whose single ``clients`` axis row-shards the flat bank.
+
+    ``n_devices`` defaults to every visible device (on CPU CI that is
+    whatever ``--xla_force_host_platform_device_count`` forced).  The bank
+    row count must be divisible by the axis size — ``make_program``
+    validates that when handed this mesh.
+    """
+    if n_devices is None:
+        n_devices = jax.device_count()
+    return _make_mesh((n_devices,), ("clients",))

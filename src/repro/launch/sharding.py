@@ -23,6 +23,7 @@ __all__ = [
     "constrain",
     "spec_for",
     "sharding_for",
+    "bank_row_pins",
 ]
 
 # Logical axes eligible for tensor/expert parallelism, in priority order —
@@ -106,6 +107,44 @@ def sharding_for(pdef: PDef, mesh: Mesh = None, fsdp: bool = None):
         mesh, fsdp_active = _STATE[-1]
         fsdp = fsdp_active if fsdp is None else fsdp
     return NamedSharding(mesh, spec_for(pdef, mesh, True if fsdp is None else fsdp))
+
+
+def bank_row_pins(mesh: Optional[Mesh], axis: str):
+    """Row-sharding constraints for a flat client bank: ``(pin, pin_link)``.
+
+    ``pin(x, lead=0)`` asserts that dim ``lead`` of ``x`` (the client-row
+    dim) lives on mesh axis ``axis``, all other dims replicated — the
+    GSPMD partitioner will otherwise happily rematerialize the bank
+    replicated around ``ravel`` reshapes and concats, silently turning the
+    sharded round into n copies of the single-device one.  ``pin_link``
+    pins a LinkState carry: the ``(B, n, D)`` in-flight payload buffer and
+    the ``(n, D)`` last-broadcast cache on their client dims; the small
+    ``(B, n)`` mass buffer and the PRNG key are left to the partitioner.
+
+    With ``mesh`` ``None`` (or the axis absent) both functions are
+    identity, so unsharded callers compose through them bitwise unchanged.
+    """
+    if mesh is None or axis not in mesh.axis_names:
+        return (lambda x, lead=0: x), (lambda link: link)
+
+    def pin(x, lead: int = 0):
+        spec = [None] * x.ndim
+        spec[lead] = axis
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*spec))
+        )
+
+    def pin_link(link):
+        if not link:  # the empty-carry () sentinel passes through
+            return link
+        upd = {}
+        if not isinstance(link.bufx, tuple):
+            upd["bufx"] = pin(link.bufx, lead=1)
+        if not isinstance(link.last, tuple):
+            upd["last"] = pin(link.last)
+        return link._replace(**upd) if upd else link
+
+    return pin, pin_link
 
 
 def constrain(x, logical: tuple):

@@ -265,8 +265,8 @@ def make_round_step(
         return params, v, losses.mean(), accs.mean()
 
     def mix_flat(params, w, comp, link, P_pod):
-        from jax.sharding import NamedSharding, PartitionSpec
         from repro.core.flat import make_spec
+        from repro.core.stages import comm_phase
         from repro.launch import sharding as shlib
 
         # Spec from the per-pod row view; only static shape/dtype is read.
@@ -274,56 +274,20 @@ def make_round_step(
             lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), params)
         spec = make_spec(row_view)
         bank = spec.ravel_stacked(params)
-        # Pin the bank's layout explicitly: rows on "pod", columns gathered.
-        # Without this the SPMD partitioner mis-propagates shardings through
-        # the ravel reshape/concat chain and silently corrupts the mix (it
-        # also logs "Involuntary full rematerialization" while doing so).
-        mesh = shlib.active_mesh()
-        row_sharding = (
-            NamedSharding(mesh, PartitionSpec("pod", None))
-            if mesh is not None and "pod" in mesh.axis_names
-            else None
+        # The communication phase is the shared ``stages.comm_phase`` the
+        # flat-bank round program drives — one GSPMD representation for
+        # both runtimes.  ``bank_row_pins`` pins the bank's layout
+        # explicitly: rows on "pod", columns gathered.  Without the pins
+        # the SPMD partitioner mis-propagates shardings through the ravel
+        # reshape/concat chain and silently corrupts the mix (it also logs
+        # "Involuntary full rematerialization" while doing so).
+        pin, pin_link = shlib.bank_row_pins(shlib.active_mesh(), "pod")
+        bank, w, comp, link, extras = comm_phase(
+            compressor, mixer, P_pod, bank, w, comp, link,
+            linked=linked, link_model=link_model,
+            symmetric=mixer.kind == "symmetric",
+            pin=pin, pin_link=pin_link,
         )
-
-        def pin(x, lead: int = 0):
-            if row_sharding is None:
-                return x
-            if lead:  # (B, n_pods, D) buffers: pod rows on axis `lead`
-                spec3 = PartitionSpec(*([None] * lead), "pod",
-                                      *([None] * (x.ndim - lead - 1)))
-                return jax.lax.with_sharding_constraint(
-                    x, NamedSharding(mesh, spec3))
-            return jax.lax.with_sharding_constraint(x, row_sharding)
-
-        def pin_link(lk):
-            if not linked or isinstance(lk, tuple):
-                return lk
-            return lk._replace(
-                bufx=lk.bufx if isinstance(lk.bufx, tuple)
-                else pin(lk.bufx, lead=1),
-                bufw=lk.bufw,
-                last=lk.last if isinstance(lk.last, tuple) else pin(lk.last),
-            )
-
-        bank = pin(bank)
-        if compressor.stateful:
-            # The residual bank has the same (n_pods, D) row layout.
-            comp = pin(comp)
-        comp, sent = compressor.apply(comp, bank)
-        if linked:
-            lkey, nkey = jax.random.split(link.key)
-            link = link._replace(key=nkey)
-            if link_model is not None and link_model.drop > 0:
-                dkey, lkey = jax.random.split(lkey)
-                P_pod = link_model.drop_links(
-                    dkey, P_pod, symmetric=mixer.kind == "symmetric")
-            link = pin_link(link)
-        mixed, w, link, extras = mixer.mix_round(
-            P_pod, sent, w, link, lkey if linked else None, bank)
-        bank = pin(mixed)
-        if compressor.stateful:
-            comp = pin(comp)
-        link = pin_link(link)
         return spec.unravel_stacked(bank), w, comp, link, extras
 
     def mix_leafwise(params, w, comp, link, P_pod):

@@ -75,6 +75,10 @@ def main():
     import jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
 
+    from repro.launch.runtime import enable_compilation_cache
+
+    enable_compilation_cache()
+
     from repro import checkpoint
     from repro.configs.registry import get_config
     from repro.data.synthetic import make_lm_stream

@@ -1,0 +1,181 @@
+"""Sharded-vs-single-device equivalence for the GSPMD row-sharded bank.
+
+Each case runs in a subprocess with ``--xla_force_host_platform_device_count=8``
+(the device count must be forced before jax initializes, so the parent
+pytest process cannot host these itself): a mesh-sharded n=64 round and
+superstep must match the unsharded program to float tolerance for the
+ring, k_out, and hierarchical two-tier families — including a stateful
+composition (top-k error feedback + delayed links) whose EF residual and
+in-flight link buffers are row-sharded too — with push-sum mass conserved
+and a sharded checkpoint save/restore roundtrip continuing bitwise.
+"""
+import os
+import subprocess
+import sys
+
+N = 64
+DEV = 8
+
+
+def _run_case(case: str, timeout: int = 1200):
+    env = {**os.environ, "PYTHONPATH": "src",
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=%d" % DEV}
+    return subprocess.run([sys.executable, __file__, case],
+                          capture_output=True, text=True, env=env,
+                          cwd=os.path.dirname(os.path.dirname(
+                              os.path.abspath(__file__))),
+                          timeout=timeout)
+
+
+def test_sharded_equivalence_all_families():
+    r = _run_case("equivalence")
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "EQUIVALENCE OK" in r.stdout
+
+
+def test_sharded_checkpoint_roundtrip():
+    r = _run_case("checkpoint")
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "CHECKPOINT OK" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# Subprocess case bodies (run under the forced 8-device CPU platform).
+# ---------------------------------------------------------------------------
+
+def _setting():
+    import jax
+    import jax.numpy as jnp
+
+    def init_fn(key):
+        k1, k2 = jax.random.split(key)
+        return {"w1": jax.random.normal(k1, (8, 6)) * 0.1,
+                "b1": jnp.zeros((6,)),
+                "w2": jax.random.normal(k2, (6, 2)) * 0.1}
+
+    def loss_fn(params, batch):
+        h = jnp.tanh(batch["x"] @ params["w1"] + params["b1"])
+        logits = h @ params["w2"]
+        ll = jax.nn.log_softmax(logits)
+        loss = -jnp.mean(jnp.take_along_axis(ll, batch["y"][:, None], 1))
+        acc = jnp.mean(jnp.argmax(logits, -1) == batch["y"])
+        return loss, acc
+
+    data = {"x": jax.random.normal(jax.random.PRNGKey(3), (N, 20, 8)),
+            "y": jax.random.randint(jax.random.PRNGKey(4), (N, 20), 0, 2)}
+    return loss_fn, init_fn, data
+
+
+def _assert_rows_on_clients(x):
+    spec = tuple(x.sharding.spec)
+    assert spec and spec[0] == "clients", f"rows not on clients axis: {spec}"
+
+
+def _case_equivalence():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import LinkModel, TopologyConfig, make_algo, make_program
+    from repro.launch.mesh import make_clients_mesh
+
+    assert jax.device_count() == DEV
+    loss_fn, init_fn, data = _setting()
+    mesh = make_clients_mesh()
+    algo = make_algo("sgp", batch_size=4)
+    cases = [
+        ("ring", TopologyConfig(kind="ring", n_clients=N, k_out=1),
+         "sparse", {}),
+        ("kout-dense", TopologyConfig(kind="kout", n_clients=N, k_out=10),
+         "dense", {}),
+        ("kout-sparse", TopologyConfig(kind="kout", n_clients=N, k_out=10),
+         "sparse", {}),
+        ("two-tier", TopologyConfig(kind="two_tier", n_clients=N, k_out=10,
+                                    n_pods=DEV),
+         "sparse", {}),
+        ("topk-ef+delay",
+         TopologyConfig(kind="kout", n_clients=N, k_out=10), "sparse",
+         {"algo": make_algo("dfedsgpsm", local_steps=1, batch_size=4,
+                            compressor="topk_ef", topk_ratio=0.25),
+          "link": LinkModel(delay=1)}),
+    ]
+    for name, topo, gossip, extra in cases:
+        a = extra.get("algo", algo)
+        link = extra.get("link")
+        ref = make_program(loss_fn, init_fn, data, a, topo, gossip=gossip,
+                           link=link)
+        sh = make_program(loss_fn, init_fn, data, a, topo, gossip=gossip,
+                          link=link, mesh=mesh)
+        s0 = ref.init(jax.random.PRNGKey(0))
+        s1 = sh.init(jax.random.PRNGKey(0))
+        _assert_rows_on_clients(s1.params)
+        # One jitted step AND a 3-round superstep must both match.
+        s0a, m0 = jax.jit(ref.step)(s0)
+        s1a, m1 = jax.jit(sh.step)(s1)
+        perr = float(jnp.max(jnp.abs(
+            s0a.params - jax.device_get(s1a.params))))
+        assert perr < 1e-5, f"{name}: step diverged by {perr}"
+        s0, _ = ref.run_superstep(s0, 3)
+        s1, _ = sh.run_superstep(s1, 3)
+        _assert_rows_on_clients(s1.params)
+        perr = float(jnp.max(jnp.abs(s0.params - jax.device_get(s1.params))))
+        werr = float(jnp.max(jnp.abs(s0.w - jax.device_get(s1.w))))
+        mass = float(jnp.sum(s1.w))
+        if link is not None and link.delay:
+            mass += float(jnp.sum(s1.link.bufw))
+        assert perr < 1e-5, f"{name}: superstep params diverged by {perr}"
+        assert werr < 1e-5, f"{name}: push-sum weights diverged by {werr}"
+        assert abs(mass - N) < 1e-3, f"{name}: mass leaked to {mass}"
+        if not isinstance(s1.comp, tuple):
+            _assert_rows_on_clients(s1.comp)  # EF residual rows sharded
+        if s1.link and not isinstance(s1.link.bufx, tuple):
+            spec = tuple(s1.link.bufx.sharding.spec)
+            assert "clients" in spec, f"link bufx not sharded: {spec}"
+        print(f"{name}: params_err={perr:.2e} w_err={werr:.2e} "
+              f"mass={mass:.6f}")
+    print("EQUIVALENCE OK")
+
+
+def _case_checkpoint(tmp: str):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import FLTrainer, TopologyConfig, make_algo
+    from repro.launch.mesh import make_clients_mesh
+
+    assert jax.device_count() == DEV
+    loss_fn, init_fn, data = _setting()
+    mesh = make_clients_mesh()
+    algo = make_algo("dfedsgpsm", local_steps=1, batch_size=4)
+    topo = TopologyConfig(kind="two_tier", n_clients=N, k_out=10, n_pods=DEV)
+    tr = FLTrainer(loss_fn, init_fn, data, algo, topo, seed=0,
+                   gossip="sparse", mesh=mesh)
+    tr.run_round()
+    tr.run_round()
+    path = tr.save(tmp, step=2)
+    # A fresh trainer restores the host-written checkpoint back onto the
+    # mesh and continues bit-identically to the uninterrupted run.
+    tr2 = FLTrainer(loss_fn, init_fn, data, algo, topo, seed=0,
+                    gossip="sparse", mesh=mesh)
+    tr2.restore(path)
+    _assert_rows_on_clients(tr2.state.params)
+    assert int(tr2.state.round) == 2
+    a = tr.run_round()
+    b = tr2.run_round()
+    perr = float(jnp.max(jnp.abs(jax.device_get(tr.state.params)
+                                 - jax.device_get(tr2.state.params))))
+    assert perr == 0.0, f"resumed round diverged by {perr}"
+    assert abs(float(a["loss"]) - float(b["loss"])) == 0.0
+    print("CHECKPOINT OK")
+
+
+if __name__ == "__main__":
+    case = sys.argv[1]
+    if case == "equivalence":
+        _case_equivalence()
+    elif case == "checkpoint":
+        import tempfile
+
+        with tempfile.TemporaryDirectory() as tmp:
+            _case_checkpoint(tmp)
+    else:
+        raise SystemExit(f"unknown case {case!r}")

@@ -183,12 +183,24 @@ def test_symmetric_self_hits_are_zero_weight_pads():
 # ---------------------------------------------------------------------------
 
 def test_dispatch_rule_boundaries():
+    """The rule is backend-aware: the measured CPU crossover is n~128
+    (interpret-mode gather loses to the dense einsum below that — 0.22x
+    at n=32, 0.78x at n=64, k_out=10), while the Mosaic kernel wins from
+    n=32 on TPU.  These tests run on CPU, so the 128 floor is pinned
+    directly and the TPU floor via the constant."""
     assert not ops.use_sparse_gossip(16, 2)  # golden scale stays dense
     assert not ops.use_sparse_gossip(31, 2)
-    assert ops.use_sparse_gossip(32, 8)  # k_max/n == 0.25 inclusive
-    assert not ops.use_sparse_gossip(32, 9)
-    assert ops.use_sparse_gossip(100, 11)  # the paper setting (k_out=10)
-    assert not ops.use_sparse_gossip(100, 26)
+    # Below the measured CPU crossover: dense, even at TPU-floor sizes.
+    assert not ops.use_sparse_gossip(32, 8)
+    assert not ops.use_sparse_gossip(64, 11)
+    assert not ops.use_sparse_gossip(100, 11)
+    assert not ops.use_sparse_gossip(127, 11)
+    # From n=128 the gather wins; density cap 0.25 still applies.
+    assert ops.use_sparse_gossip(128, 11)  # the retuned paper-like point
+    assert ops.use_sparse_gossip(128, 32)  # k_max/n == 0.25 inclusive
+    assert not ops.use_sparse_gossip(128, 33)
+    assert ops.use_sparse_gossip(512, 74)  # two-tier at the shard scale
+    assert ops._SPARSE_GOSSIP_MIN_CLIENTS_TPU == 32  # TPU floor unchanged
 
 
 def test_golden_configs_resolve_dense(tiny_setting):

@@ -82,3 +82,81 @@ def test_selection_column_stochastic_property():
         losses = jax.random.normal(jax.random.PRNGKey(s), (12,))
         P = topo.sample_kout_selective(jax.random.PRNGKey(s + 99), losses, 12, 3)
         assert topo.is_column_stochastic(P)
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical two-tier family (dense intra-pod + sparse cross-pod edges).
+# ---------------------------------------------------------------------------
+
+@given(st.integers(2, 6), st.integers(2, 8), st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_two_tier_column_stochastic(n_pods, ps, seed):
+    n = n_pods * ps
+    k = max(1, min(n - ps, n // 4))
+    op = topo.sample_two_tier(jax.random.PRNGKey(seed), n, n_pods, k)
+    P = topo.dense_from_two_tier(op)
+    assert topo.is_column_stochastic(P)
+    # Self-loops live on the intra diagonal; the inter self slot is a pad.
+    assert np.all(np.diag(np.asarray(P)) > 0)
+    assert np.all(np.asarray(op.inter.wgt)[:, 0] == 0.0)
+
+
+def test_two_tier_cross_edges_leave_the_pod():
+    n, n_pods, k = 48, 6, 7
+    ps = n // n_pods
+    op = topo.sample_two_tier(jax.random.PRNGKey(3), n, n_pods, k)
+    pod = np.arange(n) // ps
+    picks = np.asarray(op.inter.idx)[:, 1:]  # slot 0 is the self pad
+    assert np.all(pod[picks] != pod[:, None])
+    # Every receiver has exactly k distinct external senders.
+    assert all(len(set(row)) == k for row in picks)
+
+
+def test_two_tier_matches_dense_twin_and_conserves_mass():
+    n, n_pods, k = 32, 4, 5
+    cfg = topo.TopologyConfig(kind="two_tier", n_clients=n, k_out=k,
+                              n_pods=n_pods)
+    key = jax.random.PRNGKey(11)
+    op = topo.sample_neighbors(key, cfg)
+    assert isinstance(op, topo.TwoTierOp)
+    P = topo.sample_mixing(key, cfg)
+    assert np.allclose(np.asarray(topo.dense_from_two_tier(op)),
+                       np.asarray(P))
+    from repro.core import pushsum
+
+    X = jax.random.normal(jax.random.PRNGKey(1), (n, 19))
+    w = jnp.ones((n,), jnp.float32)
+    Xs = pushsum.gossip_bank(op, X)
+    Xd = pushsum.gossip_bank(P, X, use_kernel=False)
+    assert np.allclose(np.asarray(Xs), np.asarray(Xd), atol=1e-5)
+    ws = pushsum.gossip_weights(op, w)
+    assert np.allclose(np.asarray(ws), np.asarray(pushsum.gossip_weights(P, w)),
+                       atol=1e-6)
+    assert abs(float(ws.sum()) - n) < 1e-3  # push-sum mass
+    assert topo.neighbor_k_max(cfg, "directed") == n // n_pods + k
+
+
+def test_two_tier_union_strongly_connected():
+    cfg = topo.TopologyConfig(kind="two_tier", n_clients=40, k_out=4,
+                              n_pods=5)
+    mats = [topo.sample_mixing(jax.random.PRNGKey(s), cfg) for s in range(3)]
+    assert topo.union_strongly_connected(mats)
+
+
+def test_two_tier_config_validation():
+    with pytest.raises(ValueError, match="n_pods >= 2"):
+        topo.TopologyConfig(kind="two_tier", n_clients=16, k_out=2, n_pods=1)
+    with pytest.raises(ValueError, match="divisible"):
+        topo.TopologyConfig(kind="two_tier", n_clients=15, k_out=2, n_pods=4)
+    with pytest.raises(ValueError, match="pod_size"):
+        # k_out > n - pod_size: not enough external senders to pick from.
+        topo.TopologyConfig(kind="two_tier", n_clients=16, k_out=13, n_pods=2)
+    with pytest.raises(ValueError, match="two_tier-only"):
+        topo.TopologyConfig(kind="kout", n_clients=16, k_out=2, n_pods=4)
+
+
+def test_two_tier_drop_links_rejected():
+    op = topo.sample_two_tier(jax.random.PRNGKey(0), 16, 4, 3)
+    lm = topo.LinkModel(drop=0.3)
+    with pytest.raises(ValueError, match="two-tier"):
+        lm.drop_links(jax.random.PRNGKey(1), op)
