@@ -391,6 +391,149 @@ def shard_bench(n: int = 512, k_out: int = 10, n_pods: int = 8,
     return results
 
 
+# ---------------------------------------------------------------------------
+# Virtual client population (--paged): disk-backed store + prefetch paging.
+# ---------------------------------------------------------------------------
+
+def paged_bench(n: int = 4096, k_active: int = 256, k_out: int = 4,
+                rounds: int = 3, json_out: str | None = None) -> dict:
+    """Run the paged trainer over an n-client disk-backed population with
+    only the round's fault-in closure resident, and pin the subsystem's
+    three contracts: (1) allocation proportionality — device/staging
+    buffers hold ``c_max = min(n, k_active*(k_in+1))`` rows, never n;
+    (2) exact push-sum mass over the whole store, cold clients included;
+    (3) paged == fully-resident float-tolerance equivalence on the same
+    PRNG chain, checked at a twin-feasible size (the dense reference
+    materializes an (n, n) operator, so it runs at 512 clients while the
+    paged run itself goes to ``n``).
+
+    Uses the deliberately tiny ``tiny_mlp`` backbone (a row is ~5 KB) so
+    thousands of clients cycle through the store in CI seconds; what the
+    bench measures is the paging machinery, not the matmuls.  The JSON
+    artifact records wall time per round plus the pager counters —
+    faulted-rows/round, prefetch hit rate, and the background prefetch
+    overlap the async pipeline buys (satellite metrics the README quotes).
+    """
+    import shutil
+    import tempfile
+
+    import numpy as np
+
+    from repro.core import make_program, topology
+    from repro.data.dirichlet import dirichlet_partition, stack_client_data
+    from repro.data.synthetic import DatasetSpec, make_dataset
+    from repro.models.small import tiny_mlp
+    from repro.store import PagedRunner, ResidentDriver
+
+    def setting(n_pop):
+        spec = DatasetSpec("toy", (32,), 10, margin=3.0)
+        train, _ = make_dataset(spec, n_pop * 8, 256, seed=0)
+        parts = dirichlet_partition(train["y"], n_pop, alpha=0.3, seed=0)
+        cdata = stack_client_data(train, parts, pad_to=16)
+        net = tiny_mlp(in_dim=32, n_classes=10)
+        algo = make_algo("dfedsgpsm", local_steps=2, batch_size=8)
+        topo = TopologyConfig(kind="kout", n_clients=n_pop,
+                              k_out=min(k_out, n_pop - 1))
+        return make_program(net.loss, net.init, cdata, algo, topo,
+                            gossip="dense")
+
+    work = tempfile.mkdtemp(prefix="paged_bench_")
+    results: dict = {"n": n, "k_active": k_active, "k_out": k_out,
+                     "rounds": rounds}
+    try:
+        # -- the population-scale paged run --------------------------------
+        program = setting(n)
+        runner = PagedRunner(program, os.path.join(work, "store"),
+                             k_active=k_active, seed=0)
+        k_in = topology.active_k_in(program.topo)
+        c_max = min(n, k_active * (k_in + 1))
+        assert runner.resident_rows == c_max, (
+            f"resident bank is {runner.resident_rows} rows, closure bound "
+            f"is {c_max}")
+        assert runner.resident_rows < n, (
+            "paged bank must be smaller than the population")
+        assert runner.staging_rows == 2 * c_max
+        row_b = runner.store.row_nbytes
+        results.update({
+            "k_in": k_in, "c_max": c_max,
+            "resident_rows": runner.resident_rows,
+            "staging_rows": runner.staging_rows,
+            "resident_fraction": round(c_max / n, 4),
+            "bank_bytes_resident": c_max * row_b,
+            "bank_bytes_full": n * row_b,
+        })
+        runner.run_round()  # compile + first (cold, all-fault) round
+        times, max_mass_err = [], 0.0
+        for _ in range(rounds):
+            t0 = time.perf_counter()
+            rec = runner.run_round()
+            times.append(1e6 * (time.perf_counter() - t0))
+            max_mass_err = max(max_mass_err, rec["w_mass_closure_err"])
+        us = statistics.median(times)
+        mass = runner.total_mass()
+        mass_err = abs(mass - n)
+        stats = runner.stats.as_dict()
+        runner.close()
+        emit("round/paged/us", us,
+             f"n={n},k_active={k_active},c_max={c_max},rounds={rounds},"
+             "median")
+        emit("round/paged/resident_fraction", c_max / n,
+             "resident rows / population (buffers scale with this, not n)")
+        emit("round/paged/fault_rows", stats["rows_faulted_per_round"],
+             "synchronous store reads per round (prefetch misses)")
+        emit("round/paged/hit_rate", stats["prefetch_hit_rate"],
+             "closure rows served without a synchronous fault")
+        emit("round/paged/overlap_s", stats["prefetch_overlap_s"],
+             "background load time hidden behind device compute")
+        emit("round/paged/mass_err", mass_err,
+             f"|sum w - n| over the whole {n}-row store")
+        assert max_mass_err < 1e-3, (
+            f"closure mass leaked in-round: {max_mass_err}")
+        assert mass_err < 1e-3 * n, (
+            f"push-sum mass drifted over the store: {mass}")
+        results.update({"us_per_round": round(us, 1), "mass": mass,
+                        "mass_err": mass_err,
+                        "max_round_mass_err": max_mass_err,
+                        "stats": {k: (round(v, 6)
+                                      if isinstance(v, float) else v)
+                                  for k, v in stats.items()}})
+
+        # -- paged == resident equivalence (twin-feasible size) ------------
+        n_twin, k_twin, r_twin = 512, 64, 3
+        program_t = setting(n_twin)
+        paged = PagedRunner(program_t, os.path.join(work, "twin_store"),
+                            k_active=k_twin, seed=7)
+        twin = ResidentDriver(program_t, k_active=k_twin, seed=7)
+        loss_err = 0.0
+        for _ in range(r_twin):
+            mp, mt = paged.run_round(), twin.run_round()
+            loss_err = max(loss_err, abs(mp["loss"] - mt["loss"]))
+        rows = paged.read_rows(np.arange(n_twin))
+        row_err = float(np.abs(rows["params"]
+                               - np.asarray(twin.state.params)).max())
+        w_err = float(np.abs(rows["w"] - np.asarray(twin.state.w)).max())
+        paged.close()
+        equiv_ok = loss_err < 1e-4 and row_err < 5e-4 and w_err < 1e-4
+        emit("round/paged/equiv_row_err", row_err,
+             f"max |paged - resident| over all {n_twin} rows, "
+             f"{r_twin} rounds")
+        results["equivalence"] = {
+            "n": n_twin, "k_active": k_twin, "rounds": r_twin,
+            "loss_err": loss_err, "row_err": row_err, "w_err": w_err,
+            "ok": bool(equiv_ok),
+        }
+        assert equiv_ok, (
+            f"paged diverged from the fully-resident reference: "
+            f"{results['equivalence']}")
+    finally:
+        shutil.rmtree(work, ignore_errors=True)
+    if json_out:
+        with open(json_out, "w") as f:
+            json.dump({"paged": results}, f, indent=1)
+        print(f"# wrote paged-population results -> {json_out}")
+    return results
+
+
 def _smoke_speedups() -> dict:
     """Both gate ratios for the flagship algorithm at the recorded sizes:
     ``speedup`` = pytree_us/flat_us (the flat bank must not regress) and
@@ -517,6 +660,15 @@ if __name__ == "__main__":
                          "(default 512); writes --json as bench-shard.json")
     ap.add_argument("--n-pods", type=int, default=8,
                     help="pod count for the two-tier family in --shard")
+    ap.add_argument("--paged", action="store_true",
+                    help="virtual-client-population bench: run the "
+                         "disk-backed paged trainer at --n-clients "
+                         "(default 4096) with --k-active sampled clients, "
+                         "assert closure-proportional buffers + exact mass "
+                         "+ paged==resident equivalence; writes --json as "
+                         "bench-paged.json")
+    ap.add_argument("--k-active", type=int, default=256,
+                    help="sampled clients per round for --paged")
     ap.add_argument("--n-clients", default=None, metavar="N[,N...]",
                     help="sparse-vs-dense gossip scaling sweep over these "
                          "client counts (e.g. 16,64,256) at fixed --k-out; "
@@ -533,6 +685,11 @@ if __name__ == "__main__":
     ap.add_argument("--fast", action="store_true",
                     help="fewer timing rounds for the full benchmark")
     args = ap.parse_args()
+    if args.paged:
+        n = int(args.n_clients.split(",")[0]) if args.n_clients else 4096
+        paged_bench(n=n, k_active=args.k_active, rounds=args.rounds,
+                    json_out=args.json)
+        sys.exit(0)
     if args.shard:
         n = int(args.n_clients.split(",")[0]) if args.n_clients else 512
         shard_bench(n, k_out=args.k_out, n_pods=args.n_pods,

@@ -2,8 +2,15 @@
 
 Good enough for FL simulation state and pod-replica snapshots; atomic via
 rename, with round-robin retention.  Flat client-parameter banks have a
-dedicated fast path: the whole (n_clients, D) buffer is one npz array plus
-the leaf-offset metadata needed to unravel rows back into pytrees.
+dedicated fast path: the (n_clients, D) buffer rides as row-chunked arrays
+(format v2) streamed to the archive one host-sized piece at a time — a
+GSPMD row-sharded bank is never gathered whole on one host — plus the
+leaf-offset metadata needed to unravel rows back into pytrees.  v1
+checkpoints (one monolithic ``__bank__`` array) load transparently.
+
+For paged (disk-backed) populations the checkpoint is the
+:class:`repro.store.store.ClientStore` itself — its manifest commit, not
+an npz; see :meth:`repro.store.paged.PagedRunner.save`.
 """
 from __future__ import annotations
 
@@ -11,6 +18,7 @@ import json
 import os
 import re
 import tempfile
+import zipfile
 
 import jax
 import numpy as np
@@ -97,36 +105,104 @@ def _spec_meta(spec) -> dict:
     }
 
 
-def save_bank(directory: str, step: int, bank, spec, extra=None,
-              keep: int = 3) -> str:
-    """Checkpoint a flat (n_clients, D) parameter bank as ONE array plus
-    its unravel metadata (leaf paths / shapes / dtypes / offsets).
+# Target host-staging size per streamed bank chunk; a checkpoint's peak
+# extra host memory is ~one chunk, not the (n, D) bank.
+_CHUNK_BYTES = 64 << 20
 
-    ``extra`` may hold small auxiliary arrays (push-sum weights, momentum
-    bank, round counter) saved alongside under their own keys.
+
+def _default_chunk_rows(rows: int, row_nbytes: int) -> int:
+    return max(1, min(rows, _CHUNK_BYTES // max(row_nbytes, 1)))
+
+
+def _write_member(zf: zipfile.ZipFile, name: str, arr: np.ndarray):
+    """Stream one array into the archive as an ``.npy`` member (the layout
+    ``np.load`` reads back as an NpzFile entry)."""
+    with zf.open(name + ".npy", "w", force_zip64=True) as m:
+        np.lib.format.write_array(m, np.asarray(arr), allow_pickle=False)
+
+
+def _bank_like(v, rows: int) -> bool:
+    """Row-bank extras (leading dim == n_clients, at least 2-D: momentum,
+    EF residuals, link payload buffers) are chunked like the bank itself;
+    scalars and (n,) vectors stay whole."""
+    shape = getattr(v, "shape", ())
+    return len(shape) >= 2 and shape[0] == rows
+
+
+def save_bank(directory: str, step: int, bank, spec, extra=None,
+              keep: int = 3, chunk_rows: int | None = None) -> str:
+    """Checkpoint a flat (n_clients, D) parameter bank as row-chunked
+    arrays plus its unravel metadata (leaf paths / shapes / dtypes /
+    offsets).
+
+    Format v2: the bank (and every bank-shaped extra) is sliced into
+    ``chunk_rows``-row pieces, each fetched to the host and streamed into
+    the archive independently — ``np.asarray(bank[lo:hi])`` on a GSPMD
+    row-sharded bank transfers only that slice, so checkpointing no longer
+    gathers the full population onto one host (the v1 OOM past ~10k rows).
+
+    ``extra`` may hold auxiliary arrays (push-sum weights, momentum bank,
+    round counter) saved alongside under their own keys.
     """
     os.makedirs(directory, exist_ok=True)
-    payload = {"__bank__": _to_host(bank)}
-    payload["__bank_meta__"] = np.array(json.dumps(_spec_meta(spec)))
-    for k, v in (extra or {}).items():
-        payload[f"extra_{k}"] = _to_host(v)
+    rows = int(bank.shape[0]) if bank.ndim >= 2 else 0
+    row_nbytes = int(np.prod(bank.shape[1:], initial=1)) * bank.dtype.itemsize
+    cr = int(chunk_rows) if chunk_rows else _default_chunk_rows(
+        max(rows, 1), row_nbytes)
+    meta = _spec_meta(spec)
+    extra = extra or {}
+    chunked_extras = sorted(
+        k for k, v in extra.items() if rows and _bank_like(v, rows)
+    )
+    n_chunks = max(-(-rows // cr), 1) if rows else 1
+    meta.update(format=2, rows=rows, chunk_rows=cr, bank_chunks=n_chunks,
+                extra_chunked=chunked_extras)
+
     final = os.path.join(directory, f"ckpt_{step}.npz")
     fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
     with os.fdopen(fd, "wb") as f:
-        np.savez(f, **payload)
+        with zipfile.ZipFile(f, "w", zipfile.ZIP_STORED,
+                             allowZip64=True) as zf:
+            _write_member(zf, "__bank_meta__",
+                          np.array(json.dumps(meta)))
+            if rows:
+                for i in range(n_chunks):
+                    lo, hi = i * cr, min((i + 1) * cr, rows)
+                    _write_member(zf, f"__bank_c{i:05d}__",
+                                  _to_host(bank[lo:hi]))
+            else:  # central-row checkpoints: a single (D,) "chunk"
+                _write_member(zf, "__bank_c00000__", _to_host(bank))
+            for k, v in extra.items():
+                if k in chunked_extras:
+                    for i in range(n_chunks):
+                        lo, hi = i * cr, min((i + 1) * cr, rows)
+                        _write_member(zf, f"extra_{k}_c{i:05d}",
+                                      _to_host(v[lo:hi]))
+                else:
+                    _write_member(zf, f"extra_{k}", _to_host(v))
+        f.flush()
+        os.fsync(f.fileno())
     os.replace(tmp, final)
     _retain(directory, keep)
     return final
 
 
+def _gather_chunks(data, names) -> np.ndarray:
+    parts = [data[n] for n in names]
+    return parts[0] if len(parts) == 1 else np.concatenate(parts, axis=0)
+
+
 def restore_bank(path: str, spec=None):
     """Restore ``(bank, extra, meta)`` saved by :func:`save_bank`.
 
-    With ``spec`` given, the stored offset metadata is validated against it
-    (mismatched model structure raises ``ValueError``).
+    Reads both v2 (row-chunked) and legacy v1 (monolithic ``__bank__``)
+    checkpoints.  With ``spec`` given, the stored offset metadata is
+    validated against it (mismatched model structure raises
+    ``ValueError``).
     """
     data = np.load(path, allow_pickle=False)
-    if "__bank__" not in data:
+    v2 = "__bank_c00000__" in data.files
+    if not v2 and "__bank__" not in data.files:
         raise ValueError(f"{path} is not a flat-bank checkpoint")
     meta = json.loads(str(data["__bank_meta__"]))
     if spec is not None:
@@ -134,10 +210,27 @@ def restore_bank(path: str, spec=None):
         keys = ("offsets", "shapes", "dtypes", "dim", "dtype")
         if any(want[k] != meta[k] for k in keys):
             raise ValueError("bank checkpoint structure mismatch")
-    extra = {
-        k[len("extra_"):]: data[k] for k in data.files if k.startswith("extra_")
-    }
-    return data["__bank__"], extra, meta
+    if not v2:
+        extra = {
+            k[len("extra_"):]: data[k]
+            for k in data.files if k.startswith("extra_")
+        }
+        return data["__bank__"], extra, meta
+    n_chunks = int(meta["bank_chunks"])
+    bank = _gather_chunks(
+        data, [f"__bank_c{i:05d}__" for i in range(n_chunks)]
+    )
+    extra = {}
+    for k in meta.get("extra_chunked", ()):
+        extra[k] = _gather_chunks(
+            data, [f"extra_{k}_c{i:05d}" for i in range(n_chunks)]
+        )
+    chunk_re = re.compile(r"^extra_(.+)_c\d{5}$")
+    for f in data.files:
+        if (not f.startswith("extra_")) or chunk_re.match(f):
+            continue
+        extra[f[len("extra_"):]] = data[f]
+    return bank, extra, meta
 
 
 def save_state(directory: str, step: int, state, spec, keep: int = 3) -> str:

@@ -123,6 +123,13 @@ class FLTrainer:
         edge drops (exactly column-stochastic after renormalization),
         bounded delivery delays, or event-triggered transmission.  ``None``
         (default) or an all-zero model is bitwise the perfect-link round.
+      paged: virtual client population — the full (n, D) bank lives in a
+        disk-backed :class:`repro.store.ClientStore` under ``store_dir``
+        and each round pages in only its fault-in closure (the ``k_active``
+        sampled clients plus their in-neighbors), with background prefetch
+        and async write-back.  Device/host buffers scale with the closure,
+        not n; the checkpoint is the store itself.  Directed push-sum,
+        perfect links, single host only.
 
     ``fit`` drives ``program.run_superstep`` — jit-resident supersteps of
     rounds with in-scan eval — and returns per-round history records; for
@@ -143,7 +150,25 @@ class FLTrainer:
         gossip: str = "auto",
         link: topology.LinkModel | None = None,
         mesh=None,
+        paged: bool = False,
+        store_dir: str | None = None,
+        k_active: int = 0,
+        rows_per_chunk: int = 256,
+        prefetch: bool = True,
+        lru_rows: int | None = None,
     ):
+        if paged:
+            if not flat:
+                raise ValueError("paged training runs on the flat bank")
+            if mesh is not None:
+                raise ValueError("paged training is single-host; drop the "
+                                 "mesh (disk, not devices, bounds n)")
+            if link is not None and link.active:
+                raise ValueError("paged training models perfect links only")
+            if not store_dir:
+                raise ValueError("paged=True needs store_dir")
+            if k_active < 1:
+                raise ValueError("paged=True needs k_active >= 1")
         if not flat and mesh is not None:
             raise ValueError("the flat=False oracle path is single-device")
         if not flat and link is not None and link.active:
@@ -178,9 +203,23 @@ class FLTrainer:
         )
         self.spec = self.program.spec
         self._exp_cycle = self.program.exp_cycle
+        self.paged = paged
+        self.runner = None
 
         key = jax.random.PRNGKey(seed)
-        if flat:
+        if paged:
+            # The bank never materializes: the store holds the population,
+            # the runner pages closures through program.step_active.
+            from repro.store import PagedRunner
+
+            self.runner = PagedRunner(
+                self.program, store_dir, k_active, seed=seed,
+                rows_per_chunk=rows_per_chunk, prefetch=prefetch,
+                lru_rows=lru_rows,
+            )
+            self.state = None
+            self._round_jit = None
+        elif flat:
             self.state = self.program.init(key)
             # Donate the state: the (n, D) banks are updated in place across
             # rounds instead of reallocating ~2 model copies per round.
@@ -320,11 +359,16 @@ class FLTrainer:
     # -- public API ----------------------------------------------------------
 
     def run_round(self):
+        if self.paged:
+            return self.runner.run_round()
         self.state, metrics = self._round_jit(self.state)
         return metrics
 
     def average_model(self):
         """Consensus model x̄ (Algorithm 1 output)."""
+        if self.paged:
+            # Streamed over store chunks; (n, D) never materializes.
+            return self.spec.unravel(jnp.asarray(self.runner.mean_params()))
         if self.algo.comm == "central":
             if self.flat:
                 return self.spec.unravel(self.state.params)
@@ -334,6 +378,12 @@ class FLTrainer:
         return jax.tree.map(lambda x: x.mean(axis=0), self.state.params)
 
     def debiased_models(self):
+        if self.paged:
+            raise ValueError(
+                "debiased_models materializes the full (n, D) bank — the "
+                "point of paged mode is that it never exists; stream rows "
+                "via trainer.runner.store.iter_chunks() instead"
+            )
         if self.flat and self.algo.comm != "central":
             z = pushsum.debias_bank(self.state.params, self.state.w)
             return self.spec.unravel_stacked(z)
@@ -341,12 +391,14 @@ class FLTrainer:
 
     def consensus_error(self):
         """Mean squared distance of de-biased params from the average."""
+        if self.paged:
+            return self.runner.consensus_error()
         if self.flat and self.algo.comm != "central":
             return pushsum.consensus_error_bank(self.state.params, self.state.w)
         return pushsum.consensus_error(self.state.params, self.state.w)
 
     def evaluate(self, test_data, batch: int = 1024):
-        if self.flat:
+        if self.flat and not self.paged:
             # Exactly the in-scan eval of run_superstep, jitted standalone.
             key = (id(test_data), batch)
             entry = self._eval_cache.get(key)
@@ -399,7 +451,9 @@ class FLTrainer:
             runs all ``rounds`` as one superstep.  The ``flat=False`` oracle
             path keeps the per-round Python loop regardless.
         """
-        if not self.flat:
+        if not self.flat or self.paged:
+            # Paged rounds are host-orchestrated by design (the plan /
+            # prefetch / write-back pipeline IS the host loop).
             return self._fit_python_loop(rounds, test_data, eval_every, log)
         history = []
         done = 0
@@ -451,21 +505,35 @@ class FLTrainer:
 
     # -- checkpointing (full FLState) ---------------------------------------
 
-    def save(self, directory: str, step: int, keep: int = 3) -> str:
+    def save(self, directory: str | None = None, step: int = 0,
+             keep: int = 3) -> str:
         """Checkpoint the full ``FLState`` (params + momentum bank +
-        push-sum weights + round + key + compressor state)."""
+        push-sum weights + round + key + compressor state).
+
+        Paged trainers ignore ``directory``/``step``/``keep``: the
+        checkpoint IS the store — ``save`` flushes dirty rows and commits
+        ``(round, key)`` into the store manifest, returning the store path.
+        """
         from repro import checkpoint
 
+        if self.paged:
+            return self.runner.save()
         if not self.flat:
             raise ValueError("full-state checkpointing needs the flat path")
+        if directory is None:
+            raise ValueError("save() needs a checkpoint directory")
         return checkpoint.save_state(
             directory, step, self.state, self.spec, keep=keep
         )
 
     def restore(self, path: str) -> FLState:
-        """Warm-restart from a full-``FLState`` checkpoint."""
+        """Warm-restart from a full-``FLState`` checkpoint (paged trainers
+        re-sync to their store's last committed manifest)."""
         from repro import checkpoint
 
+        if self.paged:
+            self.runner.restore(path)
+            return None
         if not self.flat:
             raise ValueError("full-state checkpointing needs the flat path")
         state = checkpoint.restore_state(path, self.spec)

@@ -40,7 +40,39 @@ from repro.core.stages import (
     make_stages,
 )
 
-__all__ = ["FLState", "RoundProgram", "make_program"]
+__all__ = [
+    "FLState",
+    "ActiveSlots",
+    "RoundProgram",
+    "make_program",
+    "plan_keys",
+]
+
+
+def plan_keys(key: jax.Array):
+    """The paged round's PRNG chain: one split of the round key into
+    ``(key_next, akey, tkey, ckey_base)`` — next round's key, the active-set
+    permutation key, the topology pick key, and the base every client folds
+    its global id into.  Host planner and the fully-resident reference
+    driver both derive from exactly this chain, which is what makes
+    paged == resident equivalence testable stream-for-stream."""
+    ks = jax.random.split(key, 4)
+    return ks[0], ks[1], ks[2], ks[3]
+
+
+class ActiveSlots(NamedTuple):
+    """Device-side view of one round's fault-in closure.
+
+    ``ids[s]`` is the global client id resident in compact slot ``s``
+    (layout ``[active | cold | pads]``; only the first ``k_active`` entries
+    are read, for per-client PRNG folding).  ``idx``/``wgt`` are the
+    compact-slot :class:`~repro.core.topology.NeighborList` of the
+    closure-restricted mixing operator built by
+    :func:`repro.store.paging.build_plan`."""
+
+    ids: jnp.ndarray  # (c_max,) int32 global ids per resident slot
+    idx: jnp.ndarray  # (c_max, 1 + k_in) int32 compact in-neighbor slots
+    wgt: jnp.ndarray  # (c_max, 1 + k_in) float32 mixing weights
 
 
 class FLState(NamedTuple):
@@ -262,6 +294,7 @@ class RoundProgram:
             linked=self.linked, link_model=self.link,
             symmetric=self.mixer.kind == "symmetric",
             pin=self._pin, pin_link=self._pin_link,
+            t=state.round,
         )
         new_state = FLState(
             X, V, w_new, key, state.round + 1, losses, comp, link
@@ -295,6 +328,57 @@ class RoundProgram:
             new_losses, state.comp, state.link
         )
         return new_state, {"loss": losses.mean(), "acc": accs.mean()}
+
+    # -- one paged round on the compact resident bank -------------------------
+
+    def step_active(
+        self, state: FLState, slots: ActiveSlots, data_active, *,
+        k_active: int,
+    ):
+        """One communication round over a **compact** ``(c_max, D)`` bank —
+        the paged twin of :meth:`step` for partial participation.
+
+        ``state`` here is the *resident* state: every bank leaf holds only
+        the round's fault-in closure (layout ``[active | cold | pads]``,
+        see :mod:`repro.store.paging`), ``state.key`` is the round's
+        ``ckey_base`` from :func:`plan_keys` (the paged key chain lives on
+        the host), and ``state.link`` is ``()`` — link scenarios are not
+        paged.  Only the first ``k_active`` rows train locally; the mix
+        runs the same :func:`~repro.core.stages.comm_phase` over the
+        slot-remapped NeighborList in ``slots``, so compressors (including
+        stateful EF residuals, resident like every other bank leaf) and the
+        full-precision self-loop rule compose unchanged.  ``k_active`` is
+        static: jit with ``static_argnames=("k_active",)``.
+        """
+        lr = self.lr * self.lr_decay ** state.round.astype(jnp.float32)
+        ckeys = jax.vmap(
+            lambda i: jax.random.fold_in(state.key, i)
+        )(slots.ids[:k_active])
+        Xa, Va, losses, accs = self.solver.update(
+            self.loss_fn, self.spec, state.params[:k_active],
+            state.w[:k_active], ckeys, data_active, lr,
+        )
+        X = state.params.at[:k_active].set(Xa)
+        mom = (
+            state.mom.at[:k_active].set(Va)
+            if state.mom is not None else None
+        )
+        P = topology.NeighborList(slots.idx, slots.wgt)
+        Xm, w_new, comp, _, extras = comm_phase(
+            self.compressor, self.mixer, P, X, state.w, state.comp, (),
+            t=state.round,
+        )
+        losses_res = state.losses.at[:k_active].set(losses)
+        new_state = FLState(
+            Xm, mom, w_new, state.key, state.round + 1, losses_res, comp, ()
+        )
+        # w_sum counts every resident slot; the runner subtracts the
+        # (c_max - c) inert unit pads to report real closure mass.
+        metrics = {
+            "loss": losses.mean(), "acc": accs.mean(),
+            "w_sum": w_new.sum(), **extras,
+        }
+        return new_state, metrics
 
     # -- whole training runs inside one jit ---------------------------------
 
@@ -491,7 +575,11 @@ def make_program(
         if link.delay:
             mixer = DelayedPushSumMixer(delay=link.delay)
         elif link.event_threshold:
-            mixer = EventTriggeredMixer(threshold=link.event_threshold)
+            mixer = EventTriggeredMixer(
+                threshold=link.event_threshold,
+                decay=link.event_decay,
+                schedule=link.event_schedule,
+            )
     if mixer.kind == "central" and not isinstance(
         compressor, IdentityCompressor
     ):

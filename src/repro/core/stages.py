@@ -332,7 +332,7 @@ class PushSumMixer:
     def mix(self, P, X, w):
         return pushsum.gossip_bank(P, X, self.backend), self.mix_weights(P, w)
 
-    def mix_round(self, P, X, w, link, key, X_full):
+    def mix_round(self, P, X, w, link, key, X_full, t=None):
         Xm, wm = self.mix(P, X, w)
         return _selfloop_correction(P, X, X_full, Xm), wm, link, {}
 
@@ -358,7 +358,7 @@ class SymmetricMixer:
     def mix(self, P, X, w):
         return pushsum.gossip_bank(P, X, self.backend), self.mix_weights(P, w)
 
-    def mix_round(self, P, X, w, link, key, X_full):
+    def mix_round(self, P, X, w, link, key, X_full, t=None):
         Xm, wm = self.mix(P, X, w)
         return _selfloop_correction(P, X, X_full, Xm), wm, link, {}
 
@@ -423,7 +423,7 @@ class DelayedPushSumMixer:
     def mix_weights(self, P, w):
         return pushsum.gossip_weights(P, w)
 
-    def mix_round(self, P, X, w, link: LinkState, key, X_full):
+    def mix_round(self, P, X, w, link: LinkState, key, X_full, t=None):
         slices = _delay_slices(key, P, self.delay)
         sent_x = [pushsum.gossip_bank(Ps, X, self.backend) for Ps in slices]
         sent_w = [pushsum.gossip_weights(Ps, w) for Ps in slices]
@@ -455,12 +455,37 @@ class EventTriggeredMixer:
     scheme admits is bounded by the threshold, which is the knob the
     ``comm_fraction`` extra (fraction of clients that transmitted) trades
     against.
+
+    The threshold may be a *schedule* (adaptive communication censoring):
+    ``schedule(t)`` when given, else ``threshold * decay ** t`` — a
+    decaying threshold communicates sparsely early and tightens toward
+    full gossip as training converges.  ``decay == 1.0`` with no schedule
+    is resolved at trace time to the fixed-threshold mixer, bitwise.
     """
 
     threshold: float = 0.01
+    # Per-round multiplicative threshold decay; 1.0 = fixed threshold.
+    decay: float = 1.0
+    # Optional callable ``t -> threshold`` (t is the traced round index);
+    # overrides ``decay``.  Must be jit-traceable.
+    schedule: Any = None
     backend: Any = None
     kind = "directed"
     link_stateful = True
+
+    def _threshold_at(self, t):
+        if self.schedule is None and self.decay == 1.0:
+            return self.threshold
+        if t is None:
+            raise ValueError(
+                "a scheduled/decaying event threshold needs the round "
+                "index: thread t=state.round into comm_phase (the pod "
+                "round path supports fixed thresholds only)"
+            )
+        tf = jnp.asarray(t, jnp.float32)
+        if self.schedule is not None:
+            return jnp.asarray(self.schedule(tf), jnp.float32)
+        return jnp.float32(self.threshold) * jnp.float32(self.decay) ** tf
 
     def init_weights(self, n: int):
         return jnp.ones((n,), jnp.float32)
@@ -475,9 +500,9 @@ class EventTriggeredMixer:
     def mix_weights(self, P, w):
         return pushsum.gossip_weights(P, w)
 
-    def mix_round(self, P, X, w, link: LinkState, key, X_full):
+    def mix_round(self, P, X, w, link: LinkState, key, X_full, t=None):
         drift = X.astype(jnp.float32) - link.last.astype(jnp.float32)
-        send = jnp.sqrt(jnp.sum(drift * drift, axis=1)) > self.threshold
+        send = jnp.sqrt(jnp.sum(drift * drift, axis=1)) > self._threshold_at(t)
         B = jnp.where(send[:, None], X, link.last.astype(X.dtype))
         Xm = pushsum.gossip_bank(P, B, self.backend)
         # The self-loop never reads the cache: always the live full bank
@@ -521,7 +546,7 @@ def _identity(x):
 
 def comm_phase(compressor, mixer, P, X, w, comp, link, *,
                linked=False, link_model=None, symmetric=False,
-               pin=_identity, pin_link=_identity):
+               pin=_identity, pin_link=_identity, t=None):
     """One communication phase on a flat ``(n, D)`` bank:
 
       compress -> split the link PRNG stream -> apply link drops ->
@@ -533,6 +558,10 @@ def comm_phase(compressor, mixer, P, X, w, comp, link, *,
     re-assert the bank's ``clients``-axis layout at the phase boundaries so
     the partitioner cannot rematerialize the bank replicated around the
     compressor/mixer reshapes.
+
+    ``t`` is the (traced) round index, consumed only by mixers with a
+    per-round schedule (the event-trigger threshold decay); ``None`` keeps
+    every fixed-schedule composition bitwise unchanged.
 
     Returns ``(X_mixed, w_new, comp, link, extras)``.
     """
@@ -548,7 +577,7 @@ def comm_phase(compressor, mixer, P, X, w, comp, link, *,
             dkey, lkey = jax.random.split(lkey)
             P = link_model.drop_links(dkey, P, symmetric=symmetric)
         link = pin_link(link)
-    Xm, w_new, link, extras = mixer.mix_round(P, Xc, w, link, lkey, X)
+    Xm, w_new, link, extras = mixer.mix_round(P, Xc, w, link, lkey, X, t=t)
     Xm = pin(Xm)
     if compressor.stateful:
         comp = pin(comp)

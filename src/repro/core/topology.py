@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -52,6 +52,8 @@ __all__ = [
     "sample_kout_selective_neighbors",
     "sample_symmetric_neighbors",
     "sample_neighbors",
+    "sample_active_picks",
+    "active_k_in",
     "neighbor_k_max",
     "dense_from_neighbors",
     "is_column_stochastic",
@@ -128,6 +130,16 @@ class LinkModel:
     drop: float = 0.0
     delay: int = 0
     event_threshold: float = 0.0
+    # Event-trigger *schedule* (adaptive communication censoring, DFL
+    # survey 2306.01603): the round-t threshold is
+    # ``event_schedule(t)`` when given, else
+    # ``event_threshold * event_decay ** t``.  ``event_decay == 1.0`` and
+    # ``event_schedule is None`` keep the fixed-threshold mixer bitwise
+    # (the decay branch is resolved at trace time).  A decaying threshold
+    # starts cheap (few clients moved far enough to transmit) and tightens
+    # toward full communication as training converges.
+    event_decay: float = 1.0
+    event_schedule: Any = None
 
     def __post_init__(self):
         if not 0.0 <= self.drop < 1.0:
@@ -136,6 +148,20 @@ class LinkModel:
             raise ValueError("delay bound must be >= 0")
         if self.event_threshold < 0.0:
             raise ValueError("event_threshold must be >= 0")
+        if not 0.0 < self.event_decay <= 1.0:
+            raise ValueError("event_decay must be in (0, 1]")
+        if self.event_schedule is not None and not callable(
+            self.event_schedule
+        ):
+            raise ValueError("event_schedule must be callable: t -> "
+                             "threshold")
+        if (self.event_decay != 1.0 or self.event_schedule is not None
+                ) and not self.event_threshold:
+            raise ValueError(
+                "event_decay / event_schedule modulate event-triggered "
+                "mixing; set event_threshold > 0 (the schedule's base / "
+                "round-0 value) to enable it"
+            )
         if self.delay and self.event_threshold:
             raise ValueError(
                 "delayed and event-triggered mixing do not compose; "
@@ -542,6 +568,80 @@ def sample_neighbors(
             return sample_kout_selective_neighbors(key, losses, n, k)
         return sample_kout_neighbors(key, n, k)
     raise ValueError(f"unknown topology kind: {cfg.kind}")
+
+
+# ---------------------------------------------------------------------------
+# Active-set (partial participation) in-neighbor sampling: the paged round.
+# ---------------------------------------------------------------------------
+
+def active_k_in(cfg: TopologyConfig) -> int:
+    """Static per-receiver in-degree of :func:`sample_active_picks` —
+    the fault-in closure of a paged round is at most
+    ``k_active * (active_k_in + 1)`` rows (each sampled client plus its
+    in-neighbors), which sizes the compact resident bank."""
+    if cfg.kind in ("ring", "exponential"):
+        return 1
+    if cfg.kind == "kout":
+        return cfg.k_out
+    if cfg.kind == "two_tier":
+        return cfg.n_clients // cfg.n_pods - 1 + cfg.k_out
+    raise ValueError(
+        f"topology kind {cfg.kind!r} has no active-set (paged) form: the "
+        "symmetric family needs consistent masks on both endpoints and "
+        "the full graph faults in everything"
+    )
+
+
+def sample_active_picks(
+    key: jax.Array, active: jnp.ndarray, cfg: TopologyConfig, t: int = 0
+) -> jnp.ndarray:
+    """In-neighbors of the round's active receivers, as **global** row ids.
+
+    ``active`` is the ``(k_active,)`` sampled client set; the return is the
+    fixed-shape ``(k_active, active_k_in(cfg))`` senders each active client
+    gathers from this round — exactly the rows the pager must fault in
+    beyond the active set itself (self-loops are implicit and never listed).
+    The sampled families draw the *same distribution* as their full-n
+    neighbor-list twins restricted to the active receivers: ring /
+    exponential are deterministic hops, ``kout`` picks k distinct uniform
+    in-neighbors per receiver, ``two_tier`` receives from its whole pod
+    plus k cross-pod picks.  ``t`` drives the time-varying exponential
+    hop (``2^(t mod log2 n)``), matching ``neighbors_exponential_cycle``.
+    """
+    n, k = cfg.n_clients, cfg.k_out
+    a = jnp.asarray(active, jnp.int32)
+    m = a.shape[0]
+    if cfg.kind == "ring":
+        return ((a - 1) % n)[:, None]
+    if cfg.kind == "exponential":
+        hops = max(int(np.ceil(np.log2(max(n, 2)))), 1)
+        step = 2 ** (t % hops) if cfg.time_varying else 1
+        return ((a - step) % n)[:, None]
+    if cfg.kind == "kout":
+        # Receiver-side k-in picks, scores masked at self — the restriction
+        # of sample_kout_neighbors to the active rows.
+        scores = jax.random.uniform(key, (m, n))
+        scores = scores.at[jnp.arange(m), a].add(-2.0)
+        _, picks = jax.lax.top_k(scores, k)
+        return picks.astype(jnp.int32)
+    if cfg.kind == "two_tier":
+        ps = n // cfg.n_pods
+        pod = a // ps
+        # All pod-mates except self, fixed shape (m, ps-1): rotate the
+        # in-pod offset so the self slot drops out.
+        off = (a % ps)[:, None] + 1 + jnp.arange(ps - 1)[None, :]
+        mates = pod[:, None] * ps + off % ps
+        scores = jax.random.uniform(key, (m, n))
+        scores = scores - 2.0 * (
+            pod[:, None] == (jnp.arange(n) // ps)[None, :]
+        )
+        _, cross = jax.lax.top_k(scores, k)
+        return jnp.concatenate(
+            [mates.astype(jnp.int32), cross.astype(jnp.int32)], axis=1
+        )
+    raise ValueError(
+        f"topology kind {cfg.kind!r} has no active-set (paged) form"
+    )
 
 
 # ---------------------------------------------------------------------------

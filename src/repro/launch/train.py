@@ -10,6 +10,16 @@ full round-state checkpoint.
 
   PYTHONPATH=src python -m repro.launch.train --arch xlstm-350m \
       --host-mesh --rounds 6 --superstep 3 --smoke
+
+``--paged`` switches to the virtual-client-population driver instead: a
+population of ``--n-clients`` synthetic-MNIST clients lives in a
+disk-backed store under ``--store-dir`` and each round pages in only the
+``--k-active`` sampled clients plus their in-neighbors (background
+prefetch, async write-back).  The checkpoint is the store itself;
+``--resume`` reopens it and continues bit-identically.
+
+  PYTHONPATH=src python -m repro.launch.train --paged --n-clients 4096 \
+      --k-active 256 --rounds 3 --store-dir /tmp/pop
 """
 from __future__ import annotations
 
@@ -18,6 +28,66 @@ import os
 import time
 
 import numpy as np
+
+
+def _paged_main(args):
+    """Virtual-client-population driver: disk-backed store, paged rounds."""
+    from repro.core.engine import FLTrainer, make_algo
+    from repro.core.topology import TopologyConfig
+    from repro.data.dirichlet import dirichlet_partition, stack_client_data
+    from repro.data.synthetic import DatasetSpec, make_dataset
+    from repro.models.small import tiny_mlp
+    from repro.store import ClientStore
+
+    if not args.store_dir:
+        raise SystemExit("--paged requires --store-dir")
+    if ClientStore.exists(args.store_dir) and not args.resume:
+        raise SystemExit(
+            f"{args.store_dir} already holds a client store; pass --resume "
+            "to continue it or point --store-dir somewhere fresh"
+        )
+    n = args.n_clients
+    spec = DatasetSpec("toy", (32,), 10, margin=3.0)
+    train, _ = make_dataset(spec, n * 8, 256, seed=0)
+    parts = dirichlet_partition(train["y"], n, alpha=0.3, seed=0)
+    cdata = stack_client_data(train, parts, pad_to=16)
+    model = tiny_mlp(in_dim=32, n_classes=10)
+    topo_kw = dict(kind=args.topology, n_clients=n, k_out=args.k_out)
+    if args.topology == "two_tier":
+        topo_kw["n_pods"] = max(n // 8, 2)
+    elif args.topology in ("ring", "exponential"):
+        topo_kw["k_out"] = 1
+    topo = TopologyConfig(**topo_kw)
+    algo = make_algo(
+        "dfedsgpsm", local_steps=args.local_steps, batch_size=args.batch,
+        lr=args.lr, alpha=args.alpha, rho=args.rho,
+        compressor=args.compress, topk_ratio=args.topk_ratio,
+    )
+    trainer = FLTrainer(
+        model.loss, model.init, cdata, algo, topo,
+        paged=True, store_dir=args.store_dir, k_active=args.k_active,
+    )
+    runner = trainer.runner
+    print(f"[train] paged population n={n} k_active={args.k_active} "
+          f"topology={args.topology} resident<={runner.resident_rows} rows "
+          f"(round {runner.round_index})")
+    r0 = runner.round_index
+    for i in range(args.rounds):
+        t0 = time.time()
+        m = trainer.run_round()
+        print(f"[train] round {r0 + i:4d} loss={m['loss']:.4f} "
+              f"acc={m['acc']:.4f} resident={int(m['rows_resident'])} "
+              f"mass_err={m['w_mass_closure_err']:.2e} "
+              f"dt={time.time() - t0:.2f}s", flush=True)
+    path = trainer.save()  # the checkpoint IS the store manifest
+    stats = runner.stats.as_dict()
+    mass = runner.total_mass()
+    print(f"[train] committed {path} at round {runner.round_index} | "
+          f"total_mass={mass:.4f} "
+          f"prefetch_hit_rate={stats['prefetch_hit_rate']:.3f} "
+          f"rows_faulted/round={stats['rows_faulted_per_round']:.1f}")
+    assert abs(mass - n) < 1e-3 * n
+    runner.close()
 
 
 def main():
@@ -63,8 +133,27 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--resume", action="store_true",
                     help="warm-restart from the latest checkpoint in "
-                         "--ckpt-dir (params + momentum + w + round)")
+                         "--ckpt-dir (params + momentum + w + round); with "
+                         "--paged, reopen the store in --store-dir")
+    ap.add_argument("--paged", action="store_true",
+                    help="virtual client population: the (n, D) bank lives "
+                         "in a disk-backed store and each round pages in "
+                         "only the sampled clients + their in-neighbors")
+    ap.add_argument("--n-clients", type=int, default=4096,
+                    help="population size (--paged; disk-bounded, not RAM)")
+    ap.add_argument("--k-active", type=int, default=256,
+                    help="sampled clients per round (--paged)")
+    ap.add_argument("--store-dir", default=None,
+                    help="client-store directory (--paged; required)")
+    ap.add_argument("--topology", default="kout",
+                    choices=["ring", "exponential", "kout", "two_tier"],
+                    help="graph family of the paged population")
+    ap.add_argument("--k-out", type=int, default=2,
+                    help="out-degree for kout/two_tier (--paged)")
     args = ap.parse_args()
+
+    if args.paged:
+        return _paged_main(args)
 
     if args.host_mesh and "xla_force_host_platform_device_count" not in \
             os.environ.get("XLA_FLAGS", ""):

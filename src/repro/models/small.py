@@ -15,7 +15,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["Model", "mnist_2nn", "cifar_cnn", "resnet18_gn", "get_model"]
+__all__ = ["Model", "mnist_2nn", "tiny_mlp", "cifar_cnn", "resnet18_gn",
+           "get_model"]
 
 
 def _dense_init(key, n_in, n_out, scale=None):
@@ -101,6 +102,28 @@ def mnist_2nn(n_classes: int = 10, in_dim: int = 784) -> Model:
         return x @ params["out"]["w"] + params["out"]["b"]
 
     return Model("mnist_2nn", init, apply)
+
+
+# ---------------------------------------------------------------------------
+# Deliberately small MLP for population-scale paging benches/tests: a row
+# is a few KB, so thousands of disk-backed clients cycle through the store
+# in seconds rather than hours.
+# ---------------------------------------------------------------------------
+
+def tiny_mlp(in_dim: int = 32, hidden: int = 32, n_classes: int = 10) -> Model:
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return {
+            "fc1": _dense_init(k1, in_dim, hidden),
+            "out": _dense_init(k2, hidden, n_classes),
+        }
+
+    def apply(params, x):
+        x = x.reshape(x.shape[0], -1)
+        x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+        return x @ params["out"]["w"] + params["out"]["b"]
+
+    return Model("tiny_mlp", init, apply)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,46 @@
+"""Virtual client population: disk-backed client store + paged training.
+
+The store keeps the full population's per-client state (params, momentum,
+EF residual, push-sum weight, last loss) in fsync'd row-chunk files behind
+a manifest; the paging layer keeps only each round's fault-in closure
+resident and overlaps next-round prefetch with this round's jitted compute.
+See :mod:`repro.store.paging` for the closure/operator semantics and
+:mod:`repro.store.paged` for the drivers.
+"""
+from repro.store.layout import STORE_FORMAT, FieldSpec
+from repro.store.paged import (
+    PagedRunner,
+    ResidentDriver,
+    bank_fields,
+    make_plan,
+)
+from repro.store.paging import (
+    PagerStats,
+    RoundPlan,
+    RowCache,
+    build_closure,
+    build_plan,
+    closure_bound,
+    dense_partial_operator,
+)
+from repro.store.prefetch import Prefetcher, Writeback
+from repro.store.store import ClientStore
+
+__all__ = [
+    "STORE_FORMAT",
+    "FieldSpec",
+    "ClientStore",
+    "PagedRunner",
+    "ResidentDriver",
+    "bank_fields",
+    "make_plan",
+    "PagerStats",
+    "RoundPlan",
+    "RowCache",
+    "build_closure",
+    "build_plan",
+    "closure_bound",
+    "dense_partial_operator",
+    "Prefetcher",
+    "Writeback",
+]

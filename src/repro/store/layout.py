@@ -1,0 +1,130 @@
+"""On-disk layout of the virtual client population store.
+
+A :class:`~repro.store.store.ClientStore` is one directory:
+
+    store/
+      manifest.json            # format version, n, rows_per_chunk, fields,
+                               # free-form scalar meta (round, PRNG key, ...)
+      template_params.npy      # one-row init template (broadcast init row)
+      rows_00000000.npz        # chunk: rows [0, rows_per_chunk)
+      rows_00000256.npz        # chunk: rows [256, 512), ...
+
+Every *field* is one per-client array (``params`` ``(D,)``, ``mom`` ``(D,)``,
+``ef`` ``(D,)``, ``w`` scalar, ``losses`` scalar); a chunk file stores the
+row-group slab of every field, so faulting one client touches exactly one
+file.  Chunks are **lazy**: a chunk file that was never written simply does
+not exist, and reads synthesize its rows from the field defaults / the
+one-row templates — creating a 1M-client store writes the manifest plus one
+template row, not 1M rows.  All writes are atomic (tmp + fsync + rename +
+directory fsync), so a checkpoint *is* the store manifest: whatever round
+the manifest names, every chunk on disk is consistent with it or older only
+through rows the round never dirtied.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+
+import numpy as np
+
+__all__ = [
+    "STORE_FORMAT",
+    "MANIFEST_NAME",
+    "FieldSpec",
+    "chunk_start",
+    "chunk_filename",
+    "template_filename",
+    "write_json_atomic",
+    "write_npz_atomic",
+    "fsync_dir",
+]
+
+# Bumped whenever the directory layout changes incompatibly.
+STORE_FORMAT = 1
+MANIFEST_NAME = "manifest.json"
+
+
+@dataclasses.dataclass(frozen=True)
+class FieldSpec:
+    """One per-client array of the store.
+
+    ``shape`` is the per-row trailing shape (``()`` for scalars).
+    ``default`` fills rows of chunks that were never written; a field may
+    instead carry a one-row template file (``template_<name>.npy``) — the
+    broadcast-init params row — which takes precedence over the scalar.
+    """
+
+    name: str
+    shape: tuple
+    dtype: str
+    default: float = 0.0
+
+    def to_json(self) -> dict:
+        return {
+            "shape": list(self.shape),
+            "dtype": self.dtype,
+            "default": self.default,
+        }
+
+    @classmethod
+    def from_json(cls, name: str, d: dict) -> "FieldSpec":
+        return cls(name, tuple(d["shape"]), str(d["dtype"]),
+                   float(d["default"]))
+
+    @property
+    def row_nbytes(self) -> int:
+        return int(np.dtype(self.dtype).itemsize * np.prod(self.shape,
+                                                           dtype=np.int64))
+
+
+def chunk_start(row: int, rows_per_chunk: int) -> int:
+    return (row // rows_per_chunk) * rows_per_chunk
+
+
+def chunk_filename(start: int) -> str:
+    return f"rows_{start:08d}.npz"
+
+
+def template_filename(field: str) -> str:
+    return f"template_{field}.npy"
+
+
+def fsync_dir(path: str):
+    """Make a rename in ``path`` durable (POSIX: fsync the directory fd)."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _atomic_write(path: str, writer):
+    """Write via tmp file + fsync + rename + dir fsync — a crashed writer
+    leaves either the old file or the new one, never a torn chunk."""
+    directory = os.path.dirname(os.path.abspath(path))
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            writer(f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+        raise
+    fsync_dir(directory)
+
+
+def write_json_atomic(path: str, obj: dict):
+    _atomic_write(path, lambda f: f.write(
+        json.dumps(obj, indent=1, sort_keys=True).encode()))
+
+
+def write_npz_atomic(path: str, arrays: dict):
+    def writer(f):
+        np.savez(f, **arrays)
+
+    _atomic_write(path, writer)

@@ -1,0 +1,561 @@
+"""Paged training: the virtual client population driver.
+
+``PagedRunner`` drives :meth:`repro.core.program.RoundProgram.step_active`
+over a disk-backed :class:`~repro.store.store.ClientStore`: per round it
+plans the fault-in closure (sampled active set ∪ their in-neighbors),
+assembles the compact ``(c_max, D)`` resident bank from carried rows /
+prefetched rows / the write-back cache / synchronous store faults, runs the
+jitted compact round, and while the device computes it already plans round
+t+1 and prefetches its new rows on a background thread; dirty rows write
+back asynchronously after the mix.  Device and host bank buffers are
+proportional to the closure bound, never to n — n is bounded by disk.
+
+``ResidentDriver`` is the fully-resident reference: the identical PRNG
+chain (:func:`repro.core.program.plan_keys`) and the identical
+closure-masked mixing operator, executed on a full ``(n, D)`` bank with a
+dense matrix.  Paged == resident to float tolerance is the subsystem's
+correctness contract, pinned by ``tests/test_store.py``.
+
+A checkpoint *is* the store: ``save()`` flushes the write-back queue and
+commits ``(round, key)`` into the manifest; re-opening the directory
+resumes bit-identically.
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pushsum, topology
+from repro.core.program import ActiveSlots, FLState, plan_keys
+from repro.core.stages import IdentityCompressor, _selfloop_correction
+from repro.store import paging
+from repro.store.layout import FieldSpec
+from repro.store.paging import PagerStats, RowCache, RoundPlan
+from repro.store.prefetch import Prefetcher, Writeback
+from repro.store.store import ClientStore
+
+__all__ = ["PagedRunner", "ResidentDriver", "make_plan", "bank_fields"]
+
+_PAGED_KINDS = ("ring", "exponential", "kout", "two_tier")
+
+
+def _check_paged_program(program):
+    if program.mixer.kind != "directed" or program.linked:
+        raise ValueError(
+            "paged training is directed push-sum only (no link scenarios: "
+            "delayed/event mixers carry full-population state)"
+        )
+    if program.selection:
+        raise ValueError(
+            "loss-selective neighbor sampling reads every client's loss — "
+            "it has no paged form"
+        )
+    if program.mesh is not None:
+        raise ValueError("paged training is single-host; drop the mesh")
+    if program.topo.kind not in _PAGED_KINDS:
+        raise ValueError(
+            f"topology kind {program.topo.kind!r} has no paged form "
+            f"(supported: {_PAGED_KINDS})"
+        )
+
+
+def bank_fields(program) -> dict:
+    """The store schema of one client row under ``program``'s composition:
+    params (+ the broadcast init template), momentum, push-sum weight,
+    last loss, and the EF residual iff the compressor is stateful."""
+    D = program.spec.dim
+    fields = {
+        "params": FieldSpec("params", (D,), str(program.spec.dtype)),
+        "mom": FieldSpec("mom", (D,), "float32"),
+        "w": FieldSpec("w", (), "float32", default=1.0),
+        "losses": FieldSpec("losses", (), "float32"),
+    }
+    if program.compressor.stateful:
+        fields["ef"] = FieldSpec("ef", (D,), "float32")
+    return fields
+
+
+def _key_words(key) -> list:
+    kd = np.asarray(jax.random.key_data(key)) if jnp.issubdtype(
+        key.dtype, jax.dtypes.prng_key) else np.asarray(key)
+    return [int(x) for x in kd.ravel()]
+
+
+def _key_from_words(words) -> jax.Array:
+    return jnp.asarray(np.asarray(words, dtype=np.uint32))
+
+
+def make_plan(topo, k_active: int, c_max: int, key, t: int) -> RoundPlan:
+    """One round's host-side plan off the shared PRNG chain: sample the
+    active set, its in-neighbor picks, and build the compact operator."""
+    key_next, akey, tkey, ckey_base = plan_keys(key)
+    active = np.asarray(
+        jax.random.permutation(akey, topo.n_clients)
+    )[:k_active]
+    picks = np.asarray(topology.sample_active_picks(
+        tkey, jnp.asarray(active, jnp.int32), topo, t=t
+    ))
+    return paging.build_plan(
+        t, key, key_next, ckey_base, active, picks, c_max
+    )
+
+
+class PagedRunner:
+    """Disk-backed partial-participation training (see module docstring).
+
+    Args:
+      program: a :class:`~repro.core.program.RoundProgram` (directed
+        push-sum, link-free, unmeshed).  Its client data must be host
+        (numpy) addressable — only the active rows are ever device_put.
+      store_dir: the store directory; created if absent, resumed from its
+        manifest if it already holds a store.
+      k_active: sampled clients per round (static — sizes the jit).
+      rows_per_chunk: chunk-file row granularity for fresh stores.
+      prefetch: overlap round t+1's closure loads with round t's compute.
+      lru_rows: clean-row cache capacity (default ``4 * c_max``).
+    """
+
+    def __init__(
+        self,
+        program,
+        store_dir: str,
+        k_active: int,
+        *,
+        seed: int = 0,
+        rows_per_chunk: int = 256,
+        prefetch: bool = True,
+        lru_rows: int | None = None,
+    ):
+        _check_paged_program(program)
+        if not 1 <= k_active <= program.n:
+            raise ValueError(
+                f"k_active must be in [1, n={program.n}], got {k_active}"
+            )
+        self.program = program
+        self.topo = program.topo
+        self.n = program.n
+        self.k_active = int(k_active)
+        self.k_in = topology.active_k_in(self.topo)
+        self.c_max = paging.closure_bound(self.n, k_active, self.k_in)
+        self.prefetch_enabled = bool(prefetch)
+        self.stats = PagerStats()
+        self._fields = bank_fields(program)
+        self._spec_meta = _spec_fingerprint(program.spec)
+
+        # The same key chain as program.init: pkey initializes the model
+        # row, skey seeds the round chain.
+        key = jax.random.PRNGKey(seed)
+        pkey, skey = jax.random.split(key)
+        if ClientStore.exists(store_dir):
+            self.store = ClientStore.open(store_dir)
+            self._validate_store()
+            meta = self.store.meta
+            self._key = _key_from_words(meta["key"])
+            self._round = int(meta["round"])
+        else:
+            row = np.asarray(program.spec.ravel(program.init_fn(pkey)))
+            self.store = ClientStore.create(
+                store_dir, self.n, self._fields,
+                rows_per_chunk=rows_per_chunk,
+                templates={"params": row},
+                meta={
+                    "round": 0,
+                    "key": _key_words(skey),
+                    "spec": self._spec_meta,
+                },
+            )
+            self._key = skey
+            self._round = 0
+
+        # Client data stays on the host; only active slices reach the
+        # device (k_active rows per round, not n).
+        self._data = jax.tree.map(np.asarray, program.data)
+
+        self.cache = RowCache(lru_rows if lru_rows is not None
+                              else 4 * self.c_max)
+        self.writeback = Writeback(self.store, self.cache)
+        self.prefetcher = (
+            Prefetcher(self.store, self.cache)
+            if self.prefetch_enabled else None
+        )
+        # Double-buffered host staging: round t+1 assembles into the other
+        # buffer while round t's arrays may still back in-flight transfers.
+        self._staging = [self._alloc_staging(), self._alloc_staging()]
+        self._buf_i = 0
+        self._carry: dict | None = None   # closure(t-1) output rows
+        self._next_plan: RoundPlan | None = None
+        self._next_fetch = None
+        self._step = jax.jit(
+            functools.partial(
+                self.program.step_active, k_active=self.k_active
+            ),
+            donate_argnums=(0,),
+        )
+
+    # -- accounting hooks the acceptance tests read ---------------------------
+
+    @property
+    def resident_rows(self) -> int:
+        """Rows per device bank buffer — the closure bound, not n."""
+        return self.c_max
+
+    @property
+    def staging_rows(self) -> int:
+        """Host staging rows (double buffer)."""
+        return 2 * self.c_max
+
+    @property
+    def round_index(self) -> int:
+        return self._round
+
+    def _alloc_staging(self) -> dict:
+        return {
+            name: np.zeros((self.c_max,) + f.shape, dtype=f.dtype)
+            for name, f in self._fields.items()
+        }
+
+    def _validate_store(self):
+        if self.store.n != self.n:
+            raise ValueError(
+                f"store holds n={self.store.n} clients, program has "
+                f"{self.n}"
+            )
+        if set(self.store.fields) != set(self._fields):
+            raise ValueError(
+                f"store fields {sorted(self.store.fields)} do not match "
+                f"the program composition {sorted(self._fields)} — it was "
+                "created from a different stage composition"
+            )
+        meta = self.store.meta
+        if meta.get("spec") != self._spec_meta:
+            raise ValueError("store model structure mismatch")
+
+    # -- the paged round -------------------------------------------------------
+
+    def _lookup(self, gid: int, carried: dict, fetched: dict):
+        if carried is not None:
+            row = carried.get(gid)
+            if row is not None:
+                self.stats.rows_carried += 1
+                return row
+        row = fetched.get(gid)
+        if row is not None:
+            self.stats.rows_prefetched += 1
+            return row
+        row = self.cache.get(gid)
+        if row is not None:
+            self.stats.rows_cache_hit += 1
+        return row
+
+    def _assemble(self, plan: RoundPlan) -> dict:
+        """Fill one staging buffer with the closure rows (pads already
+        zero/default from allocation and the post-fill reset below)."""
+        buf = self._staging[self._buf_i]
+        self._buf_i ^= 1
+        fetched: dict = {}
+        if self._next_fetch is not None:
+            t0 = time.perf_counter()
+            fetched = self._next_fetch.wait()
+            self.stats.prefetch_wait_s += time.perf_counter() - t0
+            self.stats.prefetch_busy_s += self._next_fetch.busy_s
+            self._next_fetch = None
+        carried = self._carry
+        misses = []
+        self.stats.rows_needed += plan.c
+        for s in range(plan.c):
+            gid = int(plan.closure[s])
+            row = self._lookup(gid, carried, fetched)
+            if row is None:
+                misses.append((s, gid))
+                continue
+            for name in self._fields:
+                buf[name][s] = row[name]
+        if misses:
+            self.stats.rows_faulted += len(misses)
+            stacked = self.store.read_rows(
+                np.asarray([g for _, g in misses], dtype=np.int64)
+            )
+            for i, (s, gid) in enumerate(misses):
+                row = {k: v[i] for k, v in stacked.items()}
+                self.cache.put_clean(gid, row)
+                for name in self._fields:
+                    buf[name][s] = row[name]
+        # Pad slots: inert identity rows (zero params/mom/ef/losses, unit
+        # push-sum weight).
+        for name, f in self._fields.items():
+            buf[name][plan.c:] = 1.0 if name == "w" else 0.0
+        return buf
+
+    def _device_state(self, plan: RoundPlan, buf: dict) -> FLState:
+        comp = (
+            jnp.array(buf["ef"])
+            if self.program.compressor.stateful else ()
+        )
+        return FLState(
+            params=jnp.array(buf["params"]),
+            mom=jnp.array(buf["mom"]),
+            w=jnp.array(buf["w"]),
+            key=plan.ckey_base,
+            round=jnp.int32(plan.t),
+            losses=jnp.array(buf["losses"]),
+            comp=comp,
+            link=(),
+        )
+
+    def run_round(self) -> dict:
+        plan = self._next_plan or make_plan(
+            self.topo, self.k_active, self.c_max, self._key, self._round
+        )
+        self._next_plan = None
+        buf = self._assemble(plan)
+        state = self._device_state(plan, buf)
+        slots = ActiveSlots(
+            ids=jnp.asarray(plan.ids, jnp.int32),
+            idx=jnp.asarray(plan.idx),
+            wgt=jnp.asarray(plan.wgt),
+        )
+        data_active = jax.tree.map(
+            lambda d: jnp.asarray(d[plan.active]), self._data
+        )
+        w_in_sum = float(np.asarray(buf["w"][:plan.c], np.float64).sum())
+        out_state, metrics = self._step(state, slots, data_active)
+
+        # While the device computes: plan round t+1 and prefetch the rows
+        # its closure adds over this round's (the rest ride the carry).
+        next_plan = make_plan(
+            self.topo, self.k_active, self.c_max, plan.key_next, plan.t + 1
+        )
+        if self.prefetcher is not None:
+            new_ids = np.setdiff1d(next_plan.closure, plan.closure)
+            self._next_fetch = self.prefetcher.submit(new_ids)
+        self._next_plan = next_plan
+
+        # Block on the round's outputs; one transfer of the compact bank.
+        host_state, host_metrics = jax.device_get((out_state, metrics))
+        c = plan.c
+        out_rows = {
+            "params": np.asarray(host_state.params[:c]),
+            "mom": np.asarray(host_state.mom[:c]),
+            "w": np.asarray(host_state.w[:c]),
+            "losses": np.asarray(host_state.losses[:c]),
+        }
+        if self.program.compressor.stateful:
+            out_rows["ef"] = np.asarray(host_state.comp[:c])
+        carried = {}
+        for s in range(c):
+            gid = int(plan.closure[s])
+            row = {k: v[s] for k, v in out_rows.items()}
+            carried[gid] = row
+            self.cache.put_pending(gid, row)
+        self.writeback.enqueue(plan.closure, out_rows)
+        self.stats.writeback_rows += c
+        self.stats.chunks_written = self.store.chunks_written
+        self._carry = carried
+        self._key = plan.key_next
+        self._round = plan.t + 1
+        self.stats.rounds += 1
+
+        w_out_sum = float(np.asarray(out_rows["w"], np.float64).sum())
+        rec = {k: float(v) for k, v in host_metrics.items()}
+        # The compact operator keeps all closure mass inside the closure
+        # (non-closure columns are identity), so in == out up to the
+        # gather's float accumulation — the per-round conservation check.
+        rec["w_mass_closure_err"] = abs(w_out_sum - w_in_sum)
+        rec["w_sum"] = w_out_sum + float(self.c_max - c) * 0.0  # closure only
+        rec["rows_resident"] = c
+        return rec
+
+    def fit(self, rounds: int, log=None) -> list:
+        history = []
+        for _ in range(rounds):
+            rec = {"round": self._round, **self.run_round()}
+            history.append(rec)
+            if log:
+                log(rec)
+        return history
+
+    # -- whole-population reductions (streamed over chunks) --------------------
+
+    def flush(self):
+        """Drain the write-back queue (every dirty row durable)."""
+        self.writeback.flush()
+
+    def total_mass(self) -> float:
+        """Exact streaming sum of push-sum weights over all n rows —
+        the ``sum_i w_i == n`` invariant, cold population included."""
+        self.flush()
+        return float(self.store.field_sum("w"))
+
+    def mean_params(self) -> np.ndarray:
+        """Consensus model row: the population mean of the params bank,
+        streamed chunk-by-chunk (never materializes (n, D))."""
+        self.flush()
+        return (self.store.field_sum("params") / self.n).astype(
+            self.store.fields["params"].dtype
+        )
+
+    def consensus_error(self) -> float:
+        """Mean squared distance of de-biased rows from the bank mean —
+        the paged twin of ``pushsum.consensus_error_bank``, two streaming
+        passes over the store."""
+        self.flush()
+        mean = self.store.field_sum("params") / self.n
+        total = 0.0
+        for _, chunk in self.store.iter_chunks(fields=["params", "w"]):
+            z = chunk["params"].astype(np.float64) / chunk["w"].astype(
+                np.float64)[:, None]
+            total += float(((z - mean[None, :]) ** 2).sum())
+        return total / self.n
+
+    def read_rows(self, ids) -> dict:
+        """Durable values of ``ids`` (flushes the write-back queue first)."""
+        self.flush()
+        return self.store.read_rows(np.asarray(ids, dtype=np.int64))
+
+    # -- checkpointing: the checkpoint IS the store ----------------------------
+
+    def save(self) -> str:
+        """Commit: flush dirty rows, then atomically stamp ``(round, key)``
+        into the manifest.  Returns the store path."""
+        self.flush()
+        self.store.update_meta(
+            round=self._round, key=_key_words(self._key)
+        )
+        return self.store.path
+
+    def restore(self, path: str | None = None):
+        """Re-sync to the last committed manifest: re-reads ``(round, key)``
+        and drops carried/cached rows so the next round faults from durable
+        chunks.  Row data is durable state that advances in place — resume
+        is bit-identical when no rounds ran since the ``save()`` (the normal
+        stop/reopen flow); it is not an in-place rollback."""
+        if path is not None and ClientStore.open(path).path != self.store.path:
+            raise ValueError(
+                "a paged trainer restores from its own store directory; "
+                f"got {path!r}, store is {self.store.path!r}"
+            )
+        self.flush()
+        self.store = ClientStore.open(self.store.path)
+        self._validate_store()
+        meta = self.store.meta
+        self._key = _key_from_words(meta["key"])
+        self._round = int(meta["round"])
+        self.cache = RowCache(self.cache.capacity)
+        self.writeback.close()
+        self.writeback = Writeback(self.store, self.cache)
+        if self.prefetcher is not None:
+            self.prefetcher.close()
+            self.prefetcher = Prefetcher(self.store, self.cache)
+        self._carry = None
+        self._next_plan = None
+        self._next_fetch = None
+
+    def close(self):
+        self.writeback.flush()
+        self.writeback.close()
+        if self.prefetcher is not None:
+            self.prefetcher.close()
+
+
+def _spec_fingerprint(spec) -> dict:
+    from repro.checkpoint.io import _spec_meta
+
+    m = _spec_meta(spec)
+    return {k: m[k] for k in ("offsets", "shapes", "dtypes", "dim", "dtype")}
+
+
+class ResidentDriver:
+    """Fully-resident reference for the paged round: identical PRNG chain
+    and closure-masked operator, full ``(n, D)`` bank, dense mixing.
+    Exists for the paged == resident equivalence tests and benches; it
+    deliberately materializes everything the pager avoids."""
+
+    def __init__(self, program, k_active: int, *, seed: int = 0):
+        _check_paged_program(program)
+        self.program = program
+        self.topo = program.topo
+        self.n = program.n
+        self.k_active = int(k_active)
+        self.k_in = topology.active_k_in(self.topo)
+        self.c_max = paging.closure_bound(self.n, k_active, self.k_in)
+
+        key = jax.random.PRNGKey(seed)
+        pkey, skey = jax.random.split(key)
+        row = program.spec.ravel(program.init_fn(pkey))
+        bank = jnp.broadcast_to(row, (self.n, program.spec.dim))
+        self.state = FLState(
+            params=bank,
+            mom=jnp.zeros((self.n, program.spec.dim), jnp.float32),
+            w=jnp.ones((self.n,), jnp.float32),
+            key=skey,
+            round=jnp.int32(0),
+            losses=jnp.zeros((self.n,), jnp.float32),
+            comp=program.compressor.init_state(self.n, program.spec.dim),
+            link=(),
+        )
+        self._key = skey
+        self._round = 0
+        # Device-resident client data: the traced active gather needs jnp.
+        self._data = jax.tree.map(jnp.asarray, program.data)
+        self._step = jax.jit(self._step_impl, donate_argnums=0)
+
+    def _step_impl(self, state, P, mask, active, ckey_base):
+        prog = self.program
+        lr = prog.lr * prog.lr_decay ** state.round.astype(jnp.float32)
+        ckeys = jax.vmap(
+            lambda i: jax.random.fold_in(ckey_base, i)
+        )(active)
+        data_a = jax.tree.map(lambda d: d[active], self._data)
+        Xa, Va, losses, accs = prog.solver.update(
+            prog.loss_fn, prog.spec, state.params[active], state.w[active],
+            ckeys, data_a, lr,
+        )
+        X = state.params.at[active].set(Xa)
+        mom = state.mom.at[active].set(Va)
+        # Closure-restricted compression: only transmitting rows compress
+        # (and, for EF, commit residuals) — rows outside the closure have
+        # identity columns and never touch the network this round.
+        if isinstance(prog.compressor, IdentityCompressor):
+            comp, Xc = state.comp, X
+        else:
+            comp_new, Xc_all = prog.compressor.apply(state.comp, X)
+            Xc = jnp.where(mask[:, None], Xc_all, X)
+            comp = (
+                jnp.where(mask[:, None], comp_new, state.comp)
+                if prog.compressor.stateful else state.comp
+            )
+        mixed = pushsum.gossip_bank(P, Xc, prog.mixer.backend)
+        mixed = _selfloop_correction(P, Xc, X, mixed)
+        w_new = pushsum.gossip_weights(P, state.w)
+        losses_n = state.losses.at[active].set(losses)
+        new_state = FLState(
+            mixed, mom, w_new, state.key, state.round + 1, losses_n,
+            comp, (),
+        )
+        metrics = {
+            "loss": losses.mean(), "acc": accs.mean(),
+            "w_sum": w_new.sum(),
+        }
+        return new_state, metrics
+
+    def run_round(self) -> dict:
+        plan = make_plan(
+            self.topo, self.k_active, self.c_max, self._key, self._round
+        )
+        P = paging.dense_partial_operator(plan.active, plan.picks, self.n)
+        mask = np.zeros((self.n,), bool)
+        mask[plan.closure] = True
+        self.state, metrics = self._step(
+            self.state, P, jnp.asarray(mask),
+            jnp.asarray(plan.active, jnp.int32), plan.ckey_base,
+        )
+        self._key = plan.key_next
+        self._round = plan.t + 1
+        return {k: float(v) for k, v in metrics.items()}
+
+    def total_mass(self) -> float:
+        return float(np.asarray(self.state.w, np.float64).sum())

@@ -1,0 +1,249 @@
+"""Row-granular chunked on-disk client store.
+
+``ClientStore`` keeps one row per client for every registered field
+(params / momentum / EF residual / push-sum weight / last loss) in
+``rows_per_chunk``-row chunk files, each written atomically with fsync.
+Reads and writes take arbitrary global row-id sets and touch only the
+chunks those ids fall into; chunks that were never written are synthesized
+from the field defaults / init templates, so store creation is O(1) in n.
+
+This is a host-side subsystem — numpy only, no jax — the paging layer
+(:mod:`repro.store.paging`) owns device placement.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.store.layout import (
+    MANIFEST_NAME,
+    STORE_FORMAT,
+    FieldSpec,
+    chunk_filename,
+    template_filename,
+    write_json_atomic,
+    write_npz_atomic,
+)
+
+__all__ = ["ClientStore"]
+
+
+class ClientStore:
+    """A directory of chunked per-client rows behind a manifest.
+
+    Use :meth:`create` / :meth:`open`; the constructor takes a parsed
+    manifest.  All row ids are global ``[0, n)`` ints; ``read_rows`` /
+    ``write_rows`` move ``{field: (k, *field.shape)}`` stacks.
+    """
+
+    def __init__(self, path: str, manifest: dict):
+        self.path = os.path.abspath(path)
+        if manifest.get("format", 0) > STORE_FORMAT:
+            raise ValueError(
+                f"store {path} has format {manifest['format']} > supported "
+                f"{STORE_FORMAT}; upgrade the reader"
+            )
+        self.n = int(manifest["n"])
+        self.rows_per_chunk = int(manifest["rows_per_chunk"])
+        self.fields = {
+            name: FieldSpec.from_json(name, d)
+            for name, d in manifest["fields"].items()
+        }
+        self._meta = dict(manifest.get("meta", {}))
+        self._templates: dict[str, np.ndarray | None] = {}
+        # Bytes actually written to chunk files (lazy chunks excluded) —
+        # the allocation-accounting tests read this.
+        self.bytes_written = 0
+        self.chunks_written = 0
+
+    # -- construction ---------------------------------------------------------
+
+    @classmethod
+    def create(
+        cls,
+        path: str,
+        n: int,
+        fields: dict[str, FieldSpec],
+        rows_per_chunk: int = 256,
+        templates: dict[str, np.ndarray] | None = None,
+        meta: dict | None = None,
+    ) -> "ClientStore":
+        """Initialize a fresh store directory (refuses to clobber one)."""
+        if n <= 0:
+            raise ValueError("n must be positive")
+        if rows_per_chunk <= 0:
+            raise ValueError("rows_per_chunk must be positive")
+        os.makedirs(path, exist_ok=True)
+        mpath = os.path.join(path, MANIFEST_NAME)
+        if os.path.exists(mpath):
+            raise FileExistsError(
+                f"{path} already holds a client store; open() it instead"
+            )
+        manifest = {
+            "format": STORE_FORMAT,
+            "n": int(n),
+            "rows_per_chunk": int(rows_per_chunk),
+            "fields": {name: f.to_json() for name, f in fields.items()},
+            "meta": dict(meta or {}),
+        }
+        for name, row in (templates or {}).items():
+            spec = fields[name]
+            row = np.asarray(row, dtype=spec.dtype)
+            if row.shape != spec.shape:
+                raise ValueError(
+                    f"template for {name!r} has shape {row.shape}, "
+                    f"field expects {spec.shape}"
+                )
+            with open(os.path.join(path, template_filename(name)), "wb") as f:
+                np.save(f, row)
+                f.flush()
+                os.fsync(f.fileno())
+        write_json_atomic(mpath, manifest)
+        return cls(path, manifest)
+
+    @classmethod
+    def open(cls, path: str) -> "ClientStore":
+        mpath = os.path.join(path, MANIFEST_NAME)
+        with open(mpath) as f:
+            return cls(path, json.load(f))
+
+    @staticmethod
+    def exists(path: str) -> bool:
+        return os.path.exists(os.path.join(path, MANIFEST_NAME))
+
+    # -- metadata -------------------------------------------------------------
+
+    @property
+    def meta(self) -> dict:
+        return dict(self._meta)
+
+    def update_meta(self, **kv):
+        """Merge scalar metadata (round counter, PRNG key words, config
+        fingerprints) into the manifest, atomically and durably — this is
+        the store's checkpoint commit point."""
+        self._meta.update(kv)
+        write_json_atomic(
+            os.path.join(self.path, MANIFEST_NAME),
+            {
+                "format": STORE_FORMAT,
+                "n": self.n,
+                "rows_per_chunk": self.rows_per_chunk,
+                "fields": {k: f.to_json() for k, f in self.fields.items()},
+                "meta": self._meta,
+            },
+        )
+
+    def template(self, field: str) -> np.ndarray | None:
+        if field not in self._templates:
+            p = os.path.join(self.path, template_filename(field))
+            self._templates[field] = np.load(p) if os.path.exists(p) else None
+        return self._templates[field]
+
+    @property
+    def row_nbytes(self) -> int:
+        return sum(f.row_nbytes for f in self.fields.values())
+
+    # -- chunk materialization -------------------------------------------------
+
+    def _default_chunk(self, start: int) -> dict:
+        rows = min(self.rows_per_chunk, self.n - start)
+        out = {}
+        for name, spec in self.fields.items():
+            tpl = self.template(name)
+            if tpl is not None:
+                out[name] = np.broadcast_to(
+                    tpl, (rows,) + spec.shape
+                ).copy()
+            else:
+                out[name] = np.full(
+                    (rows,) + spec.shape, spec.default, dtype=spec.dtype
+                )
+        return out
+
+    def _load_chunk(self, start: int) -> dict:
+        p = os.path.join(self.path, chunk_filename(start))
+        if not os.path.exists(p):
+            return self._default_chunk(start)
+        with np.load(p) as data:
+            return {name: data[name] for name in self.fields}
+
+    def _chunk_groups(self, ids: np.ndarray):
+        """Group sorted positions of ``ids`` by owning chunk."""
+        ids = np.asarray(ids, dtype=np.int64)
+        if ids.size and (ids.min() < 0 or ids.max() >= self.n):
+            raise IndexError(f"row ids out of range [0, {self.n})")
+        starts = (ids // self.rows_per_chunk) * self.rows_per_chunk
+        order = np.argsort(starts, kind="stable")
+        groups = []
+        i = 0
+        while i < len(order):
+            j = i
+            s = starts[order[i]]
+            while j < len(order) and starts[order[j]] == s:
+                j += 1
+            groups.append((int(s), order[i:j]))
+            i = j
+        return ids, groups
+
+    # -- row I/O ---------------------------------------------------------------
+
+    def read_rows(self, ids, fields=None) -> dict:
+        """Gather rows ``ids`` (any order, duplicates allowed) into
+        ``{field: (len(ids), *shape)}`` stacks, in the order given."""
+        names = list(fields) if fields is not None else list(self.fields)
+        ids, groups = self._chunk_groups(ids)
+        out = {
+            name: np.empty(
+                (len(ids),) + self.fields[name].shape,
+                dtype=self.fields[name].dtype,
+            )
+            for name in names
+        }
+        for start, pos in groups:
+            chunk = self._load_chunk(start)
+            local = ids[pos] - start
+            for name in names:
+                out[name][pos] = chunk[name][local]
+        return out
+
+    def write_rows(self, ids, values: dict):
+        """Scatter row stacks back, read-modify-writing each touched chunk
+        atomically.  ``values`` may cover any subset of the fields; ids
+        must be unique."""
+        ids, groups = self._chunk_groups(ids)
+        if len(np.unique(ids)) != len(ids):
+            raise ValueError("write_rows ids must be unique")
+        unknown = set(values) - set(self.fields)
+        if unknown:
+            raise KeyError(f"unknown store fields: {sorted(unknown)}")
+        for start, pos in groups:
+            chunk = self._load_chunk(start)
+            local = ids[pos] - start
+            for name, stacked in values.items():
+                chunk[name][local] = np.asarray(
+                    stacked, dtype=self.fields[name].dtype
+                )[pos]
+            path = os.path.join(self.path, chunk_filename(start))
+            write_npz_atomic(path, chunk)
+            self.chunks_written += 1
+            self.bytes_written += sum(a.nbytes for a in chunk.values())
+
+    def iter_chunks(self, fields=None):
+        """Stream ``(start, {field: slab})`` over the whole population in
+        row order — lazy chunks synthesized — without ever holding more
+        than one chunk in memory.  The paged trainer's full-bank reductions
+        (consensus mean, total push-sum mass) are built on this."""
+        names = list(fields) if fields is not None else list(self.fields)
+        for start in range(0, self.n, self.rows_per_chunk):
+            chunk = self._load_chunk(start)
+            yield start, {name: chunk[name] for name in names}
+
+    def field_sum(self, field: str, dtype=np.float64):
+        """Exact streaming sum of one scalar/vector field over all n rows."""
+        spec = self.fields[field]
+        total = np.zeros(spec.shape, dtype=dtype)
+        for _, chunk in self.iter_chunks(fields=[field]):
+            total += chunk[field].astype(dtype).sum(axis=0)
+        return total

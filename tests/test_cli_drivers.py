@@ -82,6 +82,29 @@ def test_train_cli_unreliable_links(tmp_path):
     assert "w_mass=2.0000" in r2.stdout
 
 
+def test_train_cli_paged_population_resume(tmp_path):
+    """--paged: the virtual client population trains against the
+    disk-backed store, commits the manifest, and --resume reopens it at
+    the committed round; a second run without --resume must refuse to
+    clobber the store."""
+    store = str(tmp_path / "pop")
+    base = ["repro.launch.train", "--paged", "--n-clients", "256",
+            "--k-active", "16", "--rounds", "2", "--store-dir", store]
+    r = _run(base)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "paged population n=256" in r.stdout
+    assert "committed" in r.stdout and "total_mass=256.0000" in r.stdout
+    assert "prefetch_hit_rate=" in r.stdout
+    r_clobber = _run(base)
+    assert r_clobber.returncode != 0
+    assert "already holds a client store" in (r_clobber.stdout
+                                              + r_clobber.stderr)
+    r2 = _run(base + ["--resume"])
+    assert r2.returncode == 0, r2.stderr[-2000:]
+    assert "round    2" in r2.stdout  # continues at the committed round
+    assert "at round 4" in r2.stdout
+
+
 def test_serve_cli():
     r = _run(["repro.launch.serve", "--arch", "glm4-9b", "--smoke",
               "--batch", "2", "--prompt-len", "8", "--new-tokens", "4"])

@@ -391,6 +391,91 @@ def test_event_triggered_run_reports_comm_fraction(setting):
     assert all(abs(rec["w_mass"] - N_CLIENTS) < 1e-3 for rec in hist)
 
 
+# ---------------------------------------------------------------------------
+# Event-threshold schedules: decaying / callable communication censoring.
+# ---------------------------------------------------------------------------
+
+def test_threshold_at_resolves_decay_and_schedule():
+    """`threshold * decay ** t` when decaying, the callable when given
+    (schedule overrides decay), the plain python float when fixed — and a
+    loud error when a schedule needs the round index but none is threaded."""
+    m = EventTriggeredMixer(threshold=4.0, decay=0.5)
+    assert float(m._threshold_at(3)) == pytest.approx(0.5)
+    m = EventTriggeredMixer(threshold=5.0, decay=0.5,
+                            schedule=lambda t: 7.0 - t)
+    assert float(m._threshold_at(2)) == pytest.approx(5.0)
+    fixed = EventTriggeredMixer(threshold=0.25)
+    assert fixed._threshold_at(None) == 0.25  # resolved at trace time
+    with pytest.raises(ValueError, match="round"):
+        EventTriggeredMixer(threshold=1.0, decay=0.9)._threshold_at(None)
+
+
+def test_decaying_threshold_crosses_known_drift_at_known_round():
+    """Rows with drift of exactly 1.4 start transmitting the first round
+    the decayed threshold falls below that — the trend the schedule exists
+    to produce (sparse early, full gossip late), pinned deterministically
+    against a cold cache each round."""
+    n, d = 6, 4
+    X = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    X = 1.4 * X / jnp.linalg.norm(X, axis=1, keepdims=True)
+    P = topo.directed_ring(n)
+    mixer = EventTriggeredMixer(threshold=4.0, decay=0.5)
+    fracs = []
+    for t in range(4):
+        link = LinkState(key=jax.random.PRNGKey(1),
+                         **mixer.link_buffers(jnp.zeros((n, d))))
+        _, w, _, ex = mixer.mix_round(P, X, jnp.ones((n,)), link, None, X,
+                                      t=t)
+        fracs.append(float(ex["comm_fraction"]))
+        np.testing.assert_allclose(float(w.sum()), n, rtol=1e-5)
+    # thresholds 4, 2, 1, 0.5 against drift 1.4: cross between t=1 and t=2
+    assert fracs == [0.0, 0.0, 1.0, 1.0]
+
+
+def test_event_schedule_raises_comm_fraction_over_training(setting):
+    """End to end: a decaying threshold starts mute (the round-0 threshold
+    dwarfs any local-step drift) and tightens toward full gossip —
+    comm_fraction trends up across the run while push-sum mass stays exact
+    every round."""
+    tr = _trainer(setting, link=LinkModel(event_threshold=1e3,
+                                          event_decay=0.1))
+    assert isinstance(tr.program.mixer, EventTriggeredMixer)
+    hist = tr.fit(8)
+    fracs = [rec["comm_fraction"] for rec in hist]
+    assert fracs[0] == 0.0
+    assert fracs[-1] > 0.0
+    assert max(fracs[4:]) > max(fracs[:2])
+    assert all(abs(rec["w_mass"] - N_CLIENTS) < 1e-3 for rec in hist)
+
+
+def test_constant_schedule_matches_fixed_threshold_bitwise(setting):
+    """A schedule that returns the fixed value must reproduce the fixed-
+    threshold program exactly: the traced-threshold branch may not perturb
+    a single send decision or bit of state."""
+    a = _trainer(setting, link=LinkModel(event_threshold=0.05))
+    b = _trainer(setting, link=LinkModel(event_threshold=0.05,
+                                         event_schedule=lambda t: 0.05))
+    for _ in range(3):
+        ma, mb = a.run_round(), b.run_round()
+        assert float(ma["loss"]) == float(mb["loss"])
+        assert ma["comm_fraction"] == mb["comm_fraction"]
+    np.testing.assert_array_equal(np.asarray(a.state.params),
+                                  np.asarray(b.state.params))
+    np.testing.assert_array_equal(np.asarray(a.state.w),
+                                  np.asarray(b.state.w))
+
+
+def test_event_schedule_validation():
+    with pytest.raises(ValueError, match="event_decay"):
+        LinkModel(event_threshold=0.1, event_decay=0.0)
+    with pytest.raises(ValueError, match="callable"):
+        LinkModel(event_threshold=0.1, event_schedule=3.0)
+    with pytest.raises(ValueError, match="event_threshold > 0"):
+        LinkModel(event_decay=0.5)
+    with pytest.raises(ValueError, match="event_threshold > 0"):
+        LinkModel(event_schedule=lambda t: 1.0)
+
+
 def test_linked_checkpoint_roundtrip(setting, tmp_path):
     """The link carry (PRNG stream + in-flight buffers) survives a full
     save/restore: the resumed trajectory matches the uninterrupted one."""

@@ -1,0 +1,430 @@
+"""Virtual client population: the disk-backed ClientStore, fault-in
+closure planning, and the paged trainer's three contracts — (1) the
+resident set is exactly sampled ∪ in-neighbors and all buffers scale with
+its bound (never n), (2) the compact slot-remapped operator embeds into the
+dense column-stochastic reference so paged == fully-resident to float
+tolerance on the identical PRNG chain, and (3) the checkpoint IS the store:
+a committed manifest re-opens bit-identically."""
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # graceful tier-1 degradation (see tests/_hyp.py)
+    from _hyp import given, settings, st
+
+from repro.core import (
+    FLTrainer,
+    LinkModel,
+    TopologyConfig,
+    make_algo,
+    make_program,
+)
+from repro.core import topology
+from repro.data.dirichlet import dirichlet_partition, stack_client_data
+from repro.data.synthetic import DatasetSpec, make_dataset
+from repro.models.small import tiny_mlp
+from repro.store import (
+    ClientStore,
+    FieldSpec,
+    PagedRunner,
+    ResidentDriver,
+    RowCache,
+    closure_bound,
+    dense_partial_operator,
+    make_plan,
+)
+
+N = 16
+_DATA_CACHE: dict = {}
+
+
+def _client_data(n):
+    if n not in _DATA_CACHE:
+        spec = DatasetSpec("toy", (16,), 4, margin=3.0)
+        train, _ = make_dataset(spec, n * 16, 64, seed=0)
+        parts = dirichlet_partition(train["y"], n, alpha=10.0, seed=0)
+        _DATA_CACHE[n] = stack_client_data(train, parts, pad_to=32)
+    return _DATA_CACHE[n]
+
+
+def _program(n=N, kind="kout", k_out=2, compressor=None, algo_name="dfedsgpsm",
+             link=None, **topo_kw):
+    model = tiny_mlp(in_dim=16, n_classes=4)
+    kw = dict(local_steps=2, batch_size=8)
+    if compressor:
+        kw["compressor"] = compressor
+    algo = make_algo(algo_name, **kw)
+    topo = TopologyConfig(kind=kind, n_clients=n, k_out=k_out, **topo_kw)
+    return make_program(model.loss, model.init, _client_data(n), algo, topo,
+                        gossip="dense", link=link)
+
+
+def _topo(kind, n=24, k_active=5):
+    k_out = 1 if kind in ("ring", "exponential") else 2
+    kw = {"n_pods": 4} if kind == "two_tier" else {}
+    tv = kind == "exponential"  # the time-varying family the paper sweeps
+    cfg = TopologyConfig(kind=kind, n_clients=n, k_out=k_out,
+                         time_varying=tv, **kw)
+    k_in = topology.active_k_in(cfg)
+    return cfg, k_active, closure_bound(n, k_active, k_in)
+
+
+# ---------------------------------------------------------------------------
+# ClientStore: chunked row I/O, lazy materialization, durability.
+# ---------------------------------------------------------------------------
+
+def _toy_fields():
+    return {
+        "params": FieldSpec("params", (6,), "float32"),
+        "w": FieldSpec("w", (), "float32", default=1.0),
+    }
+
+
+def test_store_creation_is_lazy_and_roundtrips(tmp_path):
+    """Creation is O(1) in n: unwritten chunks synthesize from templates /
+    defaults; written rows come back exactly, across a reopen."""
+    import os
+
+    tpl = np.arange(6, dtype=np.float32)
+    s = ClientStore.create(str(tmp_path / "s"), 1000, _toy_fields(),
+                           rows_per_chunk=64, templates={"params": tpl})
+    assert not [f for f in os.listdir(s.path) if f.startswith("chunk")]
+    got = s.read_rows([0, 999, 500])
+    np.testing.assert_array_equal(got["params"],
+                                  np.broadcast_to(tpl, (3, 6)))
+    np.testing.assert_array_equal(got["w"], np.ones(3, np.float32))
+
+    ids = np.asarray([3, 64, 65, 999])  # spans three chunks
+    vals = {"params": np.random.default_rng(0).standard_normal(
+        (4, 6)).astype(np.float32),
+        "w": np.asarray([2.0, 3.0, 4.0, 5.0], np.float32)}
+    s.write_rows(ids, vals)
+    assert s.chunks_written == 3 and s.bytes_written > 0
+    s2 = ClientStore.open(str(tmp_path / "s"))
+    back = s2.read_rows(ids[::-1])  # any order
+    np.testing.assert_array_equal(back["params"], vals["params"][::-1])
+    np.testing.assert_array_equal(back["w"], vals["w"][::-1])
+    # neighbors in a written chunk keep the template
+    np.testing.assert_array_equal(s2.read_rows([4])["params"][0], tpl)
+
+
+def test_store_validation_and_clobber_guard(tmp_path):
+    s = ClientStore.create(str(tmp_path / "s"), 10, _toy_fields(),
+                           rows_per_chunk=4)
+    with pytest.raises(FileExistsError):
+        ClientStore.create(str(tmp_path / "s"), 10, _toy_fields())
+    with pytest.raises(IndexError):
+        s.read_rows([10])
+    with pytest.raises(ValueError, match="unique"):
+        s.write_rows([1, 1], {"w": np.ones(2, np.float32)})
+    with pytest.raises(KeyError):
+        s.write_rows([1], {"nope": np.ones(1)})
+    # a future-format manifest is refused, not misread
+    with pytest.raises(ValueError, match="format"):
+        ClientStore(str(tmp_path / "s"),
+                    {"format": 99, "n": 10, "rows_per_chunk": 4,
+                     "fields": {}})
+
+
+def test_store_streaming_reductions_and_meta_commit(tmp_path):
+    """field_sum / iter_chunks stream the whole population (lazy chunks
+    synthesized) exactly; update_meta commits durably."""
+    s = ClientStore.create(str(tmp_path / "s"), 100, _toy_fields(),
+                           rows_per_chunk=8)
+    assert float(s.field_sum("w")) == 100.0  # all-lazy population
+    s.write_rows([7, 50], {"w": np.asarray([3.0, 0.5], np.float32)})
+    assert float(s.field_sum("w")) == pytest.approx(100.0 + 2.0 + 0.5 - 1.0)
+    seen = sum(c["w"].shape[0] for _, c in s.iter_chunks(fields=["w"]))
+    assert seen == 100
+    s.update_meta(round=5, key=[1, 2])
+    s2 = ClientStore.open(str(tmp_path / "s"))
+    assert s2.meta["round"] == 5 and s2.meta["key"] == [1, 2]
+
+
+def test_row_cache_consistency_rules():
+    """pending (dirty) rows are never evicted and shadow clean puts; settle
+    atomically moves them to the bounded LRU tier."""
+    c = RowCache(capacity=2)
+    c.put_pending(1, {"w": 1.0})
+    c.put_clean(1, {"w": 99.0})      # stale clean copy must lose
+    assert c.get(1) == {"w": 1.0}
+    for g in (2, 3, 4):
+        c.put_clean(g, {"w": float(g)})
+    assert c.get(2) is None          # LRU-evicted at capacity 2
+    assert c.get(1) == {"w": 1.0}    # pending survives any pressure
+    c.settle(1)
+    assert c.pending_count == 0
+    assert c.get(1) == {"w": 1.0}    # now served from LRU
+
+
+# ---------------------------------------------------------------------------
+# Fault-in closure planning: resident set == sampled ∪ in-neighbors, and
+# the compact operator embeds into the dense column-stochastic reference.
+# ---------------------------------------------------------------------------
+
+@given(st.sampled_from(["ring", "exponential", "kout", "two_tier"]),
+       st.integers(0, 999), st.integers(0, 6))
+@settings(max_examples=40, deadline=None)
+def test_closure_is_exactly_active_union_inneighbors(kind, seed, t):
+    cfg, k_active, c_max = _topo(kind)
+    plan = make_plan(cfg, k_active, c_max, jax.random.PRNGKey(seed), t)
+    want = set(plan.active.tolist()) | set(plan.picks.ravel().tolist())
+    assert set(plan.closure.tolist()) == want
+    assert plan.c == len(want) <= c_max
+    # active rows lead the layout (the trained slots are [:k_active])
+    np.testing.assert_array_equal(plan.closure[:k_active], plan.active)
+    # pads are inert identity self-loops
+    np.testing.assert_array_equal(plan.wgt[plan.c:, 0],
+                                  np.ones(c_max - plan.c, np.float32))
+    np.testing.assert_array_equal(plan.wgt[plan.c:, 1:], 0.0)
+
+
+@given(st.sampled_from(["ring", "exponential", "kout", "two_tier"]),
+       st.integers(0, 999), st.integers(0, 6))
+@settings(max_examples=25, deadline=None)
+def test_compact_operator_embeds_into_dense_reference(kind, seed, t):
+    """Scatter the slot-remapped NeighborList back to (n, n): it must be
+    the active-receiver-masked column-stochastic operator bit-for-bit —
+    identity columns for every row that was not paged in."""
+    cfg, k_active, c_max = _topo(kind)
+    n = cfg.n_clients
+    plan = make_plan(cfg, k_active, c_max, jax.random.PRNGKey(seed), t)
+    M = np.zeros((n, n), np.float64)
+    noncl = np.setdiff1d(np.arange(n), plan.closure)
+    M[noncl, noncl] = 1.0
+    for s in range(plan.c):
+        for l in range(plan.idx.shape[1]):
+            M[plan.ids[s], plan.ids[plan.idx[s, l]]] += plan.wgt[s, l]
+    ref = np.asarray(dense_partial_operator(plan.active, plan.picks, n),
+                     np.float64)
+    np.testing.assert_allclose(M, ref, atol=1e-7)
+    np.testing.assert_allclose(M.sum(axis=0), 1.0, atol=1e-6)
+
+
+def test_closure_bound_is_tight_and_population_capped():
+    assert closure_bound(1000, 8, 3) == 32
+    assert closure_bound(16, 8, 3) == 16  # never exceeds the population
+
+
+# ---------------------------------------------------------------------------
+# Paged == fully-resident equivalence on the identical PRNG chain.
+# ---------------------------------------------------------------------------
+
+_FAMILIES = [("ring", {}), ("exponential", {"time_varying": True}),
+             ("kout", {}), ("two_tier", {"n_pods": 4})]
+
+
+@pytest.mark.parametrize("kind,kw", _FAMILIES)
+def test_paged_matches_resident_per_family(kind, kw, tmp_path):
+    k_out = 1 if kind in ("ring", "exponential") else 2
+    program = _program(kind=kind, k_out=k_out, **kw)
+    runner = PagedRunner(program, str(tmp_path / "store"), k_active=4,
+                         seed=3, rows_per_chunk=4)
+    twin = ResidentDriver(program, k_active=4, seed=3)
+    for _ in range(4):
+        mp, mt = runner.run_round(), twin.run_round()
+        assert abs(mp["loss"] - mt["loss"]) < 1e-5
+        assert mp["w_mass_closure_err"] < 1e-4
+    rows = runner.read_rows(np.arange(N))
+    np.testing.assert_allclose(rows["params"],
+                               np.asarray(twin.state.params), atol=5e-5)
+    np.testing.assert_allclose(rows["w"], np.asarray(twin.state.w),
+                               atol=1e-5)
+    assert abs(runner.total_mass() - N) < 1e-4
+    assert abs(twin.total_mass() - N) < 1e-4
+    runner.close()
+
+
+@pytest.mark.parametrize("compressor", ["topk_ef", "int8_rows"])
+def test_paged_matches_resident_compressed(compressor, tmp_path):
+    """Closure-restricted compression: only transmitting rows compress (and
+    commit EF residuals), so the compact round still matches the masked
+    full-bank reference."""
+    program = _program(compressor=compressor)
+    runner = PagedRunner(program, str(tmp_path / "store"), k_active=4,
+                         seed=5, rows_per_chunk=4)
+    twin = ResidentDriver(program, k_active=4, seed=5)
+    for _ in range(4):
+        mp, mt = runner.run_round(), twin.run_round()
+        assert abs(mp["loss"] - mt["loss"]) < 1e-5
+    rows = runner.read_rows(np.arange(N))
+    np.testing.assert_allclose(rows["params"],
+                               np.asarray(twin.state.params), atol=5e-5)
+    if compressor == "topk_ef":  # the EF residual is store-resident state
+        assert "ef" in rows and np.abs(rows["ef"]).max() > 0
+    assert abs(runner.total_mass() - N) < 1e-4
+    runner.close()
+
+
+def test_paged_mass_conserved_with_cold_population(tmp_path):
+    """sum_i w_i == n over the WHOLE store after many partial rounds —
+    cold (never-sampled) clients included, the exact push-sum invariant."""
+    n = 64
+    program = _program(n=n, k_out=2)
+    runner = PagedRunner(program, str(tmp_path / "store"), k_active=4,
+                         seed=0, rows_per_chunk=8)
+    for _ in range(6):
+        rec = runner.run_round()
+        assert rec["w_mass_closure_err"] < 1e-4
+    assert abs(runner.total_mass() - n) < 1e-3
+    # with k_active=4 of 64, plenty of clients never ran: they still hold
+    # exactly their (scaled) share of mass and the unit template params
+    runner.close()
+
+
+# ---------------------------------------------------------------------------
+# Allocation accounting: buffers scale with the closure bound, never n.
+# ---------------------------------------------------------------------------
+
+def test_paged_buffers_scale_with_closure_not_population(tmp_path):
+    n, k_active, k_out = 64, 4, 2
+    program = _program(n=n, k_out=k_out)
+    runner = PagedRunner(program, str(tmp_path / "store"), k_active=k_active,
+                         seed=0, rows_per_chunk=8)
+    c_max = k_active * (k_out + 1)
+    assert runner.resident_rows == c_max < n
+    assert runner.staging_rows == 2 * c_max
+    for buf in runner._staging:
+        assert buf["params"].shape == (c_max, program.spec.dim)
+        assert buf["w"].shape == (c_max,)
+    runner.run_round()
+    rec = runner.run_round()
+    assert rec["rows_resident"] <= c_max
+    stats = runner.stats.as_dict()
+    assert stats["rows_needed_per_round"] <= c_max
+    assert 0.0 <= stats["prefetch_hit_rate"] <= 1.0
+    # round 2's closure is served by carry/prefetch/cache, not all faults
+    assert stats["rows_faulted_per_round"] < stats["rows_needed_per_round"]
+    runner.close()
+
+
+# ---------------------------------------------------------------------------
+# The checkpoint IS the store: manifest commit + bit-identical reopen.
+# ---------------------------------------------------------------------------
+
+def test_paged_store_resume_is_bit_identical(tmp_path):
+    """save() commits (round, key) into the manifest; a fresh runner opened
+    on a snapshot of the committed store replays the continuation
+    bit-for-bit (its seed argument must be ignored on resume)."""
+    program = _program()
+    runner = PagedRunner(program, str(tmp_path / "store"), k_active=4,
+                         seed=3, rows_per_chunk=4)
+    for _ in range(2):
+        runner.run_round()
+    runner.save()
+    shutil.copytree(str(tmp_path / "store"), str(tmp_path / "snap"))
+    a = [runner.run_round() for _ in range(2)]
+    rows_a = runner.read_rows(np.arange(N))
+    runner.close()
+
+    resumed = PagedRunner(program, str(tmp_path / "snap"), k_active=4,
+                          seed=999, rows_per_chunk=4)
+    assert resumed.round_index == 2
+    b = [resumed.run_round() for _ in range(2)]
+    rows_b = resumed.read_rows(np.arange(N))
+    resumed.close()
+    assert a == b
+    for k in rows_a:
+        np.testing.assert_array_equal(rows_a[k], rows_b[k])
+
+
+def test_paged_restore_resyncs_to_committed_manifest(tmp_path):
+    program = _program()
+    runner = PagedRunner(program, str(tmp_path / "store"), k_active=4,
+                         seed=3, rows_per_chunk=4)
+    runner.run_round()
+    runner.save()
+    assert ClientStore.open(runner.store.path).meta["round"] == 1
+    runner.restore()
+    assert runner.round_index == 1
+    rec = runner.run_round()
+    assert np.isfinite(rec["loss"])
+    other = PagedRunner(_program(), str(tmp_path / "other"), k_active=4)
+    other.close()
+    with pytest.raises(ValueError, match="own store"):
+        runner.restore(str(tmp_path / "other"))  # not this runner's store
+    runner.close()
+
+
+def test_store_rejects_mismatched_program(tmp_path):
+    """A store created under one composition refuses a different one up
+    front: different model structure, or a stage set with different
+    per-row state (EF residual)."""
+    runner = PagedRunner(_program(), str(tmp_path / "store"), k_active=4)
+    runner.save()
+    runner.close()
+    other_model = tiny_mlp(in_dim=16, hidden=8, n_classes=4)
+    algo = make_algo("dfedsgpsm", local_steps=2, batch_size=8)
+    topo = TopologyConfig(kind="kout", n_clients=N, k_out=2)
+    other = make_program(other_model.loss, other_model.init, _client_data(N),
+                         algo, topo, gossip="dense")
+    with pytest.raises(ValueError, match="structure"):
+        PagedRunner(other, str(tmp_path / "store"), k_active=4)
+    with pytest.raises(ValueError, match="fields"):
+        PagedRunner(_program(compressor="topk_ef"), str(tmp_path / "store"),
+                    k_active=4)
+
+
+# ---------------------------------------------------------------------------
+# Composition guards: what has no paged form is refused loudly.
+# ---------------------------------------------------------------------------
+
+def test_paged_rejects_unsupported_compositions(tmp_path):
+    with pytest.raises(ValueError, match="push-sum"):
+        PagedRunner(_program(algo_name="dfedsam"), str(tmp_path / "a"),
+                    k_active=4)
+    with pytest.raises(ValueError, match="push-sum"):
+        PagedRunner(_program(link=LinkModel(drop=0.3)), str(tmp_path / "b"),
+                    k_active=4)
+    with pytest.raises(ValueError, match="k_active"):
+        PagedRunner(_program(), str(tmp_path / "c"), k_active=0)
+    with pytest.raises(ValueError, match="k_active"):
+        PagedRunner(_program(), str(tmp_path / "d"), k_active=N + 1)
+
+
+# ---------------------------------------------------------------------------
+# FLTrainer integration: paged=True end to end.
+# ---------------------------------------------------------------------------
+
+def test_trainer_paged_mode_end_to_end(tmp_path):
+    model = tiny_mlp(in_dim=16, n_classes=4)
+    algo = make_algo("dfedsgpsm", local_steps=2, batch_size=8)
+    topo = TopologyConfig(kind="kout", n_clients=N, k_out=2)
+    tr = FLTrainer(model.loss, model.init, _client_data(N), algo, topo,
+                   seed=0, paged=True, store_dir=str(tmp_path / "s"),
+                   k_active=4)
+    hist = tr.fit(3)
+    assert len(hist) == 3
+    assert all(np.isfinite(rec["loss"]) for rec in hist)
+    avg = tr.average_model()  # streamed consensus mean, unraveled
+    assert avg["fc1"]["w"].shape == (16, 32)
+    assert np.isfinite(tr.consensus_error())
+    with pytest.raises(ValueError, match="n, D"):
+        tr.debiased_models()  # would materialize the full bank
+    path = tr.save()
+    assert ClientStore.exists(path)
+    tr.restore(path)
+    assert np.isfinite(tr.run_round()["loss"])
+    tr.runner.close()
+
+
+def test_trainer_paged_validations(tmp_path):
+    model = tiny_mlp(in_dim=16, n_classes=4)
+    algo = make_algo("dfedsgpsm", local_steps=2, batch_size=8)
+    topo = TopologyConfig(kind="kout", n_clients=N, k_out=2)
+    common = (model.loss, model.init, _client_data(N), algo, topo)
+    with pytest.raises(ValueError, match="store_dir"):
+        FLTrainer(*common, paged=True, k_active=4)
+    with pytest.raises(ValueError, match="k_active"):
+        FLTrainer(*common, paged=True, store_dir=str(tmp_path / "s"))
+    with pytest.raises(ValueError, match="flat"):
+        FLTrainer(*common, paged=True, flat=False,
+                  store_dir=str(tmp_path / "s"), k_active=4)
+    with pytest.raises(ValueError, match="link"):
+        FLTrainer(*common, paged=True, store_dir=str(tmp_path / "s"),
+                  k_active=4, link=LinkModel(drop=0.2))
