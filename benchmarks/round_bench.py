@@ -556,8 +556,19 @@ def _smoke_speedups() -> dict:
     scan_us = _time_scanned(tr, 8)
     emit("round/smoke/loop", loop_us, "n=16,rounds=8,median")
     emit("round/smoke/scanned", scan_us, "n=16,rounds=8,median,one-jit")
+    # Low-rank delta bank (rank-8 adapters on the frozen base) vs the dense
+    # full-width bank: gossip / EF / paging all move d_delta-wide rows.
+    tr_delta = FLTrainer(net.loss, net.init, cdata, algo, topo, seed=0,
+                         participation=0.25, delta=8)
+    delta_us = _time_rounds(tr_delta, 8)
+    d_delta = tr_delta.spec.dim
+    d_full = tr_delta.spec.delta.full.dim
+    emit("round/smoke/delta", delta_us,
+         f"n=16,rounds=8,median,rank=8,d_delta={d_delta}"
+         f"({100 * d_delta / d_full:.1f}% of D)")
     return {"speedup": timings["pytree"] / timings["flat"],
-            "scan_speedup": loop_us / scan_us}
+            "scan_speedup": loop_us / scan_us,
+            "delta_speedup": timings["flat"] / delta_us}
 
 
 def smoke(record: bool = False, json_out: str | None = None) -> int:
@@ -576,12 +587,15 @@ def smoke(record: bool = False, json_out: str | None = None) -> int:
     emit("round/smoke/speedup", measured["speedup"], "pytree_us/flat_us")
     emit("round/smoke/scan_speedup", measured["scan_speedup"],
          "loop_us/scanned_us")
+    emit("round/smoke/delta_speedup", measured["delta_speedup"],
+         "dense_flat_us/delta_us (rank-8 delta-bank round vs full-width)")
     if record:
         # Keep the MINIMUM of this and any previously recorded ratio —
         # the gate floor must clear runner noise; repeat --record to widen.
-        note = ("pytree_us/flat_us + loop_us/scanned_us, each a "
-                "median-of-8 rounds after %d warmup rounds; min over "
-                "recorded runs - repeat --record to widen" % WARMUP)
+        note = ("pytree_us/flat_us + loop_us/scanned_us + "
+                "dense_flat_us/delta_us, each a median-of-8 rounds after "
+                "%d warmup rounds; min over recorded runs - repeat "
+                "--record to widen" % WARMUP)
         recorded = dict(measured)
         extra = {}
         if os.path.exists(BASELINE):
@@ -606,7 +620,8 @@ def smoke(record: bool = False, json_out: str | None = None) -> int:
     verdicts = {}
     ok = True
     for key, label in (("speedup", "flat-path"),
-                       ("scan_speedup", "scanned-driver")):
+                       ("scan_speedup", "scanned-driver"),
+                       ("delta_speedup", "delta-bank")):
         # Baselines recorded before a gate existed fall back to parity.
         floor = base.get(key, 1.0) / SMOKE_TOLERANCE
         verdicts[key] = "OK" if measured[key] >= floor else "REGRESSION"

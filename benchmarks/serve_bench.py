@@ -1,0 +1,227 @@
+"""Personalized decode microbenchmark: many clients' delta-bank models in
+one batched greedy decode (the serving half of the low-rank delta bank).
+
+Shape follows the decode-microbenchmark convention: prefill once, then time
+the steady-state decode step in isolation (median over timed steps after
+explicit warmup) and derive
+
+  ms/step          — one token for ALL clients (the whole multi-model batch
+                     is a single XLA dispatch),
+  tokens/s         — clients / step_time (one token per client per step),
+  GB/s/device      — bytes the step must stream (client-stacked weights +
+                     KV caches, read once per token) / step_time / devices:
+                     the roofline quantity for memory-bound decode.
+
+The personalization store is a rank-``--rank`` delta bank over the zoo
+arch's init weights: each request lane expands ``base + (A @ B) / w`` for a
+different client, so the weight traffic above is per-client weights — the
+cost full fine-tuning would pay per lane — while the *bank* (what training
+gossips, EF buffers, checkpoints and the paged store hold) is only
+``d_delta`` floats per client.  The bench also times the training side on
+the standard mnist_2nn/16-client setting — one rank-8 delta round vs the
+dense full-width round — and reports that ratio next to ``d_delta / D``.
+
+``--smoke`` (default) shrinks the arch config and asserts the paper-facing
+criteria: rank-8 ``d_delta`` <= 10% of D on the bench model, and finite
+timings.  ``--json bench-serve.json`` writes the table (the CI artifact).
+
+Tuned-launcher environment: same recipe as round_bench.py (tcmalloc,
+pinned eigen threads, persistent compilation cache).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import build_setting, emit
+
+WARMUP = 2
+
+
+def _nbytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def serve_bench(arch: str, clients: int, prompt_len: int, new_tokens: int,
+                rank: int, smoke: bool) -> dict:
+    """Time expand / prefill / steady-state decode for ``clients`` distinct
+    delta-bank models of the zoo arch; returns the metric table."""
+    from repro.configs.registry import get_config
+    from repro.core.flat import bind_delta_spec, make_delta_spec
+    from repro.launch.steps import make_personalized_serve_step
+    from repro.models.registry import get_model_api
+
+    cfg = get_config(arch, smoke=smoke)
+    if not cfg.supports_decode():
+        raise SystemExit(f"{cfg.name} is encoder-only: no decode path")
+    api = get_model_api(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+
+    dspec = make_delta_spec(params, rank=rank)
+    spec = bind_delta_spec(dspec, params)
+    ps = make_personalized_serve_step(api, spec)
+
+    bank = 0.02 * jax.random.normal(jax.random.PRNGKey(3),
+                                    (clients, dspec.dim), dspec.dtype)
+    w = jnp.ones((clients,), jnp.float32)
+    ids = jnp.arange(clients, dtype=jnp.int32)
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (clients, prompt_len), 0, cfg.vocab_size)
+    cache_len = prompt_len + new_tokens
+    batch = {"tokens": prompts}
+    if cfg.task == "vlm":
+        batch["image_feats"] = jax.random.normal(
+            jax.random.PRNGKey(2), (clients, 8, cfg.frontend_dim))
+    n_prefix = batch.get("image_feats", jnp.zeros((0, 0))).shape[1]
+
+    expand = jax.jit(ps.expand)
+    prefill = jax.jit(ps.prefill, static_argnums=(2,))
+    decode = jax.jit(ps.decode_step)  # no donation: steps re-time one cache
+
+    t0 = time.perf_counter()
+    stacked = expand(bank, w, ids)
+    jax.block_until_ready(stacked)
+    expand_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    logits, caches = prefill(stacked, batch, cache_len)
+    jax.block_until_ready(logits)
+    prefill_s = time.perf_counter() - t0
+    toks = logits[:, -1].argmax(-1).astype(jnp.int32)
+
+    # Steady-state decode: compile + WARMUP steps, then median of the rest.
+    pos0 = n_prefix + prompt_len
+    steps = max(new_tokens - 1, 4)
+    times = []
+    for i in range(1 + WARMUP + steps):
+        pos = jnp.int32(pos0 + min(i, new_tokens - 2))
+        t0 = time.perf_counter()
+        logits_i, caches = decode(stacked, caches, toks, pos)
+        jax.block_until_ready(logits_i)
+        if i > WARMUP:
+            times.append(time.perf_counter() - t0)
+        toks = logits_i.argmax(-1).astype(jnp.int32)
+    step_s = statistics.median(times)
+
+    n_dev = jax.device_count()
+    stream_bytes = _nbytes(stacked) + _nbytes(caches)
+    ms_per_step = 1e3 * step_s
+    tokens_per_s = clients / step_s
+    gbps_per_device = stream_bytes / step_s / n_dev / 1e9
+    d_full = dspec.full.dim
+    frac = dspec.dim / d_full
+
+    emit(f"serve/{arch}/expand", 1e6 * expand_s,
+         f"clients={clients},rank={rank},d_delta={dspec.dim}"
+         f"({100 * frac:.1f}% of D)")
+    emit(f"serve/{arch}/prefill", 1e6 * prefill_s,
+         f"clients={clients},prompt={prompt_len}")
+    emit(f"serve/{arch}/ms_per_step", ms_per_step,
+         f"clients={clients},median-of-{steps},one dispatch per token")
+    emit(f"serve/{arch}/tokens_per_s", tokens_per_s,
+         "clients/step_s (one token per client per step)")
+    emit(f"serve/{arch}/gbps_per_device", gbps_per_device,
+         f"(stacked weights + KV) / step_s / {n_dev} devices")
+    return {"arch": arch, "smoke": smoke, "clients": clients,
+            "prompt_len": prompt_len, "new_tokens": new_tokens,
+            "rank": rank, "d_delta": dspec.dim, "d_full": d_full,
+            "delta_fraction": round(frac, 4),
+            "expand_s": round(expand_s, 4),
+            "prefill_s": round(prefill_s, 4),
+            "ms_per_step": round(ms_per_step, 3),
+            "tokens_per_s": round(tokens_per_s, 2),
+            "gbps_per_device": round(gbps_per_device, 4),
+            "stream_bytes": stream_bytes, "devices": n_dev}
+
+
+def round_ratio(rank: int, rounds: int) -> dict:
+    """Delta-vs-full-rank training round on the standard bench setting:
+    the narrower bank must pull its weight where training pays for width
+    (gossip, EF residuals, paging)."""
+    from repro.core import FLTrainer, TopologyConfig, make_algo
+
+    n = 16
+    net, cdata, _ = build_setting(dataset="mnist", n_clients=n,
+                                  samples_per_client=128)
+    topo = TopologyConfig(kind="kout", n_clients=n, k_out=4)
+    algo = make_algo("dfedsgpsm", local_steps=3, batch_size=32)
+    timings, dims = {}, {}
+    for mode in ("dense", "delta"):
+        tr = FLTrainer(net.loss, net.init, cdata, algo, topo, seed=0,
+                       participation=0.25,
+                       delta=rank if mode == "delta" else None)
+        for _ in range(1 + WARMUP):
+            tr.run_round()
+        jax.block_until_ready(tr.state.params)
+        ts = []
+        for _ in range(rounds):
+            t0 = time.perf_counter()
+            tr.run_round()
+            jax.block_until_ready(tr.state.params)
+            ts.append(1e6 * (time.perf_counter() - t0))
+        timings[mode] = statistics.median(ts)
+        dims[mode] = tr.spec.dim
+        emit(f"serve/round/{mode}", timings[mode],
+             f"n={n},D={dims[mode]},rounds={rounds},median")
+    ratio = timings["dense"] / timings["delta"]
+    frac = dims["delta"] / dims["dense"]
+    emit("serve/round/delta_ratio", ratio,
+         f"dense_us/delta_us at rank={rank} "
+         f"(d_delta={dims['delta']}, {100 * frac:.1f}% of D)")
+    return {"rank": rank, "rounds": rounds, "d_full": dims["dense"],
+            "d_delta": dims["delta"], "delta_fraction": round(frac, 4),
+            "dense_us": round(timings["dense"], 1),
+            "delta_us": round(timings["delta"], 1),
+            "delta_ratio": round(ratio, 3)}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="glm4-9b")
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--rank", type=int, default=8)
+    ap.add_argument("--rounds", type=int, default=5,
+                    help="timed rounds per side of the delta-vs-dense "
+                         "training ratio")
+    ap.add_argument("--smoke", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="shrunk arch + criteria asserts (--no-smoke for "
+                         "the full-size arch)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the metric table as JSON (CI uploads "
+                         "bench-serve.json as an artifact)")
+    args = ap.parse_args(argv)
+
+    serve = serve_bench(args.arch, args.clients, args.prompt_len,
+                        args.new_tokens, args.rank, args.smoke)
+    ratio = round_ratio(args.rank, args.rounds)
+    results = {"serve": serve, "round": ratio}
+
+    if args.smoke:
+        # Paper-facing criteria, asserted where CI can see them fail.
+        assert ratio["delta_fraction"] <= 0.10, (
+            f"rank-{args.rank} delta bank is {ratio['delta_fraction']:.1%} "
+            "of D on the bench model; criterion is <= 10%")
+        assert all(v > 0 for v in (serve["ms_per_step"],
+                                   serve["tokens_per_s"],
+                                   serve["gbps_per_device"])), serve
+        print(f"# smoke OK: d_delta/D={ratio['delta_fraction']:.3f}, "
+              f"{serve['tokens_per_s']:.1f} tokens/s over "
+              f"{serve['clients']} personalized clients")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"# wrote serve results -> {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

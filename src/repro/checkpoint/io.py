@@ -90,7 +90,30 @@ def latest_checkpoint(directory: str) -> str | None:
 
 
 def _spec_meta(spec) -> dict:
-    """JSON-serializable leaf-offset metadata of a ``core.flat.BankSpec``."""
+    """JSON-serializable leaf-offset metadata of a ``core.flat.BankSpec``
+    (or the delta-row layout of a bound ``core.flat.DeltaBankSpec`` — the
+    presence of the ``delta`` sub-dict is what distinguishes the two
+    on disk)."""
+    from repro.core.flat import BoundDeltaSpec
+
+    if isinstance(spec, BoundDeltaSpec):
+        d = spec.delta
+        return {
+            "paths": list(d.paths),
+            "shapes": [list(s) for s in d.full.shapes],
+            "dtypes": [str(x) for x in d.full.dtypes],
+            "offsets": list(d.offsets),
+            "sizes": list(d.sizes),
+            "dim": d.dim,
+            "dtype": str(d.dtype),
+            "delta": {
+                "modes": list(d.modes),
+                "ranks": list(d.ranks),
+                "asizes": list(d.asizes),
+                "full_dim": d.full.dim,
+                "full_offsets": list(d.full.offsets),
+            },
+        }
     dummy = spec.treedef.unflatten(list(range(spec.treedef.num_leaves)))
     flat, _ = jax.tree_util.tree_flatten_with_path(dummy)
     paths = ["/".join(str(k) for k in p) for p, _ in flat]
@@ -143,7 +166,15 @@ def save_bank(directory: str, step: int, bank, spec, extra=None,
 
     ``extra`` may hold auxiliary arrays (push-sum weights, momentum bank,
     round counter) saved alongside under their own keys.
+
+    Format v3 (delta banks): the row-chunked layout is unchanged — the
+    chunks simply hold ``(n, d_delta)`` adapter rows — plus one ``__base__``
+    member carrying the frozen shared base ravelled under the *full* model
+    spec, so a v3 checkpoint is self-contained and the restore can verify
+    the program's base matches the one the rows were trained against.
     """
+    from repro.core.flat import BoundDeltaSpec
+
     os.makedirs(directory, exist_ok=True)
     rows = int(bank.shape[0]) if bank.ndim >= 2 else 0
     row_nbytes = int(np.prod(bank.shape[1:], initial=1)) * bank.dtype.itemsize
@@ -155,8 +186,9 @@ def save_bank(directory: str, step: int, bank, spec, extra=None,
         k for k, v in extra.items() if rows and _bank_like(v, rows)
     )
     n_chunks = max(-(-rows // cr), 1) if rows else 1
-    meta.update(format=2, rows=rows, chunk_rows=cr, bank_chunks=n_chunks,
-                extra_chunked=chunked_extras)
+    is_delta = isinstance(spec, BoundDeltaSpec)
+    meta.update(format=3 if is_delta else 2, rows=rows, chunk_rows=cr,
+                bank_chunks=n_chunks, extra_chunked=chunked_extras)
 
     final = os.path.join(directory, f"ckpt_{step}.npz")
     fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
@@ -165,6 +197,8 @@ def save_bank(directory: str, step: int, bank, spec, extra=None,
                              allowZip64=True) as zf:
             _write_member(zf, "__bank_meta__",
                           np.array(json.dumps(meta)))
+            if is_delta:
+                _write_member(zf, "__base__", _to_host(spec.base_row()))
             if rows:
                 for i in range(n_chunks):
                     lo, hi = i * cr, min((i + 1) * cr, rows)
@@ -195,10 +229,13 @@ def _gather_chunks(data, names) -> np.ndarray:
 def restore_bank(path: str, spec=None):
     """Restore ``(bank, extra, meta)`` saved by :func:`save_bank`.
 
-    Reads both v2 (row-chunked) and legacy v1 (monolithic ``__bank__``)
-    checkpoints.  With ``spec`` given, the stored offset metadata is
-    validated against it (mismatched model structure raises
-    ``ValueError``).
+    Reads v3 (base + delta rows), v2 (row-chunked) and legacy v1
+    (monolithic ``__bank__``) checkpoints.  With ``spec`` given, the stored
+    offset metadata is validated against it (mismatched model structure
+    raises ``ValueError``); a delta spec additionally checks the stored
+    ``__base__`` against its own frozen base — adapter rows over a
+    different base are silent garbage, so drift is an error, not a
+    warning.
     """
     data = np.load(path, allow_pickle=False)
     v2 = "__bank_c00000__" in data.files
@@ -206,10 +243,35 @@ def restore_bank(path: str, spec=None):
         raise ValueError(f"{path} is not a flat-bank checkpoint")
     meta = json.loads(str(data["__bank_meta__"]))
     if spec is not None:
+        from repro.core.flat import BoundDeltaSpec
+
         want = _spec_meta(spec)
+        want_delta = isinstance(spec, BoundDeltaSpec)
+        if want_delta != ("delta" in meta):
+            stored = "delta-bank (v3)" if "delta" in meta else "dense-bank"
+            mine = "delta-bank" if want_delta else "dense-bank"
+            raise ValueError(
+                f"bank checkpoint structure mismatch: {path} is a {stored} "
+                f"checkpoint but the restoring spec is {mine} — restore "
+                "with the bank representation that saved it"
+            )
         keys = ("offsets", "shapes", "dtypes", "dim", "dtype")
-        if any(want[k] != meta[k] for k in keys):
+        if any(want[k] != meta[k] for k in keys) or (
+            want_delta and want["delta"] != meta["delta"]
+        ):
             raise ValueError("bank checkpoint structure mismatch")
+        if want_delta:
+            stored_base = data["__base__"]
+            base = _to_host(spec.base_row())
+            if stored_base.shape != base.shape or not np.allclose(
+                stored_base.astype(np.float64), base.astype(np.float64),
+                rtol=1e-5, atol=1e-6,
+            ):
+                raise ValueError(
+                    f"delta-bank checkpoint base mismatch: {path} was saved "
+                    "over a different frozen base than this program's — "
+                    "adapter rows are meaningless over another base"
+                )
     if not v2:
         extra = {
             k[len("extra_"):]: data[k]

@@ -17,7 +17,15 @@ from repro.core.engine import (
     make_algo,
     make_program,
 )
-from repro.core.flat import BankSpec, make_spec
+from repro.core.flat import (
+    BankSpec,
+    BoundDeltaSpec,
+    DeltaBankSpec,
+    DeltaConfig,
+    bind_delta_spec,
+    make_delta_spec,
+    make_spec,
+)
 from repro.core.stages import (
     COMPRESSORS,
     MIXERS,
@@ -31,7 +39,10 @@ __all__ = [
     "ALGORITHMS",
     "AlgoConfig",
     "BankSpec",
+    "BoundDeltaSpec",
     "COMPRESSORS",
+    "DeltaBankSpec",
+    "DeltaConfig",
     "FLState",
     "FLTrainer",
     "LinkModel",
@@ -40,7 +51,9 @@ __all__ = [
     "RoundProgram",
     "SOLVERS",
     "TopologyConfig",
+    "bind_delta_spec",
     "make_algo",
+    "make_delta_spec",
     "make_program",
     "make_spec",
     "make_stages",

@@ -130,6 +130,16 @@ class FLTrainer:
         and async write-back.  Device/host buffers scale with the closure,
         not n; the checkpoint is the store itself.  Directed push-sum,
         perfect links, single host only.
+      delta: low-rank delta bank (``repro.core.DeltaConfig``, or just a
+        rank / ``"full"``): clients share a frozen base model and bank
+        rows hold only adapter payloads — ``(A, B)`` factors per selected
+        2-D leaf, dense deltas for small leaves — so every bank consumer
+        (gossip, EF residuals, link buffers, the paged store) shrinks from
+        D to d_delta.  ``rank="full"`` reproduces the dense bank to float
+        tolerance (the equivalence oracle).
+      bank_dtype: storage dtype of the bank rows (e.g. ``jnp.bfloat16``);
+        momentum and EF residuals stay float32, so error feedback remains
+        exact.
 
     ``fit`` drives ``program.run_superstep`` — jit-resident supersteps of
     rounds with in-scan eval — and returns per-round history records; for
@@ -156,6 +166,8 @@ class FLTrainer:
         rows_per_chunk: int = 256,
         prefetch: bool = True,
         lru_rows: int | None = None,
+        delta=None,
+        bank_dtype=None,
     ):
         if paged:
             if not flat:
@@ -171,6 +183,11 @@ class FLTrainer:
                 raise ValueError("paged=True needs k_active >= 1")
         if not flat and mesh is not None:
             raise ValueError("the flat=False oracle path is single-device")
+        if not flat and (delta is not None or bank_dtype is not None):
+            raise ValueError(
+                "the flat=False oracle path keeps full-precision per-leaf "
+                "pytrees; delta=/bank_dtype= need the flat bank"
+            )
         if not flat and link is not None and link.active:
             # The oracle predates the link subsystem; silently ignoring the
             # scenario would invalidate it as an equivalence baseline.
@@ -199,7 +216,8 @@ class FLTrainer:
         self.n = topo.n_clients
         self.program = make_program(
             loss_fn, init_fn, client_data, algo, topo, participation,
-            gossip=gossip, link=link, mesh=mesh,
+            gossip=gossip, link=link, mesh=mesh, delta=delta,
+            bank_dtype=bank_dtype,
         )
         self.spec = self.program.spec
         self._exp_cycle = self.program.exp_cycle
@@ -385,6 +403,15 @@ class FLTrainer:
                 "via trainer.runner.store.iter_chunks() instead"
             )
         if self.flat and self.algo.comm != "central":
+            from repro.core.flat import BoundDeltaSpec
+
+            if isinstance(self.spec, BoundDeltaSpec):
+                # Delta rows de-bias through the spec: z_i = base +
+                # expand(row_i) / w_i (the dense-row division would divide
+                # the frozen base by w too).
+                return self.spec.debias_stacked(
+                    self.state.params, self.state.w
+                )
             z = pushsum.debias_bank(self.state.params, self.state.w)
             return self.spec.unravel_stacked(z)
         return pushsum.debias(self.state.params, self.state.w)
@@ -490,14 +517,24 @@ class FLTrainer:
         return history
 
     def _fit_python_loop(self, rounds, test_data, eval_every, log):
-        """Per-round host loop — the ``flat=False`` oracle's driver."""
+        """Per-round host loop — the ``flat=False`` oracle's and the paged
+        runner's driver.  Paged trainers additionally stream a
+        full-population eval (``PagedRunner.eval_population``) at the same
+        cadence: cold chunks flow through ``store.iter_chunks`` so the
+        record carries population metrics and their delta against the hot
+        closure's view — eval breadth the closure alone cannot give."""
         history = []
         for r in range(rounds):
             metrics = self.run_round()
             rec = {"round": r, **{k: float(v) for k, v in metrics.items()}}
-            if test_data is not None and eval_every and (r + 1) % eval_every == 0:
-                tl, ta = self.evaluate(test_data)
-                rec.update(test_loss=tl, test_acc=ta)
+            if eval_every and (r + 1) % eval_every == 0:
+                if test_data is not None:
+                    tl, ta = self.evaluate(test_data)
+                    rec.update(test_loss=tl, test_acc=ta)
+                if self.paged:
+                    rec.update(self.runner.eval_population(
+                        closure_loss=metrics.get("loss")
+                    ))
             history.append(rec)
             if log:
                 log(rec)

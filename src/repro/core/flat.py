@@ -12,6 +12,21 @@ A :class:`BankSpec` is built once per model from leaf shape/dtype metadata
 (static — safe to construct at trace time from ``ShapeDtypeStruct`` leaves)
 and caches the per-leaf offsets, so ``unravel`` is pure static slicing and
 jit-compiles to views, not gathers.
+
+The **low-rank delta bank** (:class:`DeltaBankSpec`) reparametrizes the
+same storage: clients share one frozen base pytree and each bank row holds
+only per-client adapter payloads — rank-r ``(A, B)`` factors for selected
+2-D leaves, a dense delta for small leaves, nothing for frozen leaves — so
+the row width ``d_delta`` is a small fraction of D and every downstream
+consumer of the bank (gossip, push-sum mass, EF residuals, link buffers,
+sharding row-pins, the paged store) shrinks by the same factor with no
+change to its math.  The invariant that makes directed push-sum work
+unchanged is ``delta_i = x_i - w_i * base``: it is preserved by *any*
+linear mixing of ``(delta, w)`` by the same operator (column-stochastic or
+doubly-stochastic), and the de-biased model is ``z_i = base +
+expand(delta_i) / w_i``.  ``rank="full"`` stores a dense delta per adapted
+leaf, which reproduces the dense-bank program exactly — the equivalence
+oracle pinned in ``tests/test_delta_bank.py``.
 """
 from __future__ import annotations
 
@@ -22,7 +37,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["BankSpec", "make_spec"]
+__all__ = ["BankSpec", "make_spec", "DeltaConfig", "DeltaBankSpec",
+           "BoundDeltaSpec", "make_delta_spec", "bind_delta_spec"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,6 +86,26 @@ class BankSpec:
         ]
         return self.treedef.unflatten(leaves)
 
+    # -- solver-facing hooks (overridden by the delta bank) -----------------
+
+    def debias(self, row: jnp.ndarray, w):
+        """De-biased model pytree ``z = unravel(row) / w`` (push-sum line 5).
+
+        This is the exact expression the solvers used to inline; the delta
+        bank overrides it with ``base + expand(row) / w``.
+        """
+        return jax.tree.map(lambda p: p / w, self.unravel(row))
+
+    def ravel_grad_stacked(self, G_tree, X: jnp.ndarray) -> jnp.ndarray:
+        """Client-stacked loss gradients -> (n, D) bank-space gradient rows.
+
+        For the dense bank the pullback through ``unravel`` is the identity,
+        so this is :meth:`ravel_stacked`; the delta bank pulls each leaf
+        gradient back through its ``A @ B`` factorization at the current
+        rows ``X``.
+        """
+        return self.ravel_stacked(G_tree)
+
     # -- (n, D) bank <-> client-stacked pytree ------------------------------
 
     def ravel_stacked(self, stacked_tree) -> jnp.ndarray:
@@ -111,3 +147,285 @@ def make_spec(tree, dtype=None) -> BankSpec:
     dim = int(sum(sizes))
     dtype = jnp.dtype(dtype) if dtype is not None else jnp.result_type(*dtypes)
     return BankSpec(treedef, shapes, dtypes, offsets, sizes, dim, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Low-rank delta bank: frozen shared base + per-client adapter rows.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaConfig:
+    """Knobs selecting which leaves adapt and at what rank.
+
+    ``rank``: adapter rank per selected >=2-D leaf, or ``"full"`` for a
+      dense delta on every selected leaf (the equivalence oracle — the
+      program is then the dense-bank program to float tolerance).  A leaf
+      whose rank-r factors would not be smaller than the leaf itself falls
+      back to a dense delta.
+    ``adapt``: which leaves carry a delta at all.  ``"auto"`` (default)
+      adapts everything — big 2-D leaves low-rank, small leaves dense;
+      ``"all"`` is the same selection (spelled for the oracle pairing with
+      ``rank="full"``); ``"2d"``/``"matrices"`` adapts only >=2-D leaves and
+      freezes the rest at the base; a callable ``(path, shape) -> bool``
+      or a path substring selects explicitly — unselected leaves are
+      frozen (no delta storage, served straight from the base).
+    ``base_seed``: PRNG seed that materializes the frozen shared base via
+      the program's ``init_fn`` at ``make_program`` time.
+    """
+
+    rank: Any = 8
+    adapt: Any = "auto"
+    base_seed: int = 0
+
+
+def _leaf_selected(adapt, path: str, shape) -> bool:
+    if adapt in ("auto", "all"):
+        return True
+    if adapt in ("2d", "matrices"):
+        return len(shape) >= 2
+    if callable(adapt):
+        return bool(adapt(path, shape))
+    return str(adapt) in path
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaBankSpec:
+    """Static layout of the ``(n, d_delta)`` delta bank over one base model.
+
+    Per leaf of the base pytree:
+      mode ``"lowrank"`` — the row stores ``A`` (``lead + (p, r)``) then
+        ``B`` (``lead + (r, q)``); the leaf delta is ``A @ B``.
+      mode ``"dense"`` — the row stores the leaf delta verbatim.
+      mode ``"frozen"`` — no storage; the leaf is served from the base.
+
+    All methods take the base pytree explicitly; :class:`BoundDeltaSpec`
+    closes over a concrete base and presents the ``BankSpec`` interface the
+    rest of the engine consumes.  Offsets are static, so ``unravel`` is
+    slicing + one small matmul per low-rank leaf — no gathers.
+    """
+
+    full: BankSpec              # spec of the full model pytree
+    paths: tuple[str, ...]      # per-leaf path strings (for adapt= filters)
+    modes: tuple[str, ...]      # per-leaf "lowrank" | "dense" | "frozen"
+    ranks: tuple[int, ...]      # per-leaf adapter rank (0 unless lowrank)
+    offsets: tuple[int, ...]    # per-leaf start offset in the delta row
+    sizes: tuple[int, ...]      # per-leaf payload length (0 if frozen)
+    asizes: tuple[int, ...]     # A-factor length within the payload
+    dim: int                    # d_delta
+    dtype: Any
+
+    # -- factor geometry ----------------------------------------------------
+
+    def _factor_shapes(self, i):
+        shape, r = self.full.shapes[i], self.ranks[i]
+        lead, p, q = shape[:-2], shape[-2], shape[-1]
+        return lead + (p, r), lead + (r, q)
+
+    def factors(self, row: jnp.ndarray, i: int):
+        """(A, B) of low-rank leaf ``i`` sliced out of one row."""
+        o, a, s = self.offsets[i], self.asizes[i], self.sizes[i]
+        sa, sb = self._factor_shapes(i)
+        A = jax.lax.slice(row, (o,), (o + a,)).reshape(sa)
+        B = jax.lax.slice(row, (o + a,), (o + s,)).reshape(sb)
+        return A, B
+
+    def _delta_leaf(self, row: jnp.ndarray, i: int):
+        """The expanded delta of leaf ``i`` (float32), or None if frozen."""
+        mode = self.modes[i]
+        if mode == "frozen":
+            return None
+        o, s = self.offsets[i], self.sizes[i]
+        if mode == "dense":
+            seg = jax.lax.slice(row, (o,), (o + s,))
+            return seg.reshape(self.full.shapes[i]).astype(jnp.float32)
+        A, B = self.factors(row, i)
+        return jnp.matmul(A.astype(jnp.float32), B.astype(jnp.float32))
+
+    # -- row <-> pytree -----------------------------------------------------
+
+    def unravel(self, base, row: jnp.ndarray):
+        """``base + expand(row)`` as a pytree (leaf dtypes restored)."""
+        return self.debias(base, row, None)
+
+    def debias(self, base, row: jnp.ndarray, w):
+        """De-biased model ``z = base + expand(row) / w`` (``w=None`` skips
+        the division — plain unravel)."""
+        base_leaves = self.full.treedef.flatten_up_to(base)
+        out = []
+        for i, bl in enumerate(base_leaves):
+            d = self._delta_leaf(row, i)
+            if d is None:
+                out.append(jnp.asarray(bl, self.full.dtypes[i]))
+                continue
+            if w is not None:
+                d = d / w
+            out.append((bl + d.astype(bl.dtype)).astype(self.full.dtypes[i]))
+        return self.full.treedef.unflatten(out)
+
+    def ravel(self, base, tree) -> jnp.ndarray:
+        """Pytree -> delta row (``w = 1``).  Only dense-mode leaves can hold
+        an arbitrary delta; a non-zero residual on a low-rank or frozen leaf
+        cannot be represented and raises."""
+        leaves = self.full.treedef.flatten_up_to(tree)
+        base_leaves = self.full.treedef.flatten_up_to(base)
+        segs = []
+        for i, (x, b) in enumerate(zip(leaves, base_leaves)):
+            mode = self.modes[i]
+            if mode == "dense":
+                segs.append(jnp.reshape(x - b, (-1,)).astype(self.dtype))
+            elif mode == "lowrank":
+                raise ValueError(
+                    f"leaf {self.paths[i]!r} is low-rank (r={self.ranks[i]}):"
+                    " an arbitrary delta cannot be factored into its row;"
+                    " use rank='full' or write the (A, B) factors directly"
+                )
+        if not segs:
+            return jnp.zeros((0,), self.dtype)
+        return jnp.concatenate(segs)
+
+    def init_row(self, key: jax.Array) -> jnp.ndarray:
+        """The broadcast initial row: zero deltas everywhere; low-rank leaves
+        get ``A ~ N(0, 1/p)``, ``B = 0`` so the initial delta is exactly zero
+        but gradients flow into ``B`` from the first step (standard LoRA
+        init)."""
+        segs = []
+        keys = jax.random.split(key, max(len(self.modes), 1))
+        for i, mode in enumerate(self.modes):
+            if mode == "frozen":
+                continue
+            if mode == "dense":
+                segs.append(jnp.zeros((self.sizes[i],), self.dtype))
+                continue
+            sa, _ = self._factor_shapes(i)
+            p = sa[-2]
+            A = jax.random.normal(keys[i], sa, jnp.float32) / np.sqrt(p)
+            segs.append(jnp.reshape(A, (-1,)).astype(self.dtype))
+            segs.append(
+                jnp.zeros((self.sizes[i] - self.asizes[i],), self.dtype))
+        if not segs:
+            return jnp.zeros((0,), self.dtype)
+        return jnp.concatenate(segs)
+
+    # -- gradient pullback --------------------------------------------------
+
+    def grad_rows(self, G_tree, X: jnp.ndarray) -> jnp.ndarray:
+        """Client-stacked loss gradients -> ``(n, d_delta)`` gradient rows.
+
+        Dense leaves pull back as identity (exactly the dense bank's
+        semantics — the local step moves ``delta`` by what it would have
+        moved ``x``).  Low-rank leaves pull the leaf gradient back through
+        ``A @ B`` at the *stored* factors: ``dA = G @ B^T``, ``dB = A^T @
+        G``.  Frozen leaves train nothing — their gradient is dropped.
+        """
+        leaves = self.full.treedef.flatten_up_to(G_tree)
+        n = X.shape[0]
+        segs = []
+        for i, g in enumerate(leaves):
+            mode = self.modes[i]
+            if mode == "frozen":
+                continue
+            if mode == "dense":
+                segs.append(jnp.reshape(g, (n, -1)).astype(self.dtype))
+                continue
+            sa, sb = self._factor_shapes(i)
+            o, a, s = self.offsets[i], self.asizes[i], self.sizes[i]
+            A = jax.lax.slice(X, (0, o), (n, o + a)).reshape((n,) + sa)
+            B = jax.lax.slice(X, (0, o + a), (n, o + s)).reshape((n,) + sb)
+            gf = g.astype(jnp.float32)
+            dA = jnp.matmul(gf, jnp.swapaxes(B.astype(jnp.float32), -1, -2))
+            dB = jnp.matmul(jnp.swapaxes(A.astype(jnp.float32), -1, -2), gf)
+            segs.append(jnp.reshape(dA, (n, -1)).astype(self.dtype))
+            segs.append(jnp.reshape(dB, (n, -1)).astype(self.dtype))
+        if not segs:
+            return jnp.zeros((n, 0), self.dtype)
+        return jnp.concatenate(segs, axis=1)
+
+
+def make_delta_spec(tree, rank=8, adapt="auto", dtype=None) -> DeltaBankSpec:
+    """Build the :class:`DeltaBankSpec` for one client's parameter pytree.
+
+    Like :func:`make_spec`, only static shape/dtype metadata is read, so
+    ``tree`` may hold ``ShapeDtypeStruct`` leaves.  ``rank="full"`` (with
+    any selecting ``adapt``) stores dense deltas everywhere selected — the
+    layout then matches :func:`make_spec` of the selected leaves and the
+    program reproduces the dense bank.
+    """
+    full = make_spec(tree, dtype=dtype)
+    path_leaves, _ = jax.tree_util.tree_flatten_with_path(tree)
+    paths = tuple(jax.tree_util.keystr(p) for p, _ in path_leaves)
+    modes, ranks, sizes, asizes = [], [], [], []
+    for path, shape, size in zip(paths, full.shapes, full.sizes):
+        if not _leaf_selected(adapt, path, shape):
+            modes.append("frozen"); ranks.append(0)
+            sizes.append(0); asizes.append(0)
+            continue
+        r = 0
+        if rank != "full" and len(shape) >= 2:
+            r = min(int(rank), shape[-2], shape[-1])
+            lead = int(np.prod(shape[:-2])) if shape[:-2] else 1
+            a = lead * shape[-2] * r
+            b = lead * r * shape[-1]
+            if a + b < size:
+                modes.append("lowrank"); ranks.append(r)
+                sizes.append(a + b); asizes.append(a)
+                continue
+        modes.append("dense"); ranks.append(0)
+        sizes.append(size); asizes.append(0)
+    offsets = tuple(int(o) for o in np.cumsum((0,) + tuple(sizes))[:-1])
+    return DeltaBankSpec(full, paths, tuple(modes), tuple(ranks), offsets,
+                         tuple(sizes), tuple(asizes), int(sum(sizes)),
+                         full.dtype)
+
+
+def bind_delta_spec(spec: DeltaBankSpec, base) -> "BoundDeltaSpec":
+    """Close a static delta layout over its concrete frozen base."""
+    return BoundDeltaSpec(spec, base)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class BoundDeltaSpec:
+    """A :class:`DeltaBankSpec` closed over its concrete frozen base — the
+    object ``RoundProgram.spec`` holds for delta programs, presenting the
+    same interface the dense :class:`BankSpec` does so solvers, eval, the
+    paged store and serving all consume it blindly."""
+
+    delta: DeltaBankSpec
+    base: Any  # concrete base pytree (the frozen shared model)
+
+    @property
+    def dim(self) -> int:
+        return self.delta.dim
+
+    @property
+    def dtype(self):
+        return self.delta.dtype
+
+    @property
+    def treedef(self):
+        return self.delta.full.treedef
+
+    def unravel(self, row: jnp.ndarray):
+        return self.delta.unravel(self.base, row)
+
+    def debias(self, row: jnp.ndarray, w):
+        return self.delta.debias(self.base, row, w)
+
+    def ravel(self, tree) -> jnp.ndarray:
+        return self.delta.ravel(self.base, tree)
+
+    def ravel_grad_stacked(self, G_tree, X: jnp.ndarray) -> jnp.ndarray:
+        return self.delta.grad_rows(G_tree, X)
+
+    def init_row(self, key: jax.Array) -> jnp.ndarray:
+        return self.delta.init_row(key)
+
+    def base_row(self) -> jnp.ndarray:
+        """The base ravelled under the *full* model spec (checkpoint v3)."""
+        return self.delta.full.ravel(self.base)
+
+    def unravel_stacked(self, bank: jnp.ndarray):
+        return jax.vmap(self.unravel)(bank)
+
+    def debias_stacked(self, bank: jnp.ndarray, w: jnp.ndarray):
+        return jax.vmap(self.debias)(bank, w)

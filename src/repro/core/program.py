@@ -30,7 +30,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import topology
-from repro.core.flat import BankSpec, make_spec
+from repro.core.flat import (
+    BankSpec,
+    BoundDeltaSpec,
+    DeltaConfig,
+    bind_delta_spec,
+    make_delta_spec,
+    make_spec,
+)
 from repro.core.stages import (
     DelayedPushSumMixer,
     EventTriggeredMixer,
@@ -154,15 +161,23 @@ class RoundProgram:
 
     # -- pure state constructor ---------------------------------------------
 
+    def init_row(self, pkey: jax.Array) -> jnp.ndarray:
+        """The broadcast initial bank row.  Dense bank: the ravelled
+        ``init_fn(pkey)`` model.  Delta bank: the spec's init row (zero
+        deltas over the frozen base; low-rank leaves LoRA-initialized) —
+        every client starts at exactly the base model either way."""
+        if isinstance(self.spec, BoundDeltaSpec):
+            return self.spec.init_row(pkey)
+        return self.spec.ravel(self.init_fn(pkey))
+
     def init(self, key: jax.Array) -> FLState:
         pkey, skey = jax.random.split(key)
-        params0 = self.init_fn(pkey)
         w0 = self.mixer.init_weights(self.n)
         losses0 = jnp.zeros((self.n,), jnp.float32)
         if self.mixer.kind == "central":
-            row = self.spec.ravel(params0)
+            row = self.spec.ravel(self.init_fn(pkey))
             return FLState(row, None, w0, skey, jnp.int32(0), losses0, ())
-        row = self.spec.ravel(params0)
+        row = self.init_row(pkey)
         bank = jnp.broadcast_to(row, (self.n, self.spec.dim))
         mom = jnp.zeros((self.n, self.spec.dim), jnp.float32)
         comp = self.compressor.init_state(self.n, self.spec.dim)
@@ -517,11 +532,20 @@ def make_program(
     link: topology.LinkModel | None = None,
     mesh=None,
     shard_axis: str = "clients",
+    delta: DeltaConfig | int | str | None = None,
+    bank_dtype=None,
 ) -> RoundProgram:
     """Compose an ``AlgoConfig`` into a :class:`RoundProgram`.
 
     The bank spec is built from ``jax.eval_shape`` of ``init_fn`` — no
-    parameters are materialized here; ``program.init`` owns that.
+    parameters are materialized here; ``program.init`` owns that.  With
+    ``delta`` (a :class:`~repro.core.flat.DeltaConfig`, or just a rank /
+    ``"full"``) the bank stores per-client low-rank adapter rows over a
+    frozen shared base materialized once from ``init_fn`` — every solver /
+    compressor / mixer then operates verbatim on the narrower
+    ``(n, d_delta)`` bank.  ``bank_dtype`` overrides the bank storage dtype
+    (e.g. ``jnp.bfloat16`` rows with float32 momentum — the EF residual
+    stays float32, so top-k error feedback remains exact).
 
     ``gossip`` picks the mixing-operator representation: ``"auto"``
     (default) applies the density rule in
@@ -648,7 +672,30 @@ def make_program(
             )
 
         client_data = jax.tree.map(_row_put, client_data)
-    spec = make_spec(jax.eval_shape(init_fn, jax.random.PRNGKey(0)))
+    shape_tree = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
+    if delta is not None:
+        if not isinstance(delta, DeltaConfig):
+            delta = DeltaConfig(rank=delta)
+        if mixer.kind == "central":
+            raise ValueError(
+                "the central (server) round keeps one global row — there "
+                "are no per-client deltas to bank; drop delta= for "
+                "comm='central'"
+            )
+        dspec = make_delta_spec(
+            shape_tree, rank=delta.rank, adapt=delta.adapt, dtype=bank_dtype
+        )
+        if dspec.dim == 0:
+            raise ValueError(
+                f"delta adapt={delta.adapt!r} selected no leaves: every "
+                "client would be frozen at the base model"
+            )
+        # The frozen shared base is materialized exactly once, here; rows
+        # in the bank are pure adapter payloads over it.
+        base = init_fn(jax.random.PRNGKey(delta.base_seed))
+        spec = bind_delta_spec(dspec, base)
+    else:
+        spec = make_spec(shape_tree, dtype=bank_dtype)
     # Exponential graphs cycle through log2(n) hop matrices; precompute
     # the stack once so the (traced) round index can select the graph.
     exp_cycle = None

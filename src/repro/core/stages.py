@@ -82,8 +82,10 @@ class SamMomentumSolver:
             # Unravel OUTSIDE the differentiated closure, fusing the line-5
             # de-bias into the leaf slices; the gradient stays leaf-shaped
             # (no scatter back into a (D,) row per leaf) and is ravelled
-            # once — one contiguous write per client.
-            z_tree = jax.tree.map(lambda p: p / w_i, spec.unravel(x_i))
+            # once — one contiguous write per client.  ``spec.debias`` is
+            # ``unravel(x) / w`` for the dense bank and ``base +
+            # expand(x) / w`` for the delta bank.
+            z_tree = spec.debias(x_i, w_i)
             g_tree, (loss, acc) = sam_gradient(
                 loss_fn, z_tree, batch, self.rho
             )  # lines 6-8
@@ -105,7 +107,7 @@ class SamMomentumSolver:
             def step0(carry, _):
                 X, ks = carry
                 ks, G_tree, losses, accs = jax.vmap(grad_one)(X, w, ks, data)
-                G = spec.ravel_stacked(G_tree)  # one contiguous write
+                G = spec.ravel_grad_stacked(G_tree, X)  # one contiguous write
                 X, _, _ = kops.fused_update_bank(X, V0, G, 0.0, lr, w)
                 return (X, ks), (losses, accs)
 
@@ -117,7 +119,7 @@ class SamMomentumSolver:
         def step(carry, _):
             X, V, ks = carry
             ks, G_tree, losses, accs = jax.vmap(grad_one)(X, w, ks, data)
-            G = spec.ravel_stacked(G_tree)  # one contiguous write
+            G = spec.ravel_grad_stacked(G_tree, X)  # one contiguous write
             # Lines 9-11 fused over the whole bank.  The de-biased z output
             # feeds the next TPU iteration from VMEM; on the CPU inline
             # path it is unused here and dead-code eliminated.
@@ -151,7 +153,7 @@ class ProximalSolver(SamMomentumSolver):
             def step0(carry, _):
                 X, ks = carry
                 ks, G_tree, losses, accs = jax.vmap(grad_one)(X, w, ks, data)
-                G = spec.ravel_stacked(G_tree)
+                G = spec.ravel_grad_stacked(G_tree, X)
                 G = G + self.mu * (X - X0).astype(G.dtype)
                 X, _, _ = kops.fused_update_bank(X, V0, G, 0.0, lr, w)
                 return (X, ks), (losses, accs)
@@ -170,7 +172,7 @@ class ProximalSolver(SamMomentumSolver):
         def step(carry, _):
             X, V, ks = carry
             ks, G_tree, losses, accs = jax.vmap(grad_one)(X, w, ks, data)
-            G = spec.ravel_stacked(G_tree)
+            G = spec.ravel_grad_stacked(G_tree, X)
             G = G + self.mu * (X - X0).astype(G.dtype)
             X, V, _ = kops.fused_update_bank(X, V, G, self.alpha, lr, w)
             return (X, V, ks), (losses, accs)

@@ -13,7 +13,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +23,7 @@ from repro.core.sam import apply_update, momentum_update, sam_gradient
 from repro.models.registry import ModelApi
 
 __all__ = ["StepConfig", "make_train_step", "make_round_step", "make_serve_step",
+           "PersonalizedServe", "make_personalized_serve_step",
            "pod_mixing_matrix", "pod_mixing_neighbors", "resolve_compressor",
            "init_pod_comp_state", "resolve_pod_mixer", "init_pod_link_state"]
 
@@ -322,3 +323,51 @@ def make_serve_step(api: ModelApi) -> Callable:
         return api.decode_step(params, cache, tokens, pos)
 
     return serve_step
+
+
+class PersonalizedServe(NamedTuple):
+    """Batched many-model serving over the client bank (see
+    :func:`make_personalized_serve_step`)."""
+
+    expand: Callable       # (bank, w, ids) -> client-stacked params
+    prefill: Callable      # (params_stacked, batch, cache_len) -> (logits, caches)
+    decode_step: Callable  # (params_stacked, caches, tokens (B,), pos) -> ...
+
+
+def make_personalized_serve_step(api: ModelApi, spec) -> PersonalizedServe:
+    """Serve many *different* clients' models in one batched decode.
+
+    The bank is a personalization store: request lane ``b`` serves client
+    ``ids[b]``, whose model is its bank row expanded onto the shared
+    weights.  ``spec`` is the program's bank spec — a
+    :class:`~repro.core.flat.BoundDeltaSpec` expands ``base + (A @ B) / w``
+    per leaf (the frozen base is closed over once, as a jit constant, and
+    only the narrow ``(B, d_delta)`` rows are gathered per batch); a plain
+    dense :class:`~repro.core.flat.BankSpec` works too (``row / w``), it is
+    just D-wide per lane.
+
+    ``expand`` runs once per batch; ``prefill``/``decode_step`` vmap the
+    model-zoo prefill/decode over (params-lane, cache-lane) with an inner
+    batch of 1, so every lane decodes its own client's weights in the same
+    XLA program — one dispatch per token for the whole multi-client batch.
+    """
+
+    def expand(bank, w, ids):
+        rows = bank[ids]
+        wv = (jnp.ones(ids.shape, jnp.float32) if w is None
+              else w[ids].astype(jnp.float32))
+        return jax.vmap(spec.debias)(rows, wv)
+
+    def prefill(params_stacked, batch, cache_len):
+        logits, caches = jax.vmap(
+            lambda p, b: api.prefill(p, b, cache_len)
+        )(params_stacked, jax.tree.map(lambda v: v[:, None], batch))
+        return logits[:, 0], caches
+
+    def decode_step(params_stacked, caches, tokens, pos):
+        logits, caches = jax.vmap(
+            api.decode_step, in_axes=(0, 0, 0, None)
+        )(params_stacked, caches, tokens[:, None], pos)
+        return logits[:, 0], caches
+
+    return PersonalizedServe(expand, prefill, decode_step)

@@ -157,7 +157,7 @@ class PagedRunner:
             self._key = _key_from_words(meta["key"])
             self._round = int(meta["round"])
         else:
-            row = np.asarray(program.spec.ravel(program.init_fn(pkey)))
+            row = np.asarray(program.init_row(pkey))
             self.store = ClientStore.create(
                 store_dir, self.n, self._fields,
                 rows_per_chunk=rows_per_chunk,
@@ -411,6 +411,46 @@ class PagedRunner:
             total += float(((z - mean[None, :]) ** 2).sum())
         return total / self.n
 
+    def eval_population(self, closure_loss: float | None = None) -> dict:
+        """Full-population metrics at an eval cadence, streamed through
+        cold chunks via ``store.iter_chunks`` — eval otherwise sees only
+        each round's fault-in closure (ROADMAP item 2b).
+
+        One streaming pass accumulates the population view of the stored
+        per-client state: the mean/max of every client's last local loss
+        (stale for cold clients — that staleness is exactly what the
+        population view exposes), the exact total push-sum mass, and the
+        de-biased consensus error over all n rows.  With ``closure_loss``
+        (the last round's active-mean loss) the record also carries the
+        population-vs-closure delta ``pop_loss_delta`` — how far the hot
+        closure's view drifts from the whole population's.
+        """
+        self.flush()
+        mean = self.store.field_sum("params") / self.n
+        loss_sum = 0.0
+        loss_max = -np.inf
+        mass = 0.0
+        cons = 0.0
+        for _, chunk in self.store.iter_chunks(
+            fields=["params", "w", "losses"]
+        ):
+            losses = chunk["losses"].astype(np.float64)
+            loss_sum += float(losses.sum())
+            loss_max = max(loss_max, float(losses.max()))
+            mass += float(chunk["w"].astype(np.float64).sum())
+            z = chunk["params"].astype(np.float64) / chunk["w"].astype(
+                np.float64)[:, None]
+            cons += float(((z - mean[None, :]) ** 2).sum())
+        rec = {
+            "pop_loss": loss_sum / self.n,
+            "pop_loss_max": loss_max,
+            "pop_mass": mass,
+            "pop_consensus_error": cons / self.n,
+        }
+        if closure_loss is not None:
+            rec["pop_loss_delta"] = rec["pop_loss"] - float(closure_loss)
+        return rec
+
     def read_rows(self, ids) -> dict:
         """Durable values of ``ids`` (flushes the write-back queue first)."""
         self.flush()
@@ -465,7 +505,15 @@ def _spec_fingerprint(spec) -> dict:
     from repro.checkpoint.io import _spec_meta
 
     m = _spec_meta(spec)
-    return {k: m[k] for k in ("offsets", "shapes", "dtypes", "dim", "dtype")}
+    out = {k: m[k] for k in ("offsets", "shapes", "dtypes", "dim", "dtype")}
+    if "delta" in m:
+        # Delta banks: rows are adapter payloads, so the per-leaf mode/rank
+        # layout is part of the row's meaning — a store written at rank 8
+        # must not silently open under rank 16 (or dense).
+        out["delta"] = {
+            k: m["delta"][k] for k in ("modes", "ranks")
+        }
+    return out
 
 
 class ResidentDriver:
@@ -485,7 +533,7 @@ class ResidentDriver:
 
         key = jax.random.PRNGKey(seed)
         pkey, skey = jax.random.split(key)
-        row = program.spec.ravel(program.init_fn(pkey))
+        row = program.init_row(pkey)
         bank = jnp.broadcast_to(row, (self.n, program.spec.dim))
         self.state = FLState(
             params=bank,

@@ -112,6 +112,32 @@ def test_serve_cli():
     assert "ms/step" in r.stdout
 
 
+def test_serve_smoke_flag_is_real():
+    """--smoke used to be ``store_true`` with ``default=True`` — a no-op
+    that made full-size serving unreachable.  It is now a
+    BooleanOptionalAction pair: default on, ``--no-smoke`` turns it off
+    (checked at the parser level; the full-size archs are CI-infeasible)."""
+    sys.path.insert(0, "src")
+    try:
+        from repro.launch.serve import build_parser
+    finally:
+        sys.path.pop(0)
+    ap = build_parser()
+    assert ap.parse_args([]).smoke is True
+    assert ap.parse_args(["--smoke"]).smoke is True
+    assert ap.parse_args(["--no-smoke"]).smoke is False
+
+
+def test_serve_cli_personalized():
+    """--clients N serves N distinct delta-bank models in one batched
+    decode (each lane expands its own rank-8 adapters onto the base)."""
+    r = _run(["repro.launch.serve", "--arch", "glm4-9b", "--smoke",
+              "--clients", "2", "--prompt-len", "8", "--new-tokens", "4"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "personalized" in r.stdout and "ms/step" in r.stdout
+    assert "d_delta=" in r.stdout
+
+
 def test_serve_cli_rejects_encoder():
     r = _run(["repro.launch.serve", "--arch", "hubert-xlarge", "--smoke"])
     assert r.returncode != 0

@@ -1,0 +1,310 @@
+"""Low-rank delta bank: frozen shared base + per-client adapter rows.
+
+The load-bearing contract is the equivalence oracle: with ``rank="full"``
+(every selected leaf stored as a dense delta) the delta program is the
+dense-bank program in different coordinates — ``d_i = x_i - w_i * base``
+is preserved exactly by any linear mixing of ``(d, w)`` by the same
+column-stochastic operator, so training from ``x_i(0) = base`` must match
+the dense trainer to float tolerance.  Everything else (narrow gossip,
+EF residuals, paging, checkpoints) rides on that identity.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DeltaConfig,
+    FLTrainer,
+    LinkModel,
+    TopologyConfig,
+    bind_delta_spec,
+    make_algo,
+    make_delta_spec,
+)
+from repro.data.dirichlet import dirichlet_partition, stack_client_data
+from repro.data.synthetic import make_dataset
+from repro.models.small import mnist_2nn
+
+N_CLIENTS = 8
+
+
+@pytest.fixture(scope="module")
+def setting():
+    train, test = make_dataset("mnist", 2000, 500, seed=0)
+    parts = dirichlet_partition(train["y"], N_CLIENTS, alpha=0.3, seed=0)
+    cdata = stack_client_data(train, parts, pad_to=256)
+    cdata = {k: jnp.asarray(v) for k, v in cdata.items()}
+    testj = {k: jnp.asarray(v) for k, v in test.items()}
+    return mnist_2nn(), cdata, testj
+
+
+def _topo():
+    return TopologyConfig(kind="kout", n_clients=N_CLIENTS, k_out=2)
+
+
+def _algo(name):
+    kw = {"batch_size": 32}
+    if name != "sgp":
+        kw["local_steps"] = 2
+    return make_algo(name, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Equivalence oracle: rank="full" == the dense-bank program.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["dfedsgpsm", "dfedsam", "sgp"])
+def test_full_rank_matches_dense_program(setting, name):
+    """rank="full" stores every leaf as a dense delta; started from
+    ``x_i(0) = base`` the dense trainer must produce the same bank (modulo
+    the coordinate change) round for round."""
+    model, cdata, _ = setting
+    tr_d = FLTrainer(model.loss, model.init, cdata, _algo(name), _topo(),
+                     seed=0, participation=0.5,
+                     delta=DeltaConfig(rank="full", adapt="all"))
+    base = tr_d.spec.base
+    tr_x = FLTrainer(model.loss, lambda k: base, cdata, _algo(name),
+                     _topo(), seed=0, participation=0.5)
+    for _ in range(3):
+        md = tr_d.run_round()
+        mx = tr_x.run_round()
+    assert abs(float(md["loss"]) - float(mx["loss"])) < 1e-4
+    zd = tr_d.debiased_models()
+    zx = tr_x.debiased_models()
+    err = max(float(jnp.abs(a - b).max())
+              for a, b in zip(jax.tree.leaves(zd), jax.tree.leaves(zx)))
+    assert err < 1e-4, f"full-rank delta diverged from dense: {err}"
+
+
+def test_rank8_bank_is_narrow(setting):
+    """The paper-facing size criterion: rank-8 adapters on the bench model
+    hold <= 10% of the full parameter count per client row."""
+    model, _, _ = setting
+    params = model.init(jax.random.PRNGKey(0))
+    dspec = make_delta_spec(params, rank=8)
+    assert 0 < dspec.dim <= 0.10 * dspec.full.dim
+    # and the full-rank spec is exactly full width (all-dense deltas)
+    fspec = make_delta_spec(params, rank="full", adapt="all")
+    assert fspec.dim == fspec.full.dim
+
+
+def test_rank8_trains(setting):
+    model, cdata, testj = setting
+    tr = FLTrainer(model.loss, model.init, cdata, _algo("dfedsgpsm"),
+                   _topo(), seed=0, participation=0.5, delta=8)
+    l0, _ = tr.evaluate(testj)
+    tr.fit(8)
+    l1, acc = tr.evaluate(testj)
+    # 13k adapter floats train slower than the 200k dense model; the pin
+    # is monotone improvement, not the dense path's accuracy.
+    assert np.isfinite(l1) and l1 < l0 - 0.1
+    assert 0.0 <= acc <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# Spec mechanics: round-trip, init, config validation.
+# ---------------------------------------------------------------------------
+
+def test_roundtrip_unravel_ravel(setting):
+    model, _, _ = setting
+    base = model.init(jax.random.PRNGKey(0))
+    spec = bind_delta_spec(make_delta_spec(base, rank="full", adapt="all"),
+                           base)
+    row = jax.random.normal(jax.random.PRNGKey(1), (spec.dim,), spec.dtype)
+    back = spec.ravel(spec.unravel(row))
+    assert float(jnp.abs(back - row).max()) < 1e-5
+
+
+def test_lowrank_rows_cannot_be_factored_back(setting):
+    model, _, _ = setting
+    base = model.init(jax.random.PRNGKey(0))
+    spec = bind_delta_spec(make_delta_spec(base, rank=8), base)
+    with pytest.raises(ValueError, match="factored"):
+        spec.ravel(spec.unravel(jnp.zeros((spec.dim,), spec.dtype)))
+
+
+def test_init_row_expands_to_base(setting):
+    """B starts at zero, so every client's initial model IS the base."""
+    model, _, _ = setting
+    base = model.init(jax.random.PRNGKey(0))
+    spec = bind_delta_spec(make_delta_spec(base, rank=8), base)
+    tree = spec.unravel(spec.init_row(jax.random.PRNGKey(3)))
+    for got, want in zip(jax.tree.leaves(tree), jax.tree.leaves(base)):
+        assert float(jnp.abs(got - want).max()) < 1e-6
+
+
+def test_delta_rejects_central_mixer(setting):
+    model, cdata, _ = setting
+    with pytest.raises(ValueError, match="central"):
+        FLTrainer(model.loss, model.init, cdata, _algo("fedavg"),
+                  _topo(), seed=0, delta=8)
+
+
+def test_delta_rejects_pytree_oracle_path(setting):
+    model, cdata, _ = setting
+    with pytest.raises(ValueError, match="flat"):
+        FLTrainer(model.loss, model.init, cdata, _algo("dfedsgpsm"),
+                  _topo(), seed=0, flat=False, delta=8)
+
+
+def test_adapt_filter_2d_freezes_biases(setting):
+    model, _, _ = setting
+    base = model.init(jax.random.PRNGKey(0))
+    spec = make_delta_spec(base, rank="full", adapt="2d")
+    # only the (in, out) weight matrices are adapted; biases are frozen
+    n_mat = sum(1 for x in jax.tree.leaves(base) if x.ndim >= 2)
+    assert sum(1 for m in spec.modes if m != "frozen") == n_mat
+    d_mats = sum(int(np.prod(x.shape))
+                 for x in jax.tree.leaves(base) if x.ndim >= 2)
+    assert spec.dim == d_mats
+
+
+# ---------------------------------------------------------------------------
+# Invariant compositions: drops, sharding, paging.
+# ---------------------------------------------------------------------------
+
+def test_mass_conserved_under_drops(setting):
+    model, cdata, _ = setting
+    tr = FLTrainer(model.loss, model.init, cdata, _algo("dfedsgpsm"),
+                   _topo(), seed=0, participation=0.5, delta=8,
+                   link=LinkModel(drop=0.3))
+    for _ in range(5):
+        m = tr.run_round()
+    assert np.isfinite(float(m["loss"]))
+    assert np.isclose(float(tr.state.w.sum()), N_CLIENTS, atol=1e-3)
+
+
+def test_sharded_delta_round(setting):
+    """The delta bank row-shards like the dense one: same GSPMD pins on a
+    (possibly 1-device) clients mesh, mass conserved."""
+    from repro.launch.mesh import make_clients_mesh
+
+    model, cdata, _ = setting
+    tr = FLTrainer(model.loss, model.init, cdata, _algo("sgp"),
+                   TopologyConfig(kind="kout", n_clients=N_CLIENTS, k_out=2,
+                                  time_varying=False),
+                   seed=0, participation=0.5, delta=8,
+                   mesh=make_clients_mesh())
+    m = tr.run_round()
+    assert np.isfinite(float(m["loss"]))
+    assert tr.state.params.shape == (N_CLIENTS, tr.spec.dim)
+    assert np.isclose(float(tr.state.w.sum()), N_CLIENTS, atol=1e-3)
+
+
+def test_paged_delta_round(tmp_path, setting):
+    """The paged store holds d_delta-wide rows (fingerprinted by rank, so
+    a store can't silently reopen under a different adapter shape) and
+    conserves mass over the whole population."""
+    model, cdata, _ = setting
+    tr = FLTrainer(model.loss, model.init, cdata, _algo("dfedsgpsm"),
+                   _topo(), seed=0, delta=8, paged=True,
+                   store_dir=str(tmp_path / "store"), k_active=4)
+    for _ in range(3):
+        m = tr.run_round()
+    assert np.isfinite(float(m["loss"]))
+    assert tr.runner.store.fields["params"].shape == (tr.spec.dim,)
+    assert abs(tr.runner.total_mass() - N_CLIENTS) < 1e-3
+    tr.runner.close()
+
+
+def test_population_eval_cadence(tmp_path, setting):
+    """ROADMAP 2b: at the eval cadence the paged trainer streams a
+    full-population pass through cold chunks and reports population
+    metrics + their delta vs the hot closure's view."""
+    model, cdata, testj = setting
+    tr = FLTrainer(model.loss, model.init, cdata, _algo("dfedsgpsm"),
+                   _topo(), seed=0, paged=True,
+                   store_dir=str(tmp_path / "store"), k_active=4)
+    hist = tr.fit(2, test_data=testj, eval_every=2)
+    assert "pop_loss" not in hist[0]  # off-cadence rounds stay cheap
+    rec = hist[1]
+    for key in ("pop_loss", "pop_loss_max", "pop_mass",
+                "pop_consensus_error", "pop_loss_delta", "test_loss"):
+        assert key in rec, key
+    assert np.isfinite(rec["pop_loss"])
+    assert abs(rec["pop_mass"] - N_CLIENTS) < 1e-3
+    assert rec["pop_loss_max"] >= rec["pop_loss"]
+    tr.runner.close()
+
+
+# ---------------------------------------------------------------------------
+# Checkpoints: v3 save/restore, v2 transparency, mismatch errors.
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_v3_roundtrip(tmp_path, setting):
+    from repro.checkpoint import restore_bank, save_bank
+
+    model, cdata, _ = setting
+    tr = FLTrainer(model.loss, model.init, cdata, _algo("dfedsgpsm"),
+                   _topo(), seed=0, delta=8)
+    tr.run_round()
+    path = save_bank(str(tmp_path), 1, tr.state.params, tr.spec,
+                     extra={"w": tr.state.w})
+    bank, extra, meta = restore_bank(path, tr.spec)
+    assert meta["delta"]["ranks"] == list(tr.spec.delta.ranks)
+    np.testing.assert_allclose(bank, np.asarray(tr.state.params),
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(extra["w"], np.asarray(tr.state.w))
+
+
+def test_checkpoint_v2_still_loads_dense(tmp_path, setting):
+    """The dense path still writes/reads format v2 untouched — delta is
+    additive, not a migration."""
+    from repro.checkpoint import restore_bank, save_bank
+
+    model, cdata, _ = setting
+    tr = FLTrainer(model.loss, model.init, cdata, _algo("dfedsgpsm"),
+                   _topo(), seed=0)
+    tr.run_round()
+    path = save_bank(str(tmp_path), 1, tr.state.params, tr.spec)
+    bank, _, meta = restore_bank(path, tr.spec)
+    assert meta.get("format", 2) == 2 and "delta" not in meta
+    np.testing.assert_allclose(bank, np.asarray(tr.state.params),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_checkpoint_structure_mismatch_raises(tmp_path, setting):
+    from repro.checkpoint import restore_bank, save_bank
+
+    model, cdata, _ = setting
+    base = model.init(jax.random.PRNGKey(0))
+    dspec = bind_delta_spec(make_delta_spec(base, rank=8), base)
+    tr = FLTrainer(model.loss, model.init, cdata, _algo("dfedsgpsm"),
+                   _topo(), seed=0)
+    path = save_bank(str(tmp_path), 1, tr.state.params, tr.spec)
+    with pytest.raises(ValueError, match="mismatch"):
+        restore_bank(path, dspec)  # dense ckpt, delta spec
+
+
+def test_checkpoint_base_mismatch_raises(tmp_path, setting):
+    """Adapter rows over a different base are silent garbage — restoring
+    under a drifted base must fail loudly."""
+    from repro.checkpoint import restore_bank, save_bank
+
+    model, cdata, _ = setting
+    tr = FLTrainer(model.loss, model.init, cdata, _algo("dfedsgpsm"),
+                   _topo(), seed=0, delta=8)
+    path = save_bank(str(tmp_path), 1, tr.state.params, tr.spec)
+    other = jax.tree.map(lambda x: x + 0.5, tr.spec.base)
+    drifted = bind_delta_spec(tr.spec.delta, other)
+    with pytest.raises(ValueError, match="base"):
+        restore_bank(path, drifted)
+
+
+def test_paged_store_fingerprints_rank(tmp_path, setting):
+    """A rank-8 store must refuse to reopen under a rank-16 program."""
+    model, cdata, _ = setting
+    store = str(tmp_path / "store")
+    tr = FLTrainer(model.loss, model.init, cdata, _algo("dfedsgpsm"),
+                   _topo(), seed=0, delta=8, paged=True,
+                   store_dir=store, k_active=4)
+    tr.run_round()
+    tr.save()
+    tr.runner.close()
+    with pytest.raises(ValueError):
+        FLTrainer(model.loss, model.init, cdata, _algo("dfedsgpsm"),
+                  _topo(), seed=0, delta=16, paged=True,
+                  store_dir=store, k_active=4)

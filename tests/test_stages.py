@@ -223,6 +223,66 @@ def test_topk_ef_exact_on_bf16_bank(seed, n, d, ratio):
 
 
 # ---------------------------------------------------------------------------
+# Per-stage dtype policy: bf16 bank, f32 momentum + EF residual.
+# ---------------------------------------------------------------------------
+
+_DTYPE_SETTING = []
+
+
+def _dtype_setting():
+    # The _hyp.py fallback shim can't mix @given with pytest fixtures, so
+    # the property test memoizes its own module-scoped setting.
+    if not _DTYPE_SETTING:
+        train, _ = make_dataset("mnist", 1200, 100, seed=0)
+        parts = dirichlet_partition(train["y"], N_CLIENTS, alpha=0.3, seed=0)
+        cdata = stack_client_data(train, parts, pad_to=128)
+        _DTYPE_SETTING.append(
+            (mnist_2nn(), {k: jnp.asarray(v) for k, v in cdata.items()}))
+    return _DTYPE_SETTING[0]
+
+
+@given(st.integers(0, 999))
+@settings(max_examples=5, deadline=None)
+def test_bank_dtype_bf16_keeps_f32_momentum_and_exact_ef(seed):
+    """``bank_dtype=bf16`` halves what gossip/EF/checkpoints move, but the
+    accumulators must not narrow with it: momentum and the error-feedback
+    residual stay float32, so PR 3's exact-EF guarantee (what the bf16
+    cast rounds off is deferred to the residual, never dropped) holds on
+    the narrow bank, and push-sum mass stays exact."""
+    model, cdata = _dtype_setting()
+    algo = make_algo("dfedsgpsm", local_steps=2, compressor="topk_ef",
+                     topk_ratio=0.25)
+    topo = TopologyConfig(kind="kout", n_clients=N_CLIENTS, k_out=2)
+    tr = FLTrainer(model.loss, model.init, cdata, algo, topo, seed=seed,
+                   participation=0.5, bank_dtype=jnp.bfloat16)
+    for _ in range(2):
+        m = tr.run_round()
+    state = tr.state
+    assert state.params.dtype == jnp.bfloat16
+    assert state.mom.dtype == jnp.float32
+    for leaf in jax.tree.leaves(state.comp):
+        assert leaf.dtype == jnp.float32  # EF residual never narrows
+        assert np.all(np.isfinite(np.asarray(leaf)))
+    assert np.isfinite(float(m["loss"]))
+    assert np.isclose(float(state.w.sum()), N_CLIENTS, atol=1e-2)
+
+
+def test_bank_dtype_composes_with_delta(setting):
+    """bf16 delta bank: adapter rows are stored bf16, expansion happens in
+    f32 on top of the f32 base, and the round still trains."""
+    model, cdata = setting
+    algo = make_algo("dfedsgpsm", local_steps=2)
+    topo = TopologyConfig(kind="kout", n_clients=N_CLIENTS, k_out=2)
+    tr = FLTrainer(model.loss, model.init, cdata, algo, topo, seed=0,
+                   participation=0.5, delta=8, bank_dtype=jnp.bfloat16)
+    m = tr.run_round()
+    assert tr.state.params.dtype == jnp.bfloat16
+    assert tr.state.params.shape[1] == tr.spec.dim
+    assert np.isfinite(float(m["loss"]))
+    assert np.isclose(float(tr.state.w.sum()), N_CLIENTS, atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
 # The configured topo.k_out is honored by EVERY sampled mixing family.
 # ---------------------------------------------------------------------------
 
