@@ -512,6 +512,14 @@ def paged_bench(n: int = 4096, k_active: int = 256, k_out: int = 4,
         row_err = float(np.abs(rows["params"]
                                - np.asarray(twin.state.params)).max())
         w_err = float(np.abs(rows["w"] - np.asarray(twin.state.w)).max())
+        # Checksum-verify everything the twin run committed: every
+        # materialized chunk re-reads clean against its recorded CRC.
+        paged.save()
+        verify = paged.store.verify_chunks()
+        results["verify"] = verify
+        emit("round/paged/verified_chunks", verify["verified"],
+             f"chunks+blobs re-read clean against {verify['bytes']} "
+             "recorded-checksum bytes")
         paged.close()
         equiv_ok = loss_err < 1e-4 and row_err < 5e-4 and w_err < 1e-4
         emit("round/paged/equiv_row_err", row_err,
@@ -531,6 +539,219 @@ def paged_bench(n: int = 4096, k_active: int = 256, k_out: int = 4,
         with open(json_out, "w") as f:
             json.dump({"paged": results}, f, indent=1)
         print(f"# wrote paged-population results -> {json_out}")
+    return results
+
+
+# ---------------------------------------------------------------------------
+# Chaos harness (--chaos): churn + injected store faults, exact recovery.
+# ---------------------------------------------------------------------------
+
+def chaos_bench(n: int = 4096, k_active: int = 256, k_out: int = 4,
+                rounds: int = 24, segment: int = 6, smoke: bool = False,
+                json_out: str | None = None) -> dict:
+    """Train the paged population under a seeded fault schedule — node
+    churn (transient + permanent failures, cold resurrection) composed
+    with chaos-injected store IO (transient EIO, slow reads, torn writes,
+    post-write bit flips) — and prove the robustness contracts end to end:
+
+    1. **Exact mass accounting**: live + frozen-dead push-sum mass over
+       the whole store equals n at the end, to float tolerance.
+    2. **Corruption is never silently consumed**: every chunk is verified
+       against its recorded checksum before each commit; a flipped bit
+       either never reaches a read (superseded generation) or raises
+       ``StoreCorruptionError``, upon which the harness rolls back to the
+       last committed round and replays — the deterministic round/churn
+       key chains make the replay reproduce the identical trajectory.
+       A targeted post-run probe corrupts a committed dirty chunk and
+       asserts the read raises rather than returning flipped rows.
+    3. **Convergence no worse than clean**: a clean twin (same seed, same
+       churn, no faults) runs the same number of rounds; the chaos run's
+       final loss must match it (rollback + replay means the *committed*
+       trajectory is the clean trajectory).
+
+    ``segment`` is the commit cadence (rounds per ``save()``); ``smoke``
+    shrinks the population for the CI job.
+    """
+    import shutil
+    import tempfile
+
+    import numpy as np
+
+    from repro.core import make_program, topology
+    from repro.data.dirichlet import dirichlet_partition, stack_client_data
+    from repro.data.synthetic import DatasetSpec, make_dataset
+    from repro.models.small import tiny_mlp
+    from repro.store import (
+        FaultInjector,
+        PagedRunner,
+        StoreCorruptionError,
+        StoreIOError,
+    )
+
+    if smoke:
+        n, k_active, rounds, segment = 512, 64, 10, 3
+
+    def setting(n_pop):
+        spec = DatasetSpec("toy", (32,), 10, margin=3.0)
+        train, _ = make_dataset(spec, n_pop * 8, 256, seed=0)
+        parts = dirichlet_partition(train["y"], n_pop, alpha=0.3, seed=0)
+        cdata = stack_client_data(train, parts, pad_to=16)
+        net = tiny_mlp(in_dim=32, n_classes=10)
+        algo = make_algo("dfedsgpsm", local_steps=2, batch_size=8)
+        topo = TopologyConfig(kind="kout", n_clients=n_pop,
+                              k_out=min(k_out, n_pop - 1))
+        return make_program(net.loss, net.init, cdata, algo, topo,
+                            gossip="dense")
+
+    churn = topology.ChurnModel(fail_prob=0.05, recover_prob=0.25,
+                                permanent_frac=0.1, resurrect="cold")
+    fi = FaultInjector(seed=1234, eio_prob=0.05, slow_prob=0.05,
+                       slow_seconds=0.001, torn_write_prob=0.05,
+                       corrupt_prob=0.02)
+    work = tempfile.mkdtemp(prefix="chaos_bench_")
+    results: dict = {"n": n, "k_active": k_active, "k_out": k_out,
+                     "rounds": rounds, "segment": segment,
+                     "churn": {"fail": churn.fail_prob,
+                               "recover": churn.recover_prob,
+                               "permanent": churn.permanent_frac,
+                               "resurrect": churn.resurrect},
+                     "faults": {"eio": fi.eio_prob, "slow": fi.slow_prob,
+                                "torn": fi.torn_write_prob,
+                                "corrupt": fi.corrupt_prob}}
+    try:
+        program = setting(n)
+        store_dir = os.path.join(work, "store")
+        runner = PagedRunner(program, store_dir, k_active=k_active,
+                             seed=0, rows_per_chunk=64, churn=churn,
+                             faults=fi)
+        recoveries = 0
+        max_recoveries = 8 * (rounds // segment + 1)
+        last_rec = None
+        t0 = time.perf_counter()
+        while runner.round_index < rounds:
+            try:
+                last_rec = runner.run_round()
+                due = (runner.round_index % segment == 0
+                       or runner.round_index >= rounds)
+                if due:
+                    runner.flush()
+                    # Verify BEFORE committing: a commit must never
+                    # publish a checksum-failing chunk as durable truth.
+                    runner.store.verify_chunks()
+                    for attempt in range(5):
+                        runner.save()
+                        try:
+                            # Post-commit verify covers the commit's OWN
+                            # writes (liveness blob + sealed manifest); a
+                            # bit flip there is healed by re-committing
+                            # fresh generations, not by rollback.
+                            runner.store.verify_chunks()
+                            break
+                        except StoreCorruptionError:
+                            if attempt == 4:
+                                raise
+            except (StoreCorruptionError, StoreIOError) as e:
+                recoveries += 1
+                if recoveries > max_recoveries:
+                    raise RuntimeError(
+                        f"chaos run could not make progress after "
+                        f"{recoveries} recoveries; last: {e}"
+                    ) from e
+                print(f"# recovery {recoveries}: {type(e).__name__} at "
+                      f"round {runner.round_index} -> rollback + replay")
+                for attempt in range(3):
+                    try:
+                        runner.restore()
+                        break
+                    except (StoreCorruptionError, StoreIOError):
+                        if attempt == 2:
+                            raise
+        wall_s = time.perf_counter() - t0
+        mass = runner.total_mass()
+        mass_err = abs(mass - n)
+        final_verify = runner.store.verify_chunks()
+        stats = runner.stats.as_dict()
+        live_frac = float(last_rec.get("live_frac", 1.0))
+
+        # Targeted probe: flip one bit of a committed dirty chunk and
+        # prove the corruption is DETECTED, never consumed.
+        ent = next(
+            (e for e in runner.store._chunks.values()
+             if e["dirty"] and e["crc"] is not None), None
+        )
+        probe_ok = False
+        if ent is not None:
+            p = os.path.join(runner.store.path, ent["file"])
+            with open(p, "r+b") as f:
+                f.seek(20)
+                b = f.read(1)
+                f.seek(20)
+                f.write(bytes([b[0] ^ 1]))
+            start = next(s for s, e in runner.store._chunks.items()
+                         if e is ent)
+            try:
+                runner.store.read_rows([start])
+            except StoreCorruptionError:
+                probe_ok = True
+        runner.close()
+        assert probe_ok, (
+            "a committed dirty chunk with flipped bits was read without "
+            "raising StoreCorruptionError"
+        )
+
+        # Clean twin: same seed + churn schedule, zero injected faults.
+        clean = PagedRunner(setting(n), os.path.join(work, "clean"),
+                            k_active=k_active, seed=0, rows_per_chunk=64,
+                            churn=churn)
+        clean_rec = None
+        while clean.round_index < rounds:
+            clean_rec = clean.run_round()
+        clean_mass = clean.total_mass()
+        clean.close()
+
+        loss_gap = abs(last_rec["loss"] - clean_rec["loss"])
+        results.update({
+            "wall_s": round(wall_s, 2),
+            "recoveries": recoveries,
+            "faults_injected": fi.faults_injected,
+            "files_corrupted": len(fi.corrupted),
+            "mass": mass, "mass_err": mass_err,
+            "clean_mass": clean_mass,
+            "live_frac": live_frac,
+            "verify": final_verify,
+            "loss_chaos": last_rec["loss"],
+            "loss_clean": clean_rec["loss"],
+            "loss_gap": loss_gap,
+            "stats": {k: (round(v, 6) if isinstance(v, float) else v)
+                      for k, v in stats.items()},
+        })
+        emit("chaos/mass_err", mass_err,
+             f"|sum w - n| over the whole {n}-row store, churn included")
+        emit("chaos/recoveries", recoveries,
+             f"rollback+replay recoveries over {rounds} rounds "
+             f"({fi.faults_injected} faults, {len(fi.corrupted)} files "
+             "bit-flipped)")
+        emit("chaos/io_retries", stats["io_retries"],
+             f"transient faults absorbed "
+             f"({stats['backoff_seconds']:.3f}s total backoff)")
+        emit("chaos/loss_gap", loss_gap,
+             "|chaos final loss - clean twin final loss| (rollback+replay "
+             "must reproduce the clean trajectory)")
+        assert mass_err < 1e-3 * max(n / 64, 1), (
+            f"chaos run leaked push-sum mass: sum w = {mass}, n = {n}")
+        assert abs(clean_mass - n) < 1e-3 * max(n / 64, 1)
+        assert loss_gap < 1e-3, (
+            f"chaos run converged worse than the clean twin: "
+            f"{last_rec['loss']} vs {clean_rec['loss']}")
+    finally:
+        shutil.rmtree(work, ignore_errors=True)
+    if json_out:
+        with open(json_out, "w") as f:
+            json.dump({"chaos": results}, f, indent=1)
+        print(f"# wrote chaos results -> {json_out}")
+    print(f"# chaos: {rounds} rounds, {recoveries} recoveries, "
+          f"{fi.faults_injected} faults injected, mass_err={mass_err:.2e}, "
+          f"loss_gap={loss_gap:.2e} -> OK")
     return results
 
 
@@ -683,7 +904,15 @@ if __name__ == "__main__":
                          "+ paged==resident equivalence; writes --json as "
                          "bench-paged.json")
     ap.add_argument("--k-active", type=int, default=256,
-                    help="sampled clients per round for --paged")
+                    help="sampled clients per round for --paged / --chaos")
+    ap.add_argument("--chaos", action="store_true",
+                    help="chaos harness: paged training under client churn "
+                         "+ injected store faults (transient EIO, torn "
+                         "writes, bit flips); asserts exact mass, "
+                         "corruption-never-consumed, and convergence equal "
+                         "to a clean twin. Compose with --smoke for the "
+                         "reduced CI sizing; writes --json as "
+                         "bench-chaos.json")
     ap.add_argument("--n-clients", default=None, metavar="N[,N...]",
                     help="sparse-vs-dense gossip scaling sweep over these "
                          "client counts (e.g. 16,64,256) at fixed --k-out; "
@@ -700,6 +929,9 @@ if __name__ == "__main__":
     ap.add_argument("--fast", action="store_true",
                     help="fewer timing rounds for the full benchmark")
     args = ap.parse_args()
+    if args.chaos:
+        chaos_bench(smoke=args.smoke, json_out=args.json)
+        sys.exit(0)
     if args.paged:
         n = int(args.n_clients.split(",")[0]) if args.n_clients else 4096
         paged_bench(n=n, k_active=args.k_active, rounds=args.rounds,

@@ -300,10 +300,11 @@ def save_state(directory: str, step: int, state, spec, keep: int = 3) -> str:
 
     The params bank rides as ``__bank__``; momentum bank, push-sum weights,
     RNG key, round counter, last losses, any array-valued compressor
-    state (e.g. the top-k error-feedback residual), and the unreliable-link
-    carry (PRNG stream + in-flight payload buffers / event caches) ride as
-    extras — so a restore is a genuinely warm restart, not just a
-    parameter copy.
+    state (e.g. the top-k error-feedback residual), the unreliable-link
+    carry (PRNG stream + in-flight payload buffers / event caches), and
+    the node-churn carry (PRNG stream + (n,) liveness vector + optional
+    cold-resurrection template row) ride as extras — so a restore is a
+    genuinely warm restart, not just a parameter copy.
     """
     extra = {
         "w": state.w,
@@ -324,6 +325,12 @@ def save_state(directory: str, step: int, state, spec, keep: int = 3) -> str:
             val = getattr(link, field)
             if not isinstance(val, tuple):
                 extra[f"link_{field}"] = val
+    churn = getattr(state, "churn", ())
+    if not (isinstance(churn, tuple) and churn == ()):
+        extra["churn_key"] = churn.key
+        extra["churn_live"] = churn.live
+        if not isinstance(churn.tpl, tuple):
+            extra["churn_tpl"] = churn.tpl
     return save_bank(directory, step, state.params, spec, extra=extra,
                      keep=keep)
 
@@ -333,7 +340,7 @@ def restore_state(path: str, spec):
     import jax.numpy as jnp
 
     from repro.core.program import FLState
-    from repro.core.stages import LinkState
+    from repro.core.stages import ChurnState, LinkState
 
     bank, extra, _ = restore_bank(path, spec=spec)
     for k in ("w", "key", "round", "losses"):
@@ -348,6 +355,14 @@ def restore_state(path: str, spec):
                for f in ("bufx", "bufw", "last")
                if f"link_{f}" in extra},
         )
+    churn = ()
+    if "churn_key" in extra:
+        churn = ChurnState(
+            key=jnp.asarray(extra["churn_key"]),
+            live=jnp.asarray(extra["churn_live"]),
+            tpl=(jnp.asarray(extra["churn_tpl"])
+                 if "churn_tpl" in extra else ()),
+        )
     return FLState(
         params=jnp.asarray(bank),
         mom=jnp.asarray(extra["mom"]) if "mom" in extra else None,
@@ -357,6 +372,7 @@ def restore_state(path: str, spec):
         losses=jnp.asarray(extra["losses"]),
         comp=jnp.asarray(extra["comp"]) if "comp" in extra else (),
         link=link,
+        churn=churn,
     )
 
 

@@ -30,10 +30,11 @@ from repro.core.stages import (
     COMPRESSORS,
     MIXERS,
     SOLVERS,
+    ChurnState,
     LinkState,
     make_stages,
 )
-from repro.core.topology import LinkModel, TopologyConfig
+from repro.core.topology import ChurnModel, LinkModel, TopologyConfig
 
 __all__ = [
     "ALGORITHMS",
@@ -41,6 +42,8 @@ __all__ = [
     "BankSpec",
     "BoundDeltaSpec",
     "COMPRESSORS",
+    "ChurnModel",
+    "ChurnState",
     "DeltaBankSpec",
     "DeltaConfig",
     "FLState",

@@ -123,6 +123,12 @@ class FLTrainer:
         edge drops (exactly column-stochastic after renormalization),
         bounded delivery delays, or event-triggered transmission.  ``None``
         (default) or an all-zero model is bitwise the perfect-link round.
+      churn: node-failure scenario (``topology.ChurnModel``): whole
+        clients crash and (optionally) rejoin per round; dead nodes leave
+        the sampled operator wholesale and their push-sum mass freezes on
+        the self-loop, keeping live + in-flight + frozen mass == n
+        exactly.  Composes with ``link`` drops and delays.  ``None``
+        (default) or an all-zero model is bitwise the immortal round.
       paged: virtual client population — the full (n, D) bank lives in a
         disk-backed :class:`repro.store.ClientStore` under ``store_dir``
         and each round pages in only its fault-in closure (the ``k_active``
@@ -159,6 +165,7 @@ class FLTrainer:
         flat: bool = True,
         gossip: str = "auto",
         link: topology.LinkModel | None = None,
+        churn: topology.ChurnModel | None = None,
         mesh=None,
         paged: bool = False,
         store_dir: str | None = None,
@@ -166,6 +173,7 @@ class FLTrainer:
         rows_per_chunk: int = 256,
         prefetch: bool = True,
         lru_rows: int | None = None,
+        faults=None,
         delta=None,
         bank_dtype=None,
     ):
@@ -181,6 +189,11 @@ class FLTrainer:
                 raise ValueError("paged=True needs store_dir")
             if k_active < 1:
                 raise ValueError("paged=True needs k_active >= 1")
+        elif faults is not None:
+            raise ValueError(
+                "faults= injects into the disk-backed store; it needs "
+                "paged=True"
+            )
         if not flat and mesh is not None:
             raise ValueError("the flat=False oracle path is single-device")
         if not flat and (delta is not None or bank_dtype is not None):
@@ -193,6 +206,11 @@ class FLTrainer:
             # scenario would invalidate it as an equivalence baseline.
             raise ValueError(
                 "the flat=False oracle path models perfect links only"
+            )
+        if not flat and churn is not None and churn.active:
+            raise ValueError(
+                "the flat=False oracle path models an immortal population "
+                "only"
             )
         if not flat and (
             algo.solver != "sam_momentum"
@@ -214,10 +232,13 @@ class FLTrainer:
         self.participation = participation
         self.flat = flat
         self.n = topo.n_clients
+        # Paged mode drives churn host-side in the runner (dead clients
+        # leave the sampling pool; the program itself stays churn-free).
         self.program = make_program(
             loss_fn, init_fn, client_data, algo, topo, participation,
-            gossip=gossip, link=link, mesh=mesh, delta=delta,
-            bank_dtype=bank_dtype,
+            gossip=gossip, link=link,
+            churn=None if paged else churn,
+            mesh=mesh, delta=delta, bank_dtype=bank_dtype,
         )
         self.spec = self.program.spec
         self._exp_cycle = self.program.exp_cycle
@@ -233,7 +254,7 @@ class FLTrainer:
             self.runner = PagedRunner(
                 self.program, store_dir, k_active, seed=seed,
                 rows_per_chunk=rows_per_chunk, prefetch=prefetch,
-                lru_rows=lru_rows,
+                lru_rows=lru_rows, churn=churn, faults=faults,
             )
             self.state = None
             self._round_jit = None
@@ -618,6 +639,28 @@ class FLTrainer:
                         f"{tuple(exp.shape) if exp is not None else 'none'}"
                         " — restore with the composition that saved it"
                     )
+        has_churn = not (
+            isinstance(state.churn, tuple) and state.churn == ()
+        )
+        if self.program.churned != has_churn:
+            raise ValueError(
+                f"{path} {'carries' if has_churn else 'carries no'} "
+                "node-churn state, but this trainer's churn scenario "
+                f"{'does not use' if has_churn else 'needs'} it — restore "
+                "with the composition that saved it"
+            )
+        if has_churn:
+            cold = self.program.churn_model.resurrect == "cold"
+            has_tpl = not isinstance(state.churn.tpl, tuple)
+            if cold != has_tpl:
+                raise ValueError(
+                    f"{path} churn carry "
+                    f"{'holds' if has_tpl else 'holds no'} cold-"
+                    "resurrection template row, but this trainer's "
+                    f"ChurnModel.resurrect="
+                    f"{self.program.churn_model.resurrect!r} — restore "
+                    "with the composition that saved it"
+                )
         # Re-place host-loaded leaves on the program mesh (identity when
         # unsharded) so a resumed run is row-sharded from its first round.
         self.state = self.program.shard_state(state)

@@ -39,6 +39,7 @@ from repro.core.flat import (
     make_spec,
 )
 from repro.core.stages import (
+    ChurnState,
     DelayedPushSumMixer,
     EventTriggeredMixer,
     IdentityCompressor,
@@ -100,6 +101,10 @@ class FLState(NamedTuple):
     # drop/delay draws plus the delayed in-flight payload buffers or the
     # event-trigger last-broadcast cache.  () on perfect-link programs.
     link: Any = ()
+    # Node-churn carry (stages.ChurnState): its own PRNG stream plus the
+    # (n,) liveness vector (and the cold-resurrection template row).
+    # () on churn-free programs — immortal clients.
+    churn: Any = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -140,6 +145,17 @@ class RoundProgram:
     # threads ``state.link`` and samples drops/delays from its key.
     link: Any = None
     linked: bool = False
+    # Node-churn scenario (topology.ChurnModel) — None models immortal
+    # clients and keeps the round bitwise identical to the pre-churn
+    # program.  When set, the step threads ``state.churn`` (its own PRNG
+    # stream + the (n,) liveness vector), masks dead nodes out of the
+    # sampled operator before the link model's drops, and freezes their
+    # mass on the self-loop so live + in-flight + frozen mass == n.
+    churn_model: Any = None
+
+    @property
+    def churned(self) -> bool:
+        return self.churn_model is not None
     # GSPMD row-sharded bank: a 1-D device mesh whose ``shard_axis`` names
     # the axis bank rows (params, momentum, EF residual, push-sum weights,
     # link carry) are partitioned along.  None keeps the single-device
@@ -189,8 +205,18 @@ class RoundProgram:
                 key=jax.random.fold_in(key, 0x11AB),
                 **self.mixer.link_buffers(bank),
             )
+        churn = ()
+        if self.churned:
+            # Same isolation for the churn stream: folded off the seed,
+            # never touching the main params/round chain.
+            churn = ChurnState(
+                key=jax.random.fold_in(key, 0x0C4B),
+                live=jnp.full((self.n,), topology.LIVE, jnp.int8),
+                tpl=(row if self.churn_model.resurrect == "cold" else ()),
+            )
         return self.shard_state(
-            FLState(bank, mom, w0, skey, jnp.int32(0), losses0, comp, link)
+            FLState(bank, mom, w0, skey, jnp.int32(0), losses0, comp, link,
+                    churn)
         )
 
     # -- GSPMD placement -----------------------------------------------------
@@ -230,6 +256,14 @@ class RoundProgram:
                     link.bufw, tuple) else (),
                 last=row(link.last),
             )
+        churn = state.churn
+        if churn:
+            churn = churn._replace(
+                key=rep(churn.key),
+                live=row(churn.live),
+                tpl=rep(churn.tpl) if not isinstance(
+                    churn.tpl, tuple) else (),
+            )
         return state._replace(
             params=row(state.params),
             mom=row(state.mom),
@@ -239,6 +273,7 @@ class RoundProgram:
             losses=row(state.losses),
             comp=row(state.comp),
             link=link,
+            churn=churn,
         )
 
     # -- mixing-matrix selection --------------------------------------------
@@ -288,14 +323,56 @@ class RoundProgram:
         if self.mixer.kind == "central":
             return self._central_step(state, lr, key, tkey, ckeys)
 
+        # Node churn resolves FIRST: this round's liveness decides who
+        # trains and whose edges survive.  A node down this round neither
+        # trains nor communicates — its row and mass freeze on the
+        # self-loop.  All branches are trace-time (self.churned is a
+        # Python bool), so churn-free programs stay bitwise unchanged.
+        alive = None
+        params0, mom0, comp0 = state.params, state.mom, state.comp
+        if self.churned:
+            nkey, ckey = jax.random.split(state.churn.key)
+            live_new = topology.churn_transition(
+                ckey, state.churn.live, self.churn_model
+            )
+            alive = live_new == topology.LIVE
+            if self.churn_model.resurrect == "cold":
+                # A node rejoining this round restarts at the init
+                # template in de-biased coordinates: x := w * template
+                # keeps its frozen mass w bit-for-bit (the invariant),
+                # while x/w == template exactly.  Momentum and any
+                # compressor residual rows are zeroed with it.
+                reborn = (
+                    (state.churn.live == topology.DOWN)
+                    & (live_new == topology.LIVE)
+                )[:, None]
+                params0 = jnp.where(
+                    reborn,
+                    (state.w[:, None] * state.churn.tpl).astype(
+                        params0.dtype),
+                    params0,
+                )
+                if mom0 is not None:
+                    mom0 = jnp.where(reborn, 0.0, mom0)
+                if not (isinstance(comp0, tuple) and comp0 == ()):
+                    comp0 = jnp.where(reborn, 0.0, comp0)
+
         # Per-client PRNG rows and the solver outputs are pinned to the
         # bank's row sharding so the vmapped local phase stays shard-local.
         ckeys = self._pin(ckeys)
         X, V, losses, accs = self.solver.update(
-            self.loss_fn, self.spec, state.params, state.w, ckeys,
+            self.loss_fn, self.spec, params0, state.w, ckeys,
             self.data, lr
         )
         V = self._pin(V) if V is not None else V
+        if self.churned:
+            # Dead nodes did not train: their rows, momentum and last
+            # losses carry through untouched (frozen).
+            al = alive[:, None]
+            X = jnp.where(al, X, params0)
+            if V is not None:
+                V = jnp.where(al, V, mom0)
+            losses = jnp.where(alive, losses, state.losses)
         # The communication phase — compress, link drops/delays, mix — is
         # the shared ``stages.comm_phase`` (also driving the pod
         # ``round_step``): the compressor shapes what leaves each client
@@ -303,23 +380,46 @@ class RoundProgram:
         # stays full precision; with identity compression and no mesh the
         # phase is bitwise the pre-extraction inline sequence.
         P = self.mixing_matrix(tkey, state)
+        if self.churned:
+            # Dead nodes leave the operator wholesale (in- AND out-edges,
+            # masked before sender normalization); the link model's
+            # per-edge drops then fail edges of the surviving support.
+            P = self.churn_model.mask_operator(
+                P, alive, symmetric=self.mixer.kind == "symmetric"
+            )
         X, w_new, comp, link, extras = comm_phase(
-            self.compressor, self.mixer, P, X, state.w, state.comp,
+            self.compressor, self.mixer, P, X, state.w, comp0,
             state.link,
             linked=self.linked, link_model=self.link,
             symmetric=self.mixer.kind == "symmetric",
             pin=self._pin, pin_link=self._pin_link,
             t=state.round,
         )
+        churn = state.churn
+        if self.churned:
+            churn = ChurnState(nkey, live_new, state.churn.tpl)
         new_state = FLState(
-            X, V, w_new, key, state.round + 1, losses, comp, link
+            X, V, w_new, key, state.round + 1, losses, comp, link, churn
         )
-        metrics = {"loss": losses.mean(), "acc": accs.mean(), **extras}
-        if self.linked:
+        if self.churned:
+            n_live = jnp.maximum(alive.sum(), 1).astype(jnp.float32)
+            metrics = {
+                "loss": jnp.where(alive, losses, 0.0).sum() / n_live,
+                "acc": jnp.where(alive, accs, 0.0).sum() / n_live,
+                **extras,
+            }
+            metrics["live_frac"] = alive.mean(dtype=jnp.float32)
+            # Frozen mass parked on dead nodes' self-loops — the third
+            # term of the exact invariant live + in-flight + frozen == n.
+            metrics["dead_mass"] = jnp.where(alive, 0.0, w_new).sum()
+        else:
+            metrics = {"loss": losses.mean(), "acc": accs.mean(), **extras}
+        if self.linked or self.churned:
             # Total push-sum mass, in-flight shares included — the exact
-            # conservation invariant the link subsystem is pinned by.
+            # conservation invariant the link/churn subsystems are pinned
+            # by (frozen dead mass stays in w, so it is already counted).
             inflight = (link.bufw.sum()
-                        if not isinstance(link.bufw, tuple)
+                        if self.linked and not isinstance(link.bufw, tuple)
                         else jnp.float32(0.0))
             metrics["w_mass"] = w_new.sum() + inflight
         return new_state, metrics
@@ -530,6 +630,7 @@ def make_program(
     participation: float = 0.1,
     gossip: str = "auto",
     link: topology.LinkModel | None = None,
+    churn: topology.ChurnModel | None = None,
     mesh=None,
     shard_axis: str = "clients",
     delta: DeltaConfig | int | str | None = None,
@@ -561,6 +662,15 @@ def make_program(
     state), or event-triggered transmission (``EventTriggeredMixer`` with
     the ``comm_fraction`` metric).  ``None`` — or a model whose fields are
     all zero — builds the exact perfect-link program, bitwise.
+
+    ``churn`` is the node-failure scenario (:class:`topology.ChurnModel`):
+    whole clients crash and (optionally) rejoin per round, their in/out
+    edges masked from the sampled operator before sender normalization and
+    their push-sum mass frozen on the self-loop, keeping
+    live + in-flight + frozen mass == n exactly.  Composes with ``link``
+    drops and delays (churn masks first, drops fail surviving edges);
+    rejected with ``event_threshold``.  ``None`` — or an all-zero model —
+    builds the exact immortal-population program, bitwise.
 
     ``mesh`` row-shards the whole round: bank rows (and the client data)
     are partitioned along ``shard_axis``, the mixers are re-backed onto
@@ -604,6 +714,23 @@ def make_program(
                 decay=link.event_decay,
                 schedule=link.event_schedule,
             )
+    churn = churn if churn is not None and churn.active else None
+    if churn is not None:
+        if mixer.kind == "central":
+            raise ValueError(
+                "the central (server) round has no peer population to "
+                "churn; drop churn= for comm='central'"
+            )
+        if link is not None and link.event_threshold:
+            # The event mixer keeps ONE last-broadcast row per sender; a
+            # node that crashed after its last transmission would keep
+            # being mixed from the cache by peers that can no longer hear
+            # it (sound modeling needs per-receiver caches).
+            raise ValueError(
+                "event-triggered mixing assumes immortal senders (the "
+                "shared last-broadcast cache cannot model a crashed "
+                "transmitter); churn and event_threshold do not compose"
+            )
     if mixer.kind == "central" and not isinstance(
         compressor, IdentityCompressor
     ):
@@ -640,6 +767,16 @@ def make_program(
         raise ValueError(
             "link drops on the two-tier operator form are unsupported; "
             "pass gossip='dense' for two_tier + drops"
+        )
+    if churn is not None and sparse_mix and mixer.kind == "symmetric":
+        raise ValueError(
+            "churn on the symmetric neighbor-list form is unsupported; "
+            "pass gossip='dense' for symmetric + churn"
+        )
+    if churn is not None and sparse_mix and topo.kind == "two_tier":
+        raise ValueError(
+            "churn on the two-tier operator form is unsupported; "
+            "pass gossip='dense' for two_tier + churn"
         )
     if mesh is not None:
         if shard_axis not in mesh.axis_names:
@@ -724,6 +861,7 @@ def make_program(
         sparse_mix=sparse_mix,
         link=link,
         linked=link is not None or mixer.link_stateful,
+        churn_model=churn,
         mesh=mesh,
         shard_axis=shard_axis,
     )

@@ -40,6 +40,7 @@ __all__ = [
     "Int8RowCompressor",
     "TopKEFCompressor",
     "LinkState",
+    "ChurnState",
     "PushSumMixer",
     "SymmetricMixer",
     "DelayedPushSumMixer",
@@ -280,6 +281,24 @@ class LinkState(NamedTuple):
     bufx: Any = ()  # (B, n, D) in-flight payload mass (delayed mixer)
     bufw: Any = ()  # (B, n) in-flight push-sum mass (delayed mixer)
     last: Any = ()  # (n, D) last transmitted rows (event-triggered mixer)
+
+
+class ChurnState(NamedTuple):
+    """Node-churn carry threaded through the round state.
+
+    ``key`` drives the per-round failure/recovery draws on its own PRNG
+    stream (folded off the seed, so churn-free programs keep a
+    bit-identical main stream).  ``live`` is the ``(n,)`` int8 liveness
+    vector (``topology.LIVE`` / ``DOWN`` / ``DOWN_PERMANENT``).  ``tpl``
+    carries the ``(D,)`` init template row only under cold resurrection
+    (``ChurnModel(resurrect="cold")``) — a reborn node's de-biased model
+    is reset to it; warm churn keeps ``tpl == ()`` and it drops out of
+    the pytree.
+    """
+
+    key: jax.Array
+    live: jnp.ndarray
+    tpl: Any = ()
 
 
 def _self_weights(P):

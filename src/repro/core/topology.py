@@ -30,6 +30,10 @@ import numpy as np
 __all__ = [
     "TopologyConfig",
     "LinkModel",
+    "ChurnModel",
+    "churn_transition",
+    "churn_links_dense",
+    "churn_links_neighbors",
     "NeighborList",
     "TwoTierOp",
     "sample_two_tier",
@@ -111,7 +115,10 @@ class LinkModel:
     so the effective ``P_t`` stays exactly column-stochastic and push-sum
     mass ``sum_i w_i == n`` is conserved under any drop pattern — a sender
     whose every outgoing link failed simply keeps all its mass on the
-    self-loop, which never drops.
+    self-loop, which never drops.  The boundary ``drop == 1.0`` is legal
+    and pinned: every non-self edge fails every round, the sampled
+    operator is exactly the identity, and each node keeps ALL of its mass
+    on its self-loop (total isolation conserves mass; nothing leaks).
 
     ``delay``: staleness bound B (rounds).  ``delay >= 1`` swaps the
     directed mixer for ``DelayedPushSumMixer``: every surviving edge
@@ -142,8 +149,12 @@ class LinkModel:
     event_schedule: Any = None
 
     def __post_init__(self):
-        if not 0.0 <= self.drop < 1.0:
-            raise ValueError("drop probability must be in [0, 1)")
+        if not 0.0 <= self.drop <= 1.0:
+            raise ValueError(
+                f"LinkModel.drop must be a probability in [0, 1], got "
+                f"{self.drop!r} (drop=1.0 is the fully-isolated boundary: "
+                "every node keeps all mass on its self-loop)"
+            )
         if self.delay < 0:
             raise ValueError("delay bound must be >= 0")
         if self.event_threshold < 0.0:
@@ -252,6 +263,186 @@ def drop_links_neighbors(
         jnp.where(live, nl.idx, n)
     ].add(1.0, mode="drop")
     wgt = jnp.where(live, 1.0 / outdeg[nl.idx], 0.0)
+    return NeighborList(nl.idx, wgt.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Client churn: whole-node failures (the DFL survey's dominant real-world
+# fault mode), composable with LinkModel's per-edge effects.
+# ---------------------------------------------------------------------------
+
+# Liveness codes carried as an (n,) int8 vector in the round state.
+LIVE = 1          # participating normally
+DOWN = 0          # crashed, may recover with prob recover_prob per round
+DOWN_PERMANENT = -1  # crashed for good; never recovers
+
+
+@dataclasses.dataclass(frozen=True)
+class ChurnModel:
+    """Per-round whole-client failures and recoveries (node churn).
+
+    Each round every live client fails i.i.d. with ``fail_prob``; a
+    failure is *permanent* with probability ``permanent_frac`` (the node
+    never returns), otherwise the node is down-but-recoverable and comes
+    back i.i.d. with ``recover_prob`` per round.  A dead node is removed
+    from the sampled operator entirely — all of its in- AND out-edges are
+    masked from the adjacency *before* sender normalization
+    (:func:`churn_links_dense` / :func:`churn_links_neighbors`), so the
+    surviving operator is still exactly column-stochastic and a dead
+    node's column is the identity column: its push-sum mass is **frozen**
+    on its self-loop, not lost.  The exact invariant every round is
+
+        live node mass + in-flight mass + frozen dead mass == n.
+
+    Shares already in flight toward a node that dies are delivered into
+    its frozen account (they are queued at the crashed node and reflected
+    when it recovers) — mass never leaks.
+
+    ``resurrect`` picks the rejoin semantics: ``"warm"`` (default) means a
+    recovering node resumes from its stored row exactly as it left;
+    ``"cold"`` means it rejoins at the init template — its de-biased model
+    ``x/w`` is reset to the template row while its *mass* ``w`` is kept
+    (``x := w * template``), so even cold rebirth conserves the invariant
+    bit-for-bit.
+
+    Churn composes with :class:`LinkModel` drops and delays (the churn
+    mask is applied to the sampled operator first; drops then fail edges
+    of the surviving support).  It does NOT compose with
+    ``event_threshold`` — the shared last-broadcast cache cannot model a
+    node transmitting while crashed.  All-zero fields mean no churn;
+    ``make_program`` then builds the exact unmodified round (bitwise
+    identical to a churn-free program).
+    """
+
+    fail_prob: float = 0.0
+    recover_prob: float = 0.0
+    permanent_frac: float = 0.0
+    resurrect: str = "warm"  # warm | cold
+
+    def __post_init__(self):
+        if not 0.0 <= self.fail_prob <= 1.0:
+            raise ValueError(
+                f"ChurnModel.fail_prob must be a probability in [0, 1], "
+                f"got {self.fail_prob!r}"
+            )
+        if not 0.0 <= self.recover_prob <= 1.0:
+            raise ValueError(
+                f"ChurnModel.recover_prob must be a probability in [0, 1], "
+                f"got {self.recover_prob!r}"
+            )
+        if not 0.0 <= self.permanent_frac <= 1.0:
+            raise ValueError(
+                f"ChurnModel.permanent_frac must be a fraction in [0, 1], "
+                f"got {self.permanent_frac!r}"
+            )
+        if self.resurrect not in ("warm", "cold"):
+            raise ValueError(
+                f"ChurnModel.resurrect must be 'warm' (resume from the "
+                f"stored row) or 'cold' (rejoin at the init template), got "
+                f"{self.resurrect!r}"
+            )
+        if self.fail_prob == 0.0 and (
+            self.recover_prob or self.permanent_frac
+        ):
+            raise ValueError(
+                "ChurnModel.recover_prob / permanent_frac modulate node "
+                "failures; set fail_prob > 0 to enable churn"
+            )
+
+    @property
+    def active(self) -> bool:
+        return bool(self.fail_prob)
+
+    def mask_operator(self, P, alive: jnp.ndarray, symmetric: bool = False):
+        """Remove every in/out edge of dead nodes from the sampled
+        operator (dense matrix or :class:`NeighborList`), re-normalizing
+        senders over the surviving support."""
+        if isinstance(P, TwoTierOp):
+            raise ValueError(
+                "churn on the two-tier operator form is unsupported (a "
+                "dead client changes every intra-pod weight of its pod); "
+                "force gossip='dense' for two_tier + churn scenarios"
+            )
+        if isinstance(P, NeighborList):
+            if symmetric:
+                raise ValueError(
+                    "churn on the symmetric neighbor-list form is "
+                    "unsupported (Metropolis degrees cannot be kept "
+                    "consistent across both endpoints' fixed-shape "
+                    "lists); force gossip='dense'"
+                )
+            return churn_links_neighbors(P, alive)
+        return churn_links_dense(P, alive, symmetric=symmetric)
+
+
+def churn_transition(
+    key: jax.Array, live: jnp.ndarray, model: ChurnModel
+) -> jnp.ndarray:
+    """One round of the churn Markov chain over liveness codes.
+
+    ``live`` is ``(n,)`` int8 in {LIVE, DOWN, DOWN_PERMANENT}; returns the
+    next liveness vector.  Live nodes fail w.p. ``fail_prob`` (permanently
+    w.p. ``permanent_frac`` given failure); recoverable-down nodes return
+    w.p. ``recover_prob``; permanent deaths are absorbing.
+    """
+    kf, kp, kr = jax.random.split(key, 3)
+    n = live.shape[0]
+    u_fail = jax.random.uniform(kf, (n,))
+    u_perm = jax.random.uniform(kp, (n,))
+    u_rec = jax.random.uniform(kr, (n,))
+    fails = (live == LIVE) & (u_fail < model.fail_prob)
+    perm = fails & (u_perm < model.permanent_frac)
+    recovers = (live == DOWN) & (u_rec < model.recover_prob)
+    nxt = jnp.where(fails, jnp.where(perm, DOWN_PERMANENT, DOWN), live)
+    nxt = jnp.where(recovers, LIVE, nxt)
+    return nxt.astype(jnp.int8)
+
+
+def churn_links_dense(
+    P: jnp.ndarray, alive: jnp.ndarray, symmetric: bool = False
+) -> jnp.ndarray:
+    """Mask dead nodes out of a dense operator, before sender
+    normalization.
+
+    Every edge with a dead endpoint (either direction) is removed from
+    ``P``'s support; self-loops never are.  The survivors are re-normalized
+    exactly as the family samplers do (uniform ``1/out_degree`` columns,
+    or Metropolis weights when ``symmetric``), so a dead node's column is
+    the identity column — its mass is frozen on its self-loop — and the
+    operator stays exactly column- (or doubly-) stochastic.
+    """
+    n = P.shape[0]
+    a = jnp.asarray(alive, bool)
+    pair = a[:, None] & a[None, :]
+    keep = pair | jnp.eye(n, dtype=bool)  # self-loops survive death
+    adj = (P > 0) & keep
+    adj = jnp.asarray(adj, jnp.float32)
+    if symmetric:
+        return metropolis_weights(adj * (1.0 - jnp.eye(n)))
+    return column_stochastic_from_adjacency(adj)
+
+
+def churn_links_neighbors(
+    nl: "NeighborList", alive: jnp.ndarray
+) -> "NeighborList":
+    """Sparse twin of :func:`churn_links_dense` (directed families).
+
+    A non-self slot survives only when both its sender and its receiver
+    are alive; slot 0 (the self-loop) always survives.  Sender out-degrees
+    are re-counted over the surviving edges by one scatter-add and every
+    surviving edge from sender j carries ``1 / out_degree(j)`` — the same
+    column-stochastic renormalization :func:`drop_links_neighbors` uses,
+    so churn and drops compose by masking in sequence.
+    """
+    n = nl.idx.shape[0]
+    a = jnp.asarray(alive, bool)
+    keep = a[:, None] & a[nl.idx]
+    keep = keep.at[:, 0].set(True)  # the self-loop survives death
+    live_slots = keep & (nl.wgt > 0)  # zero-weight pads stay inert
+    outdeg = jnp.zeros((n,), jnp.float32).at[
+        jnp.where(live_slots, nl.idx, n)
+    ].add(1.0, mode="drop")
+    wgt = jnp.where(live_slots, 1.0 / outdeg[nl.idx], 0.0)
     return NeighborList(nl.idx, wgt.astype(jnp.float32))
 
 

@@ -63,9 +63,27 @@ def _paged_main(args):
         lr=args.lr, alpha=args.alpha, rho=args.rho,
         compressor=args.compress, topk_ratio=args.topk_ratio,
     )
+    churn = None
+    if args.churn_fail > 0:
+        from repro.core.topology import ChurnModel
+
+        churn = ChurnModel(
+            fail_prob=args.churn_fail, recover_prob=args.churn_recover,
+            permanent_frac=args.churn_permanent,
+            resurrect=args.churn_resurrect,
+        )
+    faults = None
+    if args.io_eio > 0 or args.io_corrupt > 0 or args.io_torn > 0:
+        from repro.store import FaultInjector
+
+        faults = FaultInjector(
+            seed=args.io_seed, eio_prob=args.io_eio,
+            torn_write_prob=args.io_torn, corrupt_prob=args.io_corrupt,
+        )
     trainer = FLTrainer(
         model.loss, model.init, cdata, algo, topo,
         paged=True, store_dir=args.store_dir, k_active=args.k_active,
+        churn=churn, faults=faults,
     )
     runner = trainer.runner
     print(f"[train] paged population n={n} k_active={args.k_active} "
@@ -75,17 +93,23 @@ def _paged_main(args):
     for i in range(args.rounds):
         t0 = time.time()
         m = trainer.run_round()
+        live = (f" live={m['live_frac']:.2f}" if "live_frac" in m else "")
         print(f"[train] round {r0 + i:4d} loss={m['loss']:.4f} "
               f"acc={m['acc']:.4f} resident={int(m['rows_resident'])} "
-              f"mass_err={m['w_mass_closure_err']:.2e} "
+              f"mass_err={m['w_mass_closure_err']:.2e}{live} "
               f"dt={time.time() - t0:.2f}s", flush=True)
     path = trainer.save()  # the checkpoint IS the store manifest
     stats = runner.stats.as_dict()
     mass = runner.total_mass()
+    heal = ""
+    if faults is not None:
+        heal = (f" io_retries={stats['io_retries']} "
+                f"corrupt_chunks={stats['corrupt_chunks']} "
+                f"rebuilt_rows={stats['rebuilt_rows']}")
     print(f"[train] committed {path} at round {runner.round_index} | "
           f"total_mass={mass:.4f} "
           f"prefetch_hit_rate={stats['prefetch_hit_rate']:.3f} "
-          f"rows_faulted/round={stats['rows_faulted_per_round']:.1f}")
+          f"rows_faulted/round={stats['rows_faulted_per_round']:.1f}{heal}")
     assert abs(mass - n) < 1e-3 * n
     runner.close()
 
@@ -150,6 +174,31 @@ def main():
                     help="graph family of the paged population")
     ap.add_argument("--k-out", type=int, default=2,
                     help="out-degree for kout/two_tier (--paged)")
+    ap.add_argument("--churn-fail", type=float, default=0.0,
+                    help="per-round node failure probability (--paged): "
+                         "dead clients leave the sampling pool, their "
+                         "push-sum mass stays frozen on disk; live + "
+                         "frozen mass == n exactly")
+    ap.add_argument("--churn-recover", type=float, default=0.0,
+                    help="per-round resurrection probability of a "
+                         "transiently-dead client")
+    ap.add_argument("--churn-permanent", type=float, default=0.0,
+                    help="fraction of failures that are permanent "
+                         "(never resurrect)")
+    ap.add_argument("--churn-resurrect", default="warm",
+                    choices=["warm", "cold"],
+                    help="warm = resume the stored row; cold = restart "
+                         "from the init template (mass kept bit-for-bit)")
+    ap.add_argument("--io-eio", type=float, default=0.0,
+                    help="injected transient read-fault probability "
+                         "(--paged; absorbed by bounded-backoff retries)")
+    ap.add_argument("--io-torn", type=float, default=0.0,
+                    help="injected torn-write probability (--paged)")
+    ap.add_argument("--io-corrupt", type=float, default=0.0,
+                    help="injected post-write bit-flip probability "
+                         "(--paged; caught by chunk checksums)")
+    ap.add_argument("--io-seed", type=int, default=0,
+                    help="fault-injector PRNG seed")
     args = ap.parse_args()
 
     if args.paged:

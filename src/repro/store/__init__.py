@@ -7,7 +7,14 @@ resident and overlaps next-round prefetch with this round's jitted compute.
 See :mod:`repro.store.paging` for the closure/operator semantics and
 :mod:`repro.store.paged` for the drivers.
 """
-from repro.store.layout import STORE_FORMAT, FieldSpec
+from repro.store.faults import (
+    FaultInjector,
+    InjectedCrash,
+    StoreCorruptionError,
+    StoreIOError,
+    retry_transient,
+)
+from repro.store.layout import CHECKSUM_ALGO, STORE_FORMAT, FieldSpec
 from repro.store.paged import (
     PagedRunner,
     ResidentDriver,
@@ -27,8 +34,14 @@ from repro.store.prefetch import Prefetcher, Writeback
 from repro.store.store import ClientStore
 
 __all__ = [
+    "CHECKSUM_ALGO",
     "STORE_FORMAT",
     "FieldSpec",
+    "FaultInjector",
+    "InjectedCrash",
+    "StoreCorruptionError",
+    "StoreIOError",
+    "retry_transient",
     "ClientStore",
     "PagedRunner",
     "ResidentDriver",

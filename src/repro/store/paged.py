@@ -23,6 +23,7 @@ resumes bit-identically.
 from __future__ import annotations
 
 import functools
+import os
 import time
 
 import jax
@@ -56,6 +57,12 @@ def _check_paged_program(program):
         )
     if program.mesh is not None:
         raise ValueError("paged training is single-host; drop the mesh")
+    if getattr(program, "churned", False):
+        raise ValueError(
+            "pass churn= to PagedRunner / ResidentDriver, not to "
+            "make_program(...): the paged path drives liveness host-side "
+            "(dead rows must leave the sampling pool, not ride the bank)"
+        )
     if program.topo.kind not in _PAGED_KINDS:
         raise ValueError(
             f"topology kind {program.topo.kind!r} has no paged form "
@@ -89,16 +96,37 @@ def _key_from_words(words) -> jax.Array:
     return jnp.asarray(np.asarray(words, dtype=np.uint32))
 
 
-def make_plan(topo, k_active: int, c_max: int, key, t: int) -> RoundPlan:
+def make_plan(topo, k_active: int, c_max: int, key, t: int,
+              live=None) -> RoundPlan:
     """One round's host-side plan off the shared PRNG chain: sample the
-    active set, its in-neighbor picks, and build the compact operator."""
+    active set, its in-neighbor picks, and build the compact operator.
+
+    With a churn liveness vector ``live`` (codes of
+    :data:`repro.core.topology.LIVE` etc.), dead clients leave the pool:
+    the active set is the first ``k_active`` *live* ids of the same
+    permutation (so zero churn reproduces the un-churned stream bit-for-
+    bit), and a pick landing on a dead sender is remapped to the
+    receiver's own id — an inert edge ``build_plan`` voids, leaving the
+    dead row's identity column (and its mass) untouched on disk."""
     key_next, akey, tkey, ckey_base = plan_keys(key)
-    active = np.asarray(
-        jax.random.permutation(akey, topo.n_clients)
-    )[:k_active]
+    perm = np.asarray(jax.random.permutation(akey, topo.n_clients))
+    if live is not None:
+        alive = perm[live[perm] == topology.LIVE]
+        if alive.size < k_active:
+            raise ValueError(
+                f"round {t}: only {alive.size} live clients remain, "
+                f"cannot sample k_active={k_active} — lower k_active or "
+                "the churn fail_prob / permanent_frac"
+            )
+        active = alive[:k_active]
+    else:
+        active = perm[:k_active]
     picks = np.asarray(topology.sample_active_picks(
         tkey, jnp.asarray(active, jnp.int32), topo, t=t
     ))
+    if live is not None:
+        picks = np.where(live[picks] == topology.LIVE,
+                         picks, active[:, None])
     return paging.build_plan(
         t, key, key_next, ckey_base, active, picks, c_max
     )
@@ -117,6 +145,15 @@ class PagedRunner:
       rows_per_chunk: chunk-file row granularity for fresh stores.
       prefetch: overlap round t+1's closure loads with round t's compute.
       lru_rows: clean-row cache capacity (default ``4 * c_max``).
+      churn: optional :class:`~repro.core.topology.ChurnModel` — the
+        runner drives liveness host-side: dead clients leave the active
+        sampling pool (their rows stay frozen on disk, mass intact), a
+        warm resurrection resumes the stored row, a cold one rewrites it
+        to ``w * template``.  Liveness persists as a checksummed store
+        blob at every ``save()``; the per-round churn key is derived from
+        the round index, so resume is stateless.
+      faults: optional :class:`~repro.store.faults.FaultInjector` wired
+        behind the store's file operations (the chaos harness's hook).
     """
 
     def __init__(
@@ -129,6 +166,8 @@ class PagedRunner:
         rows_per_chunk: int = 256,
         prefetch: bool = True,
         lru_rows: int | None = None,
+        churn: topology.ChurnModel | None = None,
+        faults=None,
     ):
         _check_paged_program(program)
         if not 1 <= k_active <= program.n:
@@ -145,13 +184,21 @@ class PagedRunner:
         self.stats = PagerStats()
         self._fields = bank_fields(program)
         self._spec_meta = _spec_fingerprint(program.spec)
+        self._churn = churn if churn is not None and churn.active else None
 
         # The same key chain as program.init: pkey initializes the model
-        # row, skey seeds the round chain.
+        # row, skey seeds the round chain.  The churn chain is folded off
+        # the root key under its own tag (the same isolation the full-bank
+        # trainer uses), keyed per ROUND INDEX so a restored run replays
+        # the identical fail/recover schedule with no extra key state.
+        # The root is COMMITTED to the store meta on first use: resume
+        # ignores the constructor seed for the round chain, so it must
+        # ignore it for the churn chain too.
         key = jax.random.PRNGKey(seed)
         pkey, skey = jax.random.split(key)
+        self._churn_key0 = jax.random.fold_in(key, 0x0C4B)
         if ClientStore.exists(store_dir):
-            self.store = ClientStore.open(store_dir)
+            self.store = ClientStore.open(store_dir, faults=faults)
             self._validate_store()
             meta = self.store.meta
             self._key = _key_from_words(meta["key"])
@@ -167,9 +214,22 @@ class PagedRunner:
                     "key": _key_words(skey),
                     "spec": self._spec_meta,
                 },
+                faults=faults,
             )
             self._key = skey
             self._round = 0
+        if self._churn is not None:
+            words = self.store.meta.get("churn_key0")
+            if words is None:
+                # First churned run on this store: pin the chain root so
+                # any resume (whose seed argument is ignored) replays the
+                # identical fail/recover schedule.
+                self.store.update_meta(
+                    churn_key0=_key_words(self._churn_key0)
+                )
+            else:
+                self._churn_key0 = _key_from_words(words)
+        self._load_liveness()
 
         # Client data stays on the host; only active slices reach the
         # device (k_active rows per round, not n).
@@ -233,6 +293,84 @@ class PagedRunner:
         meta = self.store.meta
         if meta.get("spec") != self._spec_meta:
             raise ValueError("store model structure mismatch")
+
+    # -- churn: host-side liveness ---------------------------------------------
+
+    def _load_liveness(self):
+        """Sync ``_live`` with the store's committed liveness blob.
+
+        ``_live_round`` is the round index whose transition has already
+        been applied — a committed blob corresponds to the committed
+        round's state (``_round``); absent one, liveness starts all-LIVE
+        with the first transition due at the next round."""
+        blob = self.store.read_blob("churn_live")
+        if blob is not None and self._churn is None:
+            raise ValueError(
+                f"store {self.store.path} records churn liveness; "
+                "construct the PagedRunner with the same churn= model"
+            )
+        if blob is not None:
+            self._live = np.asarray(blob, np.int8).copy()
+            self._live_round = self._round
+        else:
+            self._live = np.full((self.n,), topology.LIVE, np.int8)
+            self._live_round = self._round - 1
+
+    def _ensure_live(self, t: int):
+        """Apply churn transitions up to (and including) round ``t``."""
+        if self._churn is None:
+            return
+        while self._live_round < t:
+            self._live_round += 1
+            key = jax.random.fold_in(self._churn_key0, self._live_round)
+            live_new = np.asarray(topology.churn_transition(
+                key, jnp.asarray(self._live), self._churn
+            ), np.int8)
+            if self._churn.resurrect == "cold":
+                reborn = np.nonzero(
+                    (self._live == topology.DOWN)
+                    & (live_new == topology.LIVE)
+                )[0]
+                if reborn.size:
+                    self._cold_reset(reborn)
+            self._live = live_new
+
+    def _cold_reset(self, ids: np.ndarray):
+        """Rewrite resurrected rows to the cold-start contract: params
+        ``w * template`` (de-biased model == template, frozen mass kept
+        bit-for-bit), momentum / EF residual zeroed, loss kept.  Routed
+        through the pending cache + write-back so every tier stays
+        consistent."""
+        tpl = self.store.template("params")
+        rows, misses = {}, []
+        for gid in (int(g) for g in ids):
+            row = self.cache.get(gid)
+            if row is None:
+                misses.append(gid)
+            else:
+                rows[gid] = row
+        if misses:
+            stacked = self.store.read_rows(
+                np.asarray(misses, dtype=np.int64)
+            )
+            for i, gid in enumerate(misses):
+                rows[gid] = {k: v[i] for k, v in stacked.items()}
+        out = {
+            name: np.zeros((len(ids),) + f.shape, dtype=f.dtype)
+            for name, f in self._fields.items()
+        }
+        for i, gid in enumerate(int(g) for g in ids):
+            w = np.float32(rows[gid]["w"])
+            out["params"][i] = (w * tpl).astype(out["params"].dtype)
+            out["w"][i] = w
+            out["losses"][i] = rows[gid]["losses"]
+        gids = np.asarray(ids, dtype=np.int64)
+        for i, gid in enumerate(int(g) for g in gids):
+            row = {k: v[i] for k, v in out.items()}
+            self.cache.put_pending(gid, row)
+            if self._carry is not None and gid in self._carry:
+                self._carry[gid] = row
+        self.writeback.enqueue(gids, out, round_no=self._live_round)
 
     # -- the paged round -------------------------------------------------------
 
@@ -307,10 +445,20 @@ class PagedRunner:
         )
 
     def run_round(self) -> dict:
-        plan = self._next_plan or make_plan(
-            self.topo, self.k_active, self.c_max, self._key, self._round
-        )
+        if self._next_plan is not None:
+            plan = self._next_plan
+        else:
+            self._ensure_live(self._round)
+            plan = make_plan(
+                self.topo, self.k_active, self.c_max, self._key,
+                self._round,
+                live=self._live if self._churn is not None else None,
+            )
         self._next_plan = None
+        live_frac = (
+            float((self._live == topology.LIVE).mean())
+            if self._churn is not None else 1.0
+        )
         buf = self._assemble(plan)
         state = self._device_state(plan, buf)
         slots = ActiveSlots(
@@ -324,14 +472,21 @@ class PagedRunner:
         w_in_sum = float(np.asarray(buf["w"][:plan.c], np.float64).sum())
         out_state, metrics = self._step(state, slots, data_active)
 
-        # While the device computes: plan round t+1 and prefetch the rows
-        # its closure adds over this round's (the rest ride the carry).
+        # While the device computes: advance churn to round t+1, plan it,
+        # and prefetch the rows its closure adds over this round's (the
+        # rest ride the carry).  The churn chain is keyed by round index,
+        # so planning ahead sees exactly the liveness round t+1 will.
+        self._ensure_live(plan.t + 1)
         next_plan = make_plan(
-            self.topo, self.k_active, self.c_max, plan.key_next, plan.t + 1
+            self.topo, self.k_active, self.c_max, plan.key_next,
+            plan.t + 1,
+            live=self._live if self._churn is not None else None,
         )
         if self.prefetcher is not None:
             new_ids = np.setdiff1d(next_plan.closure, plan.closure)
-            self._next_fetch = self.prefetcher.submit(new_ids)
+            self._next_fetch = self.prefetcher.submit(
+                new_ids, round_no=plan.t + 1
+            )
         self._next_plan = next_plan
 
         # Block on the round's outputs; one transfer of the compact bank.
@@ -351,9 +506,13 @@ class PagedRunner:
             row = {k: v[s] for k, v in out_rows.items()}
             carried[gid] = row
             self.cache.put_pending(gid, row)
-        self.writeback.enqueue(plan.closure, out_rows)
+        self.writeback.enqueue(plan.closure, out_rows, round_no=plan.t)
         self.stats.writeback_rows += c
         self.stats.chunks_written = self.store.chunks_written
+        self.stats.io_retries = self.store.io_retries
+        self.stats.backoff_seconds = self.store.backoff_seconds
+        self.stats.corrupt_chunks = self.store.corrupt_chunks
+        self.stats.rebuilt_rows = self.store.rebuilt_rows
         self._carry = carried
         self._key = plan.key_next
         self._round = plan.t + 1
@@ -367,6 +526,8 @@ class PagedRunner:
         rec["w_mass_closure_err"] = abs(w_out_sum - w_in_sum)
         rec["w_sum"] = w_out_sum + float(self.c_max - c) * 0.0  # closure only
         rec["rows_resident"] = c
+        if self._churn is not None:
+            rec["live_frac"] = live_frac
         return rec
 
     def fit(self, rounds: int, log=None) -> list:
@@ -459,27 +620,39 @@ class PagedRunner:
     # -- checkpointing: the checkpoint IS the store ----------------------------
 
     def save(self) -> str:
-        """Commit: flush dirty rows, then atomically stamp ``(round, key)``
-        into the manifest.  Returns the store path."""
+        """Commit: flush dirty rows, persist the churn liveness blob, then
+        atomically stamp ``(round, key)`` into the manifest — the commit
+        point that publishes every chunk/blob generation + checksum
+        written since the last one.  Returns the store path."""
+        if self._churn is not None:
+            # _live is kept advanced to _round by the plan-ahead, so the
+            # committed blob is exactly the state round _round samples
+            # from (a cold reset this may trigger lands before the flush).
+            self._ensure_live(self._round)
         self.flush()
+        if self._churn is not None:
+            self.store.write_blob("churn_live", self._live)
         self.store.update_meta(
             round=self._round, key=_key_words(self._key)
         )
         return self.store.path
 
     def restore(self, path: str | None = None):
-        """Re-sync to the last committed manifest: re-reads ``(round, key)``
-        and drops carried/cached rows so the next round faults from durable
-        chunks.  Row data is durable state that advances in place — resume
-        is bit-identical when no rounds ran since the ``save()`` (the normal
-        stop/reopen flow); it is not an in-place rollback."""
-        if path is not None and ClientStore.open(path).path != self.store.path:
+        """Roll back to the last committed manifest: re-reads
+        ``(round, key)`` and the liveness blob, drops carried/cached rows,
+        and (format 2) deletes every chunk generation written since the
+        last ``save()`` — the reopened state is bit-identical to the last
+        commit, which is how the chaos harness recovers from a corrupted
+        or crashed round."""
+        if path is not None and os.path.abspath(path) != self.store.path:
             raise ValueError(
                 "a paged trainer restores from its own store directory; "
                 f"got {path!r}, store is {self.store.path!r}"
             )
         self.flush()
-        self.store = ClientStore.open(self.store.path)
+        self.store = ClientStore.open(
+            self.store.path, faults=self.store.faults
+        )
         self._validate_store()
         meta = self.store.meta
         self._key = _key_from_words(meta["key"])
@@ -493,6 +666,7 @@ class PagedRunner:
         self._carry = None
         self._next_plan = None
         self._next_fetch = None
+        self._load_liveness()
 
     def close(self):
         self.writeback.flush()
@@ -522,7 +696,8 @@ class ResidentDriver:
     Exists for the paged == resident equivalence tests and benches; it
     deliberately materializes everything the pager avoids."""
 
-    def __init__(self, program, k_active: int, *, seed: int = 0):
+    def __init__(self, program, k_active: int, *, seed: int = 0,
+                 churn: topology.ChurnModel | None = None):
         _check_paged_program(program)
         self.program = program
         self.topo = program.topo
@@ -530,10 +705,14 @@ class ResidentDriver:
         self.k_active = int(k_active)
         self.k_in = topology.active_k_in(self.topo)
         self.c_max = paging.closure_bound(self.n, k_active, self.k_in)
+        self._churn = churn if churn is not None and churn.active else None
 
         key = jax.random.PRNGKey(seed)
         pkey, skey = jax.random.split(key)
+        self._churn_key0 = jax.random.fold_in(key, 0x0C4B)
+        self._live = np.full((self.n,), topology.LIVE, np.int8)
         row = program.init_row(pkey)
+        self._tpl = np.asarray(row)
         bank = jnp.broadcast_to(row, (self.n, program.spec.dim))
         self.state = FLState(
             params=bank,
@@ -590,9 +769,43 @@ class ResidentDriver:
         }
         return new_state, metrics
 
+    def _advance_churn(self, t: int):
+        """The paged runner's churn twin: identical key chain (round-index
+        folds off the same tagged root), identical cold-reset contract,
+        applied to the resident bank in place."""
+        key = jax.random.fold_in(self._churn_key0, t)
+        live_new = np.asarray(topology.churn_transition(
+            key, jnp.asarray(self._live), self._churn
+        ), np.int8)
+        if self._churn.resurrect == "cold":
+            reborn = np.nonzero(
+                (self._live == topology.DOWN)
+                & (live_new == topology.LIVE)
+            )[0]
+            if reborn.size:
+                idx = jnp.asarray(reborn, jnp.int32)
+                w = self.state.w[idx]
+                params = self.state.params.at[idx].set(
+                    (w[:, None] * jnp.asarray(self._tpl)).astype(
+                        self.state.params.dtype
+                    )
+                )
+                mom = self.state.mom.at[idx].set(0.0)
+                comp = (
+                    self.state.comp.at[idx].set(0.0)
+                    if self.program.compressor.stateful else self.state.comp
+                )
+                self.state = self.state._replace(
+                    params=params, mom=mom, comp=comp
+                )
+        self._live = live_new
+
     def run_round(self) -> dict:
+        if self._churn is not None:
+            self._advance_churn(self._round)
         plan = make_plan(
-            self.topo, self.k_active, self.c_max, self._key, self._round
+            self.topo, self.k_active, self.c_max, self._key, self._round,
+            live=self._live if self._churn is not None else None,
         )
         P = paging.dense_partial_operator(plan.active, plan.picks, self.n)
         mask = np.zeros((self.n,), bool)
@@ -603,7 +816,10 @@ class ResidentDriver:
         )
         self._key = plan.key_next
         self._round = plan.t + 1
-        return {k: float(v) for k, v in metrics.items()}
+        rec = {k: float(v) for k, v in metrics.items()}
+        if self._churn is not None:
+            rec["live_frac"] = float((self._live == topology.LIVE).mean())
+        return rec
 
     def total_mass(self) -> float:
         return float(np.asarray(self.state.w, np.float64).sum())

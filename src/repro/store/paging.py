@@ -106,10 +106,16 @@ def build_plan(
         np.searchsorted(closure[order], picks.reshape(-1))
     ]
     slot_picks = slot_of_sorted.reshape(k_active, k_in).astype(np.int32)
+    # A pick equal to the receiver's own id (how churn voids a dead
+    # sender's edge without changing the pick shape) is INERT: the dense
+    # operator forces self-loops on idempotently, so the edge must add
+    # nothing beyond the implicit slot-0 self-loop — excluded from the
+    # out-degree count and carried at weight 0.
+    self_pick = slot_picks == np.arange(k_active, dtype=np.int32)[:, None]
     # Sender out-degree over the masked adjacency: self-loop + the number
     # of active receivers that picked it.
     outdeg = np.ones((c_max,), np.float32)
-    np.add.at(outdeg, slot_picks.reshape(-1), 1.0)
+    np.add.at(outdeg, slot_picks[~self_pick], 1.0)
 
     slots = np.arange(c_max, dtype=np.int32)
     idx = np.repeat(slots[:, None], 1 + k_in, axis=1)
@@ -117,7 +123,9 @@ def build_plan(
     wgt = np.zeros((c_max, 1 + k_in), np.float32)
     wgt[:, 0] = 1.0 / outdeg          # real rows: the self share
     wgt[c:, 0] = 1.0                  # pads: inert identity
-    wgt[:k_active, 1:] = 1.0 / outdeg[slot_picks]
+    wgt[:k_active, 1:] = np.where(
+        self_pick, 0.0, 1.0 / outdeg[slot_picks]
+    )
 
     ids = np.full((c_max,), closure[0] if c else 0, dtype=np.int64)
     ids[:c] = closure
@@ -158,6 +166,14 @@ class PagerStats:
     prefetch_wait_s: float = 0.0   # time the round path blocked on fetches
     prefetch_busy_s: float = 0.0   # background time spent loading
     writeback_rows: int = 0
+    # Self-healing IO counters, mirrored from the store (see
+    # ClientStore.io_retries etc.) so the bench JSON shows what the run
+    # absorbed: transient-fault retries + their total backoff sleep,
+    # checksum failures quarantined, and template-rebuilt rows.
+    io_retries: int = 0
+    backoff_seconds: float = 0.0
+    corrupt_chunks: int = 0
+    rebuilt_rows: int = 0
 
     def as_dict(self) -> dict:
         d = dataclasses.asdict(self)

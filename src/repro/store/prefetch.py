@@ -14,7 +14,10 @@ stale chunk.  ``Writeback`` serializes dirty-row persistence on its own
 thread; rows are marked pending in the cache *before* enqueue and settled
 into the LRU tier only after their chunk write is durable.  Both threads
 surface exceptions on the caller's next interaction rather than dying
-silently.
+silently — wrapped in :class:`~repro.store.faults.StoreIOError` naming the
+round, the operation, and the file at fault (the original exception rides
+as ``__cause__``); :class:`~repro.store.faults.StoreCorruptionError` and
+``BaseException`` kills propagate untouched.
 """
 from __future__ import annotations
 
@@ -24,17 +27,40 @@ import time
 
 import numpy as np
 
+from repro.store.faults import StoreCorruptionError, StoreIOError
+
 __all__ = ["Fetch", "Prefetcher", "Writeback"]
 
 _STOP = object()
+
+
+def _wrap_background_error(e: BaseException, *, op: str, round_no,
+                           detail: str) -> BaseException:
+    """Annotate a background-thread failure with its IO context.  Already
+    self-describing errors (corruption carries chunk/round/rows; a
+    BaseException kill must never be converted to a catchable
+    Exception) pass through unchanged."""
+    if not isinstance(e, Exception) or isinstance(
+            e, (StoreCorruptionError, StoreIOError)):
+        return e
+    path = getattr(e, "filename", None)
+    where = f" of {path}" if path else ""
+    err = StoreIOError(
+        f"background {op} failed at round {round_no}{where} ({detail}): "
+        f"{type(e).__name__}: {e}",
+        round_no=round_no, path=path, op=op,
+    )
+    err.__cause__ = e
+    return err
 
 
 class Fetch:
     """Handle for one in-flight prefetch; ``wait()`` blocks until the rows
     are staged and returns ``{gid: {field: row}}``."""
 
-    def __init__(self, gids):
+    def __init__(self, gids, round_no=None):
         self.gids = np.asarray(gids, dtype=np.int64)
+        self.round_no = round_no
         self.rows: dict = {}
         self.busy_s = 0.0       # background time spent resolving
         self.from_cache = 0     # rows served without a store read
@@ -49,7 +75,10 @@ class Fetch:
     def wait(self) -> dict:
         self._done.wait()
         if self._error is not None:
-            raise self._error
+            raise _wrap_background_error(
+                self._error, op="prefetch", round_no=self.round_no,
+                detail=f"{len(self.gids)} rows requested",
+            )
         return self.rows
 
 
@@ -101,8 +130,8 @@ class Prefetcher:
                 fetch.busy_s = time.perf_counter() - t0
                 fetch._finish()
 
-    def submit(self, gids) -> Fetch:
-        fetch = Fetch(gids)
+    def submit(self, gids, round_no=None) -> Fetch:
+        fetch = Fetch(gids, round_no=round_no)
         self._q.put(fetch)
         return fetch
 
@@ -132,8 +161,14 @@ class Writeback:
             try:
                 if item is _STOP:
                     return
-                ids, values = item
-                self.store.write_rows(ids, values)
+                ids, values, round_no = item
+                try:
+                    self.store.write_rows(ids, values)
+                except BaseException as e:
+                    raise _wrap_background_error(
+                        e, op="write-back", round_no=round_no,
+                        detail=f"{len(ids)} dirty rows",
+                    )
                 for gid in ids:
                     self.cache.settle(int(gid))
             except BaseException as e:
@@ -146,12 +181,12 @@ class Writeback:
             err, self._error = self._error, None
             raise err
 
-    def enqueue(self, ids, values: dict):
+    def enqueue(self, ids, values: dict, round_no=None):
         """``values`` are field-stacked arrays aligned with ``ids``; the
         caller must have ``put_pending`` every row first so reads stay
         consistent while the write is in flight."""
         self._raise_pending()
-        self._q.put((np.asarray(ids, dtype=np.int64), values))
+        self._q.put((np.asarray(ids, dtype=np.int64), values, round_no))
 
     def flush(self):
         self._q.join()

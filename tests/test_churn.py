@@ -1,0 +1,342 @@
+"""Client churn: whole-node failures with exact mass accounting.
+
+Pins the churn subsystem's contracts: (1) a dead node is excised from the
+sampled operator BEFORE sender normalization — its column becomes the
+identity, so its push-sum mass freezes on the self-loop and the global
+invariant live + in-flight + frozen dead mass == n holds exactly, every
+round, for every topology family, composed with LinkModel drops and
+delays; (2) zero churn is free — an inactive ChurnModel builds the
+bitwise-identical program, resident and paged; (3) resurrection semantics
+(warm = stored row, cold = re-init from template with mass kept) conserve
+the invariant; (4) the churn carry survives checkpoints and the paged
+runner drives the identical schedule host-side."""
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    FLTrainer,
+    LinkModel,
+    TopologyConfig,
+    make_algo,
+    make_program,
+)
+from repro.core import topology as topo
+from repro.data.dirichlet import dirichlet_partition, stack_client_data
+from repro.data.synthetic import DatasetSpec, make_dataset
+from repro.models.small import tiny_mlp
+from repro.store import PagedRunner, ResidentDriver
+
+N = 16
+_DATA_CACHE: dict = {}
+
+
+def _client_data(n=N):
+    if n not in _DATA_CACHE:
+        spec = DatasetSpec("toy", (16,), 4, margin=3.0)
+        train, _ = make_dataset(spec, n * 16, 64, seed=0)
+        parts = dirichlet_partition(train["y"], n, alpha=10.0, seed=0)
+        _DATA_CACHE[n] = stack_client_data(train, parts, pad_to=32)
+    return _DATA_CACHE[n]
+
+
+def _trainer(churn=None, link=None, name="dfedsgpsm", kind="kout",
+             gossip="dense", n=N, flat=True, **topo_kw):
+    model = tiny_mlp(in_dim=16, n_classes=4)
+    algo = make_algo(name, local_steps=2, batch_size=8)
+    t = TopologyConfig(kind=kind, n_clients=n, **topo_kw)
+    return FLTrainer(model.loss, model.init, _client_data(n), algo, t,
+                     seed=0, participation=0.25, churn=churn, link=link,
+                     gossip=gossip, flat=flat)
+
+
+CHURN = topo.ChurnModel(fail_prob=0.15, recover_prob=0.3,
+                        permanent_frac=0.2)
+
+
+# ---------------------------------------------------------------------------
+# Model validation + the Markov chain over liveness codes.
+# ---------------------------------------------------------------------------
+
+def test_churn_model_validation():
+    for bad in (-0.1, 1.5):
+        with pytest.raises(ValueError, match="fail_prob"):
+            topo.ChurnModel(fail_prob=bad)
+        with pytest.raises(ValueError, match="recover_prob"):
+            topo.ChurnModel(fail_prob=0.1, recover_prob=bad)
+        with pytest.raises(ValueError, match="permanent_frac"):
+            topo.ChurnModel(fail_prob=0.1, permanent_frac=bad)
+    with pytest.raises(ValueError, match="resurrect"):
+        topo.ChurnModel(fail_prob=0.1, resurrect="lukewarm")
+    # recover/permanent modulate failures: meaningless without fail_prob
+    with pytest.raises(ValueError, match="fail_prob > 0"):
+        topo.ChurnModel(recover_prob=0.5)
+    assert not topo.ChurnModel().active
+    assert topo.ChurnModel(fail_prob=0.01).active
+
+
+def test_churn_transition_corners_and_absorption():
+    live = jnp.array([topo.LIVE, topo.DOWN, topo.DOWN_PERMANENT],
+                     dtype=jnp.int8)
+    # fail_prob=1 + permanent_frac=1: every live node dies for good;
+    # recover_prob=1 revives the recoverable-down node; permanent death
+    # is absorbing under every model.
+    m = topo.ChurnModel(fail_prob=1.0, permanent_frac=1.0,
+                        recover_prob=1.0)
+    nxt = np.asarray(topo.churn_transition(jax.random.PRNGKey(0), live, m))
+    assert nxt[0] == topo.DOWN_PERMANENT
+    assert nxt[1] == topo.LIVE
+    assert nxt[2] == topo.DOWN_PERMANENT
+    # fail_prob=1, permanent_frac=0: down-but-recoverable
+    m = topo.ChurnModel(fail_prob=1.0)
+    nxt = np.asarray(topo.churn_transition(jax.random.PRNGKey(1), live, m))
+    assert nxt[0] == topo.DOWN and nxt[2] == topo.DOWN_PERMANENT
+
+
+def test_dead_node_column_is_identity_dense_and_sparse():
+    """Churn masks in/out edges before sender normalization: surviving
+    senders renormalize over live receivers, a dead sender's column is
+    exactly the identity (mass frozen on the self-loop), and the sparse
+    neighbor-list masking matches the dense reference."""
+    n, k = 12, 3
+    key = jax.random.PRNGKey(0)
+    alive = jnp.array([i % 3 != 0 for i in range(n)])
+    P = topo.sample_kout(key, n, k)
+    Pd = np.asarray(topo.churn_links_dense(P, alive))
+    np.testing.assert_allclose(Pd.sum(axis=0), 1.0, atol=1e-6)
+    dead = ~np.asarray(alive)
+    eye = np.eye(n, dtype=Pd.dtype)
+    np.testing.assert_array_equal(Pd[:, dead], eye[:, dead])
+    # dead receivers get nothing from live senders
+    assert np.all(Pd[np.ix_(dead, ~dead)] == 0)
+    # Sparse twin on the SAME graph: churn the neighbor list, then compare
+    # against the dense masking of its own dense rendering (the dense and
+    # sparse k-out samplers draw different orientations, so the reference
+    # must come from the identical adjacency).
+    nl = topo.sample_kout_neighbors(key, n, k)
+    P_nl = topo.dense_from_neighbors(nl, n)
+    nld = topo.churn_links_neighbors(nl, alive)
+    np.testing.assert_allclose(
+        np.asarray(topo.dense_from_neighbors(nld, n)),
+        np.asarray(topo.churn_links_dense(P_nl, alive)), atol=1e-6)
+
+
+def test_zero_churn_is_bitwise_the_plain_program():
+    a = _trainer(churn=None, k_out=2)
+    b = _trainer(churn=topo.ChurnModel(), k_out=2)
+    assert not b.program.churned
+    for _ in range(2):
+        ma, mb = a.run_round(), b.run_round()
+        assert float(ma["loss"]) == float(mb["loss"])
+    np.testing.assert_array_equal(np.asarray(a.state.params),
+                                  np.asarray(b.state.params))
+    np.testing.assert_array_equal(np.asarray(a.state.w),
+                                  np.asarray(b.state.w))
+
+
+# ---------------------------------------------------------------------------
+# The acceptance invariant: exact mass across families x link faults.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,name,link,kw", [
+    ("ring", "dfedsgpsm", LinkModel(drop=0.3), dict(k_out=1)),
+    ("exponential", "dfedsgpsm", LinkModel(drop=0.2, delay=2),
+     dict(k_out=1, time_varying=True)),
+    ("kout", "dfedsgpsm", LinkModel(drop=0.3), dict(k_out=3)),
+    ("kout", "dfedsgpsm", LinkModel(drop=0.2, delay=2), dict(k_out=3)),
+    ("symmetric", "dfedavgm", LinkModel(drop=0.3), dict(k_out=3)),
+    ("two_tier", "dfedsgpsm", LinkModel(drop=0.3),
+     dict(k_out=2, n_pods=4)),
+])
+def test_churn_mass_conserved_50_rounds(kind, name, link, kw):
+    """live + in-flight + frozen dead mass == n at EVERY round of a
+    50-round run, for every topology family, churn composed with link
+    drops (and bounded delays on the directed families)."""
+    tr = _trainer(churn=CHURN, link=link, name=name, kind=kind,
+                  gossip="dense", **kw)
+    assert tr.program.churned
+    state, hist = tr.program.run_superstep(tr.state, 50)
+    np.testing.assert_allclose(np.asarray(hist["w_mass"]), N, atol=2e-3)
+    assert np.all(np.isfinite(np.asarray(hist["loss"])))
+    # churn actually bit: the population was not always fully live
+    assert float(np.asarray(hist["live_frac"]).min()) < 1.0
+    # dead mass is real mass, parked — not a leak
+    dead = np.asarray(hist["dead_mass"])
+    assert float(dead.max()) > 0.0
+
+
+def test_permanent_failures_freeze_mass_forever():
+    cm = topo.ChurnModel(fail_prob=0.3, permanent_frac=1.0)
+    tr = _trainer(churn=cm, k_out=2)
+    state, hist = tr.program.run_superstep(tr.state, 30)
+    live = np.asarray(state.churn.live)
+    assert (live == topo.DOWN_PERMANENT).any()
+    assert not (live == topo.DOWN).any()  # permanent_frac=1: no limbo
+    np.testing.assert_allclose(np.asarray(hist["w_mass"]), N, atol=2e-3)
+    # the frozen account is exactly the dead nodes' w
+    w = np.asarray(state.w)
+    np.testing.assert_allclose(float(hist["dead_mass"][-1]),
+                               w[live != topo.LIVE].sum(), atol=1e-4)
+    # live_frac is monotone non-increasing: nobody ever comes back
+    lf = np.asarray(hist["live_frac"])
+    assert np.all(np.diff(lf) <= 1e-6)
+
+
+@pytest.mark.parametrize("resurrect", ["warm", "cold"])
+def test_resurrection_modes_conserve_mass(resurrect):
+    cm = topo.ChurnModel(fail_prob=0.4, recover_prob=0.8,
+                         resurrect=resurrect)
+    tr = _trainer(churn=cm, k_out=2)
+    state, hist = tr.program.run_superstep(tr.state, 25)
+    np.testing.assert_allclose(np.asarray(hist["w_mass"]), N, atol=2e-3)
+    lf = np.asarray(hist["live_frac"])
+    assert lf.min() < 1.0 and lf[1:].max() > lf.min()  # died AND recovered
+    assert np.all(np.isfinite(np.asarray(state.params)))
+
+
+def test_churn_checkpoint_roundtrip(tmp_path):
+    """The churn carry (PRNG stream + liveness + cold template) survives
+    save/restore: the resumed trajectory matches the uninterrupted one,
+    and composition mismatches are refused up front."""
+    cm = topo.ChurnModel(fail_prob=0.3, recover_prob=0.5,
+                         resurrect="cold")
+    tr = _trainer(churn=cm, k_out=2)
+    tr.run_round()
+    tr.run_round()
+    path = tr.save(str(tmp_path), 2)
+    m_ref = tr.run_round()
+
+    tr2 = _trainer(churn=cm, k_out=2)
+    tr2.restore(path)
+    m_res = tr2.run_round()
+    assert float(m_res["loss"]) == float(m_ref["loss"])
+    np.testing.assert_array_equal(np.asarray(tr2.state.churn.live),
+                                  np.asarray(tr.state.churn.live))
+    np.testing.assert_array_equal(np.asarray(tr2.state.params),
+                                  np.asarray(tr.state.params))
+    with pytest.raises(ValueError, match="churn"):
+        _trainer(churn=None, k_out=2).restore(path)
+    plain = _trainer(churn=None, k_out=2)
+    plain.run_round()
+    p_plain = plain.save(str(tmp_path / "plain"), 1)
+    with pytest.raises(ValueError, match="churn"):
+        _trainer(churn=cm, k_out=2).restore(p_plain)
+
+
+def test_churn_composition_rules():
+    model = tiny_mlp(in_dim=16, n_classes=4)
+    algo = make_algo("dfedsgpsm", local_steps=2, batch_size=8)
+    cdata = _client_data()
+    t = TopologyConfig(kind="kout", n_clients=N, k_out=2)
+    cm = topo.ChurnModel(fail_prob=0.1)
+    with pytest.raises(ValueError, match="central"):
+        make_program(model.loss, model.init, cdata, make_algo("fedavg"), t,
+                     churn=cm)
+    with pytest.raises(ValueError, match="event_threshold"):
+        make_program(model.loss, model.init, cdata, algo, t, churn=cm,
+                     link=LinkModel(event_threshold=0.1))
+    with pytest.raises(ValueError, match="symmetric"):
+        _trainer(churn=cm, name="dfedavgm", kind="symmetric",
+                 gossip="sparse", k_out=3)
+    with pytest.raises(ValueError, match="two_tier"):
+        _trainer(churn=cm, kind="two_tier", gossip="sparse", k_out=2,
+                 n_pods=4)
+    with pytest.raises(ValueError, match="immortal"):
+        _trainer(churn=cm, k_out=2, flat=False)
+
+
+# ---------------------------------------------------------------------------
+# Paged churn: the runner drives the identical schedule host-side.
+# ---------------------------------------------------------------------------
+
+def _paged_program(n=N, k_out=2):
+    model = tiny_mlp(in_dim=16, n_classes=4)
+    algo = make_algo("dfedsgpsm", local_steps=2, batch_size=8)
+    t = TopologyConfig(kind="kout", n_clients=n, k_out=k_out)
+    return make_program(model.loss, model.init, _client_data(n), algo, t,
+                        gossip="dense")
+
+
+def test_paged_zero_churn_is_bitwise_plain(tmp_path):
+    a = PagedRunner(_paged_program(), str(tmp_path / "a"), k_active=4,
+                    seed=3, rows_per_chunk=4)
+    b = PagedRunner(_paged_program(), str(tmp_path / "b"), k_active=4,
+                    seed=3, rows_per_chunk=4, churn=topo.ChurnModel())
+    try:
+        for _ in range(3):
+            ma, mb = a.run_round(), b.run_round()
+            assert ma == mb
+        ra, rb = a.read_rows(np.arange(N)), b.read_rows(np.arange(N))
+        for k in ra:
+            np.testing.assert_array_equal(ra[k], rb[k])
+    finally:
+        a.close()
+        b.close()
+
+
+@pytest.mark.parametrize("resurrect", ["warm", "cold"])
+def test_paged_churn_matches_resident_twin(tmp_path, resurrect):
+    """The paged runner's host-side churn (dead clients leave the
+    sampling pool, cold rebirth rewrites store rows) reproduces the
+    resident driver's schedule on the identical PRNG chain."""
+    cm = topo.ChurnModel(fail_prob=0.25, recover_prob=0.5,
+                         permanent_frac=0.2, resurrect=resurrect)
+    runner = PagedRunner(_paged_program(), str(tmp_path / "store"),
+                         k_active=4, seed=3, rows_per_chunk=4, churn=cm)
+    twin = ResidentDriver(_paged_program(), k_active=4, seed=3, churn=cm)
+    try:
+        for _ in range(6):
+            mp, mt = runner.run_round(), twin.run_round()
+            assert abs(mp["loss"] - mt["loss"]) < 1e-4
+            assert mp["live_frac"] == mt["live_frac"]
+            assert mp["live_frac"] < 1.0 or mt["live_frac"] == 1.0
+        rows = runner.read_rows(np.arange(N))
+        np.testing.assert_allclose(rows["params"],
+                                   np.asarray(twin.state.params),
+                                   atol=5e-5)
+        np.testing.assert_allclose(rows["w"], np.asarray(twin.state.w),
+                                   atol=1e-5)
+        assert abs(runner.total_mass() - N) < 1e-3
+        assert abs(twin.total_mass() - N) < 1e-3
+    finally:
+        runner.close()
+
+
+def test_paged_churn_save_restore_resumes_schedule(tmp_path):
+    """Liveness is committed as a store blob: a snapshot reopened by a
+    fresh runner replays the identical churn continuation."""
+    cm = topo.ChurnModel(fail_prob=0.3, recover_prob=0.5,
+                         resurrect="cold")
+    runner = PagedRunner(_paged_program(), str(tmp_path / "store"),
+                         k_active=4, seed=3, rows_per_chunk=4, churn=cm)
+    for _ in range(3):
+        runner.run_round()
+    runner.save()
+    shutil.copytree(str(tmp_path / "store"), str(tmp_path / "snap"))
+    a = [runner.run_round() for _ in range(3)]
+    runner.close()
+
+    resumed = PagedRunner(_paged_program(), str(tmp_path / "snap"),
+                          k_active=4, seed=999, rows_per_chunk=4, churn=cm)
+    assert resumed.round_index == 3
+    b = [resumed.run_round() for _ in range(3)]
+    resumed.close()
+    assert a == b
+    # a churn-free runner must refuse the churned store
+    with pytest.raises(ValueError, match="churn"):
+        PagedRunner(_paged_program(), str(tmp_path / "snap"), k_active=4,
+                    rows_per_chunk=4)
+
+
+def test_paged_rejects_churned_program(tmp_path):
+    model = tiny_mlp(in_dim=16, n_classes=4)
+    algo = make_algo("dfedsgpsm", local_steps=2, batch_size=8)
+    t = TopologyConfig(kind="kout", n_clients=N, k_out=2)
+    churned = make_program(model.loss, model.init, _client_data(), algo, t,
+                           gossip="dense",
+                           churn=topo.ChurnModel(fail_prob=0.1))
+    with pytest.raises(ValueError, match="churn="):
+        PagedRunner(churned, str(tmp_path / "s"), k_active=4)

@@ -130,8 +130,14 @@ def test_drop_zero_is_identity_on_both_representations():
 
 
 def test_link_model_validation():
-    with pytest.raises(ValueError, match="drop probability"):
-        topo.LinkModel(drop=1.0)
+    # drop=1.0 is a PINNED boundary, not an error: every inter-node edge
+    # fails, each node keeps its whole mass on the forced self-loop, and
+    # push-sum mass is still conserved exactly (nobody mixes).
+    assert topo.LinkModel(drop=1.0).active
+    with pytest.raises(ValueError, match="drop must be a probability"):
+        topo.LinkModel(drop=1.5)
+    with pytest.raises(ValueError, match="drop must be a probability"):
+        topo.LinkModel(drop=-0.1)
     with pytest.raises(ValueError, match="do not compose"):
         topo.LinkModel(delay=2, event_threshold=0.1)
     # one sender-side cache row cannot model per-receiver misses, so

@@ -105,6 +105,7 @@ def test_store_creation_is_lazy_and_roundtrips(tmp_path):
         "w": np.asarray([2.0, 3.0, 4.0, 5.0], np.float32)}
     s.write_rows(ids, vals)
     assert s.chunks_written == 3 and s.bytes_written > 0
+    s.update_meta()  # commit: format 2 rolls back uncommitted gens on open
     s2 = ClientStore.open(str(tmp_path / "s"))
     back = s2.read_rows(ids[::-1])  # any order
     np.testing.assert_array_equal(back["params"], vals["params"][::-1])
@@ -428,3 +429,273 @@ def test_trainer_paged_validations(tmp_path):
     with pytest.raises(ValueError, match="link"):
         FLTrainer(*common, paged=True, store_dir=str(tmp_path / "s"),
                   k_active=4, link=LinkModel(drop=0.2))
+
+
+# ---------------------------------------------------------------------------
+# Fault tolerance: checksums, quarantine, crash points, retry accounting.
+# ---------------------------------------------------------------------------
+
+from repro.store import (  # noqa: E402  (grouped with the section they test)
+    FaultInjector,
+    InjectedCrash,
+    Prefetcher,
+    StoreCorruptionError,
+    StoreIOError,
+)
+
+
+def _fault_store(tmp_path, name="s", faults=None, n=128):
+    tpl = np.arange(6, dtype=np.float32)
+    s = ClientStore.create(str(tmp_path / name), n, _toy_fields(),
+                           rows_per_chunk=16, templates={"params": tpl},
+                           faults=faults)
+    return s, tpl
+
+
+def test_store_open_removes_stale_tmp(tmp_path):
+    """Stale tmp droppings from a died-mid-write process (both the
+    store's own rename-staging names and the injector's crash residue)
+    are removed on open; committed files survive."""
+    import os
+
+    s, _ = _fault_store(tmp_path)
+    ids = np.arange(8)
+    s.write_rows(ids, {"params": np.ones((8, 6), np.float32)})
+    s.update_meta()
+    committed = s._chunks[0]["file"]
+    for junk in ("manifest.json.tmp", committed + ".crashed.tmp",
+                 "rows_00000016.g000099.npz.tmp"):
+        with open(os.path.join(s.path, junk), "wb") as f:
+            f.write(b"partial")
+    s2 = ClientStore.open(s.path)
+    names = os.listdir(s2.path)
+    assert not [x for x in names if x.endswith(".tmp")]
+    assert committed in names
+    np.testing.assert_array_equal(
+        s2.read_rows(ids)["params"], np.ones((8, 6), np.float32))
+
+
+def test_open_rolls_back_uncommitted_generations(tmp_path):
+    """Writes after the last commit are invisible after a reopen: their
+    generation files are GC'd and reads return the committed bytes —
+    the crash-recovery contract the chaos harness leans on."""
+    s, _ = _fault_store(tmp_path)
+    ids = np.arange(4)
+    s.write_rows(ids, {"params": np.full((4, 6), 1.0, np.float32)})
+    s.update_meta(round=1)
+    s.write_rows(ids, {"params": np.full((4, 6), 9.0, np.float32)})
+    s2 = ClientStore.open(s.path)
+    assert s2.meta["round"] == 1
+    np.testing.assert_array_equal(
+        s2.read_rows(ids)["params"], np.full((4, 6), 1.0, np.float32))
+
+
+def test_corrupt_dirty_chunk_quarantines_and_raises(tmp_path):
+    """A checksum mismatch on rows that ever held trained data is a loud
+    StoreCorruptionError carrying chunk id, quarantine path, committed
+    round, and the rows at stake — never silently consumed."""
+    import os
+
+    s, _ = _fault_store(tmp_path)
+    ids = np.arange(16, 24)
+    s.write_rows(ids, {"params": np.ones((8, 6), np.float32)})
+    s.update_meta(round=7)
+    fname = s._chunks[16]["file"]
+    with open(os.path.join(s.path, fname), "r+b") as f:
+        f.seek(30)
+        b = f.read(1)
+        f.seek(30)
+        f.write(bytes([b[0] ^ 0x10]))
+    with pytest.raises(StoreCorruptionError) as ei:
+        s.read_rows(ids)
+    e = ei.value
+    assert e.chunk_start == 16
+    assert e.round_no == 7
+    assert set(e.dirty_rows) == set(range(16, 24))
+    assert "quarantine" in e.path and os.path.exists(e.path)
+    assert not os.path.exists(os.path.join(s.path, fname))
+    assert s.corrupt_chunks == 1
+
+
+def test_corrupt_clean_chunk_rebuilds_from_template(tmp_path):
+    """A mismatching chunk whose rows never held trained data self-heals:
+    quarantined and rebuilt from the field templates/defaults."""
+    import os
+
+    s, tpl = _fault_store(tmp_path)
+    ids = np.arange(16)
+    s.write_rows(ids, {"params": np.ones((16, 6), np.float32)})
+    # Reclassify the rows as template-only (the store tracks dirtiness to
+    # make exactly this call): corruption must then rebuild, not raise.
+    s._chunks[0]["dirty"].clear()
+    s.update_meta()
+    fname = s._chunks[0]["file"]
+    with open(os.path.join(s.path, fname), "r+b") as f:
+        f.seek(30)
+        b = f.read(1)
+        f.seek(30)
+        f.write(bytes([b[0] ^ 0x10]))
+    got = s.read_rows(ids)
+    np.testing.assert_array_equal(got["params"],
+                                  np.broadcast_to(tpl, (16, 6)))
+    np.testing.assert_array_equal(got["w"], np.ones(16, np.float32))
+    assert s.rebuilt_rows == 16 and s.corrupt_chunks == 1
+
+
+def test_transient_eio_is_retried_and_accounted(tmp_path):
+    """Bounded-transient read faults are absorbed by backoff + retry and
+    show up in io_retries / backoff_seconds, not as errors."""
+    fi = FaultInjector(seed=3, eio_prob=1.0, eio_max_per_path=2)
+    s, _ = _fault_store(tmp_path, faults=fi)
+    ids = np.arange(8)
+    s.write_rows(ids, {"params": np.ones((8, 6), np.float32)})
+    s.update_meta()
+    got = s.read_rows(ids)
+    np.testing.assert_array_equal(got["params"], np.ones((8, 6), np.float32))
+    assert s.io_retries >= 2
+    assert s.backoff_seconds > 0.0
+
+
+def test_torn_write_is_retried_to_durability(tmp_path):
+    """A torn write (partial tmp dumped, EIO before the rename) is healed
+    by the bounded write retry; the committed bytes verify clean."""
+    fi = FaultInjector(seed=5, torn_write_prob=1.0, torn_max_per_path=1)
+    s, _ = _fault_store(tmp_path, faults=fi)
+    ids = np.arange(8)
+    s.write_rows(ids, {"params": np.full((8, 6), 2.0, np.float32)})
+    s.update_meta()
+    assert fi.faults_injected >= 1
+    v = s.verify_chunks()
+    assert v["verified"] >= 1
+    s2 = ClientStore.open(s.path)
+    np.testing.assert_array_equal(
+        s2.read_rows(ids)["params"], np.full((8, 6), 2.0, np.float32))
+
+
+@pytest.mark.parametrize("crash_on", ["chunk-write", "manifest-commit"])
+def test_crash_points_reopen_bit_identical(tmp_path, crash_on):
+    """Kill the process mid-chunk-write / mid-manifest-commit: the reopened
+    store is bit-identical to the last committed round."""
+    import os
+
+    s, _ = _fault_store(tmp_path)
+    ids = np.arange(8)
+    s.write_rows(ids, {"params": np.full((8, 6), 1.0, np.float32)})
+    s.update_meta(round=1)
+    committed_bytes = {
+        ent["file"]: open(os.path.join(s.path, ent["file"]), "rb").read()
+        for ent in s._chunks.values()
+    }
+    s.faults = FaultInjector(seed=0, crash_on=crash_on)
+    with pytest.raises(InjectedCrash):
+        s.write_rows(ids, {"params": np.full((8, 6), 5.0, np.float32)})
+        s.update_meta(round=2)  # reached only for the manifest crash point
+    s2 = ClientStore.open(s.path)
+    assert s2.meta["round"] == 1
+    np.testing.assert_array_equal(
+        s2.read_rows(ids)["params"], np.full((8, 6), 1.0, np.float32))
+    for fname, data in committed_bytes.items():
+        assert open(os.path.join(s2.path, fname), "rb").read() == data
+    assert not [x for x in os.listdir(s2.path) if x.endswith(".tmp")]
+
+
+def test_manifest_self_checksum_detects_corruption(tmp_path):
+    """The manifest is the recovery root: a flipped bit inside it fails
+    the embedded self-seal loudly instead of mis-reading the store."""
+    import json
+    import os
+
+    s, _ = _fault_store(tmp_path)
+    s.write_rows(np.arange(4), {"params": np.ones((4, 6), np.float32)})
+    s.update_meta(round=3)
+    assert s.verify_chunks()["verified"] >= 2  # chunk + sealed manifest
+    mpath = os.path.join(s.path, "manifest.json")
+    m = json.load(open(mpath))
+    m["meta"]["round"] = 999  # tampered commit record, stale seal
+    with open(mpath, "w") as f:
+        json.dump(m, f)
+    with pytest.raises(StoreCorruptionError, match="self-checksum"):
+        ClientStore.open(s.path)
+    with pytest.raises(StoreCorruptionError):
+        s.verify_chunks()
+
+
+def test_blob_roundtrip_and_corruption_raises(tmp_path):
+    import os
+
+    s, _ = _fault_store(tmp_path)
+    live = np.array([1, 0, -1, 1], dtype=np.int8)
+    s.write_blob("churn_live", live)
+    s.update_meta()
+    np.testing.assert_array_equal(s.read_blob("churn_live"), live)
+    assert s.read_blob("never_written") is None
+    fname = s._blobs["churn_live"]["file"]
+    with open(os.path.join(s.path, fname), "r+b") as f:
+        f.seek(-1, 2)
+        b = f.read(1)
+        f.seek(-1, 2)
+        f.write(bytes([b[0] ^ 1]))
+    with pytest.raises(StoreCorruptionError, match="churn_live"):
+        s.read_blob("churn_live")
+
+
+def test_prefetch_error_carries_round_and_path_context(tmp_path):
+    """A background prefetch failure re-raises at wait() as StoreIOError
+    naming the round, operation, and file — not a bare OSError from a
+    daemon thread."""
+    import os
+
+    s, _ = _fault_store(tmp_path)
+    ids = np.arange(16, 24)
+    s.write_rows(ids, {"params": np.ones((8, 6), np.float32)})
+    s.update_meta()
+    os.remove(os.path.join(s.path, s._chunks[16]["file"]))
+    p = Prefetcher(s, RowCache(32))
+    try:
+        with pytest.raises(StoreIOError) as ei:
+            p.submit(ids, round_no=11).wait()
+    finally:
+        p.close()
+    e = ei.value
+    assert e.op == "prefetch" and e.round_no == 11
+    assert e.path and "rows_" in e.path
+    assert isinstance(e.__cause__, FileNotFoundError)
+    assert "round 11" in str(e)
+
+
+def test_writeback_error_carries_context(tmp_path):
+    """Write-back failures surface at flush() with the same context
+    wrapping (satellite: no silent background-thread deaths).  The
+    injected tear outlives the bounded retry budget, so the write is a
+    hard failure, not an absorbed transient."""
+    from repro.store import Writeback
+
+    fi = FaultInjector(seed=9, torn_write_prob=1.0, torn_max_per_path=100)
+    s, _ = _fault_store(tmp_path, faults=fi)
+    wb = Writeback(s, RowCache(32))
+    try:
+        ids = np.arange(4)
+        rows = {"params": np.ones((4, 6), np.float32)}
+        for gid in ids:
+            wb.cache.put_pending(int(gid),
+                                 {k: v[gid] for k, v in rows.items()})
+        wb.enqueue(ids, rows, round_no=5)
+        with pytest.raises(StoreIOError) as ei:
+            wb.flush()
+        assert ei.value.op == "write-back" and ei.value.round_no == 5
+        assert isinstance(ei.value.__cause__, OSError)
+    finally:
+        wb.close()
+
+
+def test_fault_injector_validation():
+    with pytest.raises(ValueError, match="probability in \\[0, 1\\]"):
+        FaultInjector(eio_prob=1.5)
+    with pytest.raises(ValueError, match="crash_on"):
+        FaultInjector(crash_on="power-loss")
+    with pytest.raises(ValueError, match="faults.*paged"):
+        model = tiny_mlp(in_dim=16, n_classes=4)
+        algo = make_algo("dfedsgpsm", local_steps=2, batch_size=8)
+        topo = TopologyConfig(kind="kout", n_clients=N, k_out=2)
+        FLTrainer(model.loss, model.init, _client_data(N), algo, topo,
+                  faults=FaultInjector(eio_prob=0.1))
