@@ -15,8 +15,10 @@ sweep scales the round from 16 to hundreds of clients at fixed ``k_out``
 and times the O(n * k_max * D) neighbor-gather gossip against the
 O(n^2 * D) dense matmul (gossip-dominated SGP config, K=1).  ``--shard``
 row-shards the whole round over a forced 8-device ``clients`` mesh
-(GSPMD) and pins sharded-vs-single-device equivalence + the push-sum mass
-invariant while recording both round times (``bench-shard.json``).  All
+(GSPMD) with both the all-gather and the halo-exchange executor, pins
+sharded-vs-single-device equivalence + the push-sum mass invariant, and
+records round times plus the CommPlan halo-rows/bytes-moved-per-round
+counters against the all-gather baseline (``bench-shard.json``).  All
 timings are median-of-k after explicit warmup (robust to container
 scheduling noise) via ``common.emit``.
 
@@ -304,21 +306,30 @@ def scaling(ns: list[int], k_out: int = 10, rounds: int = 5,
 
 def shard_bench(n: int = 512, k_out: int = 10, n_pods: int = 8,
                 rounds: int = 3, json_out: str | None = None) -> dict:
-    """Run the n-client round single-device and GSPMD row-sharded over the
-    forced 8-device ``clients`` mesh, for the flat k_out family and the
-    hierarchical two-tier family (dense intra-pod gossip + ``k_out``
-    cross-pod edges, pods aligned with shards).
+    """Run the n-client round single-device, GSPMD row-sharded with the
+    all-gather executor, and sharded with the halo-exchange executor over
+    the forced 8-device ``clients`` mesh — for the static ring family, the
+    flat k_out family, and the hierarchical two-tier family (dense
+    intra-pod gossip + ``k_out`` cross-pod edges, pods aligned with
+    shards).
 
-    Pins the tentpole invariants: the sharded superstep matches the
+    Pins the tentpole invariants: BOTH sharded supersteps match the
     single-device program to float tolerance, bank rows live on the
-    ``clients`` axis end to end, and push-sum mass stays n.  Records both
-    round times; on CI's single physical core the 8 simulated devices
-    timeshare, so ``ratio`` is collective-overhead-only — a *lower bound*
-    on real multi-device scaling (rows_per_device is the quantity that
-    drops 8x).  Uses the gossip-dominated SGP config (K=1, batch 1),
-    same as the scaling sweep.
+    ``clients`` axis end to end, and push-sum mass stays n.  Each family's
+    ``comm`` block records the CommPlan traffic accounting — halo rows /
+    bytes received per shard per mix vs the full-bank all-gather's, plus
+    the measured distinct remote rows under a sampled realization — and
+    the CI gates ride on it: the static ring's halo bytes must be at most
+    ``(k_max + 1) / n`` of the all-gather's, and no family's halo may
+    exceed all-gather parity.  On CI's single physical core the 8
+    simulated devices timeshare, so ``ratio`` is collective-overhead-only
+    — a *lower bound* on real multi-device scaling (``rows_per_device``
+    and ``halo_rows`` are the quantities that matter off-box).  Uses the
+    gossip-dominated SGP config (K=1, batch 1), same as the scaling sweep.
     """
+    from repro.comm.plan import CommPlan
     from repro.core import make_program
+    from repro.core import topology as topo_mod
     from repro.launch.mesh import make_clients_mesh
 
     n_dev = jax.device_count()
@@ -333,14 +344,16 @@ def shard_bench(n: int = 512, k_out: int = 10, n_pods: int = 8,
     results = {"n_clients": n, "n_devices": n_dev,
                "rows_per_device": n // n_dev}
     ok = True
-    for fam in ("kout", "two_tier"):
+    for fam in ("ring", "kout", "two_tier"):
         kw = {"n_pods": n_pods} if fam == "two_tier" else {}
         topo = TopologyConfig(kind=fam, n_clients=n, k_out=k_out,
                               time_varying=False, **kw)
         progs = {
             "single": make_program(net.loss, net.init, cdata, algo, topo),
             "sharded": make_program(net.loss, net.init, cdata, algo, topo,
-                                    mesh=mesh),
+                                    gossip="xla", mesh=mesh),
+            "halo": make_program(net.loss, net.init, cdata, algo, topo,
+                                 gossip="halo", mesh=mesh),
         }
         t, states = {}, {}
         for mode, prog in progs.items():
@@ -357,29 +370,81 @@ def shard_bench(n: int = 512, k_out: int = 10, n_pods: int = 8,
             states[mode] = state
             emit(f"round/shard/{fam}/{mode}", t[mode],
                  f"n={n},k_out={k_out},rounds={rounds},median")
-        sh = states["sharded"]
-        # Rows must still live on the clients axis after the superstep.
-        axis_spec = getattr(sh.params.sharding, "spec", None)
-        on_axis = axis_spec is not None and "clients" in tuple(axis_spec)
-        equiv_err = float(jax.numpy.max(jax.numpy.abs(
-            states["single"].params - jax.device_get(sh.params))))
-        mass_err = abs(float(jax.numpy.sum(sh.w)) - n)
+        fam_ok = True
+        equiv = {}
+        for mode in ("sharded", "halo"):
+            sh = states[mode]
+            # Rows must still live on the clients axis after the superstep.
+            axis_spec = getattr(sh.params.sharding, "spec", None)
+            on_axis = axis_spec is not None and "clients" in tuple(axis_spec)
+            equiv_err = float(jax.numpy.max(jax.numpy.abs(
+                states["single"].params - jax.device_get(sh.params))))
+            mass_err = abs(float(jax.numpy.sum(sh.w)) - n)
+            emit(f"round/shard/{fam}/{mode}/equiv_err", equiv_err,
+                 "max |sharded - single| over the final bank")
+            emit(f"round/shard/{fam}/{mode}/mass_err", mass_err,
+                 "|sum w - n|")
+            fam_ok = fam_ok and (on_axis and equiv_err < 5e-4 * rounds
+                                 and mass_err < 1e-3 * n / 64)
+            equiv[mode] = {"equiv_err": equiv_err, "mass_err": mass_err,
+                           "rows_on_clients_axis": bool(on_axis)}
         ratio = t["single"] / t["sharded"]
         emit(f"round/shard/{fam}/ratio", ratio,
              "single_us/sharded_us (1-core CI: collective overhead only)")
-        emit(f"round/shard/{fam}/equiv_err", equiv_err,
-             "max |sharded - single| over the final bank")
-        emit(f"round/shard/{fam}/mass_err", mass_err, "|sum w - n|")
-        fam_ok = (on_axis and equiv_err < 5e-4 * rounds
-                  and mass_err < 1e-3 * n / 64)
+
+        # -- CommPlan traffic accounting: what each executor ships ---------
+        plan = CommPlan.build(topo, n_shards=mesh.shape["clients"])
+        d = progs["single"].spec.dim
+        comm = {
+            "static": plan.static,
+            "halo_rows": plan.halo_rows(),
+            "allgather_rows": plan.allgather_rows(),
+            "halo_bytes": plan.halo_bytes(d),
+            "allgather_bytes": plan.allgather_bytes(d),
+            "bytes_ratio": round(
+                plan.halo_bytes(d) / plan.allgather_bytes(d), 6),
+        }
+        if not plan.static:
+            # the fixed-capacity transport's PHYSICAL traffic is reported
+            # above; also record the distinct rows actually needed under a
+            # sampled realization (what a zero-waste transport would ship)
+            op = topo_mod.sample_neighbors(jax.random.PRNGKey(7), topo)
+            comm["measured"] = plan.measured_rows(op)
+        emit(f"round/shard/{fam}/halo_rows", comm["halo_rows"],
+             "remote rows received per shard per mix (halo executor)")
+        emit(f"round/shard/{fam}/halo_bytes", comm["halo_bytes"],
+             f"bytes per shard per mix at D={d} (indices included)")
+        emit(f"round/shard/{fam}/bytes_ratio", comm["bytes_ratio"],
+             "halo_bytes/allgather_bytes (<1 means halo ships less)")
+        if fam == "ring":
+            # the static-plan gate: a shift family's halo is O(k) rows,
+            # at most (k_max+1)/n of the all-gather's O(n) rows
+            bound = (plan.k_max + 1) / n * plan.allgather_bytes(d)
+            assert comm["halo_bytes"] <= bound, (
+                f"ring halo ships {comm['halo_bytes']}B > (k_max+1)/n "
+                f"bound {bound:.0f}B")
+            comm["bytes_bound"] = int(bound)
+        # Row-payload parity for every family: the halo never ships more
+        # bank rows than the all-gather it replaces.  Dynamic transports at
+        # worst-case capacity (= m rows per peer) hit exact parity on the
+        # payload and pay a small integer-index overhead on top, so the
+        # strict byte gate applies to static plans only; the "measured"
+        # counter records the distinct rows a zero-waste transport would
+        # ship under a sampled realization.
+        assert comm["halo_rows"] <= comm["allgather_rows"], (
+            f"{fam}: halo ships more rows than the all-gather it replaces")
+        if plan.static:
+            assert comm["halo_bytes"] <= comm["allgather_bytes"], (
+                f"{fam}: static halo traffic exceeds the all-gather")
         ok = ok and fam_ok
         results[fam] = {
             "single_us": round(t["single"], 1),
             "sharded_us": round(t["sharded"], 1),
+            "halo_us": round(t["halo"], 1),
             "ratio": round(ratio, 3),
-            "equiv_err": equiv_err,
-            "mass_err": mass_err,
-            "rows_on_clients_axis": bool(on_axis),
+            **equiv["sharded"],
+            "halo": equiv["halo"],
+            "comm": comm,
             "ok": bool(fam_ok),
         }
         del progs, states, sh

@@ -1,0 +1,11 @@
+"""The communication-plan layer: one description of "which remote rows
+does each consumer read" shared by the sharded halo-exchange mix, the
+backend dispatch rule, and the store's fault-in closure planner."""
+from repro.comm.plan import (
+    CommPlan,
+    HaloBackend,
+    ShiftLeg,
+    resolve_backend,
+)
+
+__all__ = ["CommPlan", "HaloBackend", "ShiftLeg", "resolve_backend"]

@@ -648,12 +648,19 @@ def make_program(
     (e.g. ``jnp.bfloat16`` rows with float32 momentum — the EF residual
     stays float32, so top-k error feedback remains exact).
 
-    ``gossip`` picks the mixing-operator representation: ``"auto"``
-    (default) applies the density rule in
-    :func:`repro.kernels.ops.use_sparse_gossip` to the family's static
-    ``k_max``; ``"sparse"`` / ``"dense"`` force neighbor-list or dense
-    sampling (benchmarks compare the two; small recorded configs always
-    resolve dense, keeping the golden traces bit-for-bit).
+    ``gossip`` picks the mixing-operator representation AND (with a mesh)
+    the executor, through the one dispatch rule in
+    :func:`repro.comm.plan.resolve_backend`: ``"auto"`` (default) applies
+    the density rule in :func:`repro.kernels.ops.use_sparse_gossip` to the
+    family's static ``k_max``; ``"sparse"`` / ``"dense"`` force
+    neighbor-list or dense sampling (benchmarks compare the two; small
+    recorded configs always resolve dense, keeping the golden traces
+    bit-for-bit); ``"xla"`` forces the sparse form on the partitionable
+    all-gather executor; ``"halo"`` (mesh required) forces the sparse form
+    on the ``shard_map`` halo exchange that ships only each shard's
+    :class:`~repro.comm.plan.CommPlan` rows.  Under a mesh, ``"auto"`` /
+    ``"sparse"`` select halo automatically for the static shift families
+    (ring / exponential[_cycle]) and the all-gather otherwise.
 
     ``link`` is the unreliable-link scenario (:class:`topology.LinkModel`):
     per-round i.i.d. edge drops (renormalized before the send, so ``P_t``
@@ -673,11 +680,13 @@ def make_program(
     builds the exact immortal-population program, bitwise.
 
     ``mesh`` row-shards the whole round: bank rows (and the client data)
-    are partitioned along ``shard_axis``, the mixers are re-backed onto
-    the plain-XLA gossip executors the GSPMD partitioner can cut, and
-    ``init``/``step``/``run_superstep`` then run sharded under one jit —
-    intra-shard edges stay local, cross-shard edges become one row
-    collective.  ``None`` is the exact single-device program.
+    are partitioned along ``shard_axis``, the mixers are re-backed onto a
+    partitionable gossip executor — the all-gather form or the halo
+    exchange, per the dispatch rule above — and ``init``/``step``/
+    ``run_superstep`` then run sharded under one jit: intra-shard edges
+    stay local, cross-shard edges become one row collective (the full bank
+    on the all-gather path, only the plan's O(k) halo rows on the halo
+    path).  ``None`` is the exact single-device program.
     """
     from repro.kernels import ops as kops
 
@@ -740,11 +749,13 @@ def make_program(
             "central (server) rounds do not model compressed communication; "
             f"drop compressor={algo.compressor!r}/quantize_gossip"
         )
-    if gossip not in ("auto", "sparse", "dense"):
-        raise ValueError(f"gossip must be auto|sparse|dense, got {gossip!r}")
+    if gossip not in ("auto", "sparse", "dense", "xla", "halo"):
+        raise ValueError(
+            f"gossip must be auto|sparse|dense|xla|halo, got {gossip!r}"
+        )
     if mixer.kind == "central":
         sparse_mix = False
-    elif gossip == "sparse":
+    elif gossip in ("sparse", "xla", "halo"):
         if topo.kind == "full":
             raise ValueError(
                 "the full graph has no sparse neighbor-list form"
@@ -794,10 +805,6 @@ def make_program(
                 "the central (server) round keeps one global row — there "
                 "is no client bank to shard; drop the mesh"
             )
-        # The interpret-mode kernel executors (pallas grids, fori_loop
-        # panel slicing) defeat the GSPMD partitioner; re-back the mixer
-        # onto the plain-XLA twins (same accumulation order, bitwise).
-        mixer = dataclasses.replace(mixer, backend="xla")
         # Client-stacked data rows live with their bank rows, so the
         # vmapped local phase never moves examples across shards.
         from jax.sharding import NamedSharding, PartitionSpec
@@ -809,6 +816,20 @@ def make_program(
             )
 
         client_data = jax.tree.map(_row_put, client_data)
+    if mixer.kind != "central":
+        from repro.comm.plan import resolve_backend
+
+        backend = resolve_backend(
+            gossip, sparse_mix, topo, mixer.kind, mesh, shard_axis
+        )
+        if backend is not None:
+            # The interpret-mode kernel executors (pallas grids, fori_loop
+            # panel slicing) defeat the GSPMD partitioner; under a mesh the
+            # mixer is re-backed onto a partitionable executor: the
+            # all-gather twin ("xla" — same accumulation order, bitwise)
+            # or the shard_map halo exchange (a HaloBackend shipping only
+            # the CommPlan's remote rows per shard).
+            mixer = dataclasses.replace(mixer, backend=backend)
     shape_tree = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
     if delta is not None:
         if not isinstance(delta, DeltaConfig):

@@ -58,6 +58,7 @@ __all__ = [
     "sample_neighbors",
     "sample_active_picks",
     "active_k_in",
+    "family_k_in",
     "neighbor_k_max",
     "dense_from_neighbors",
     "is_column_stochastic",
@@ -715,23 +716,40 @@ def sample_symmetric_neighbors(key: jax.Array, n: int, k: int) -> NeighborList:
     return NeighborList(idx, wgt.astype(jnp.float32))
 
 
+def family_k_in(cfg: TopologyConfig, mixer_kind: str = "directed") -> int:
+    """THE per-family static in-degree table: the maximum number of
+    *distinct non-self* senders any receiver reads under a topology family.
+
+    This is the single source of truth every in-degree consumer derives
+    from — :func:`neighbor_k_max` (the neighbor-list slot count is always
+    ``k_in + 1``: slot 0 self + the in-edges), :func:`active_k_in` (the
+    paged fault-in closure bound), and ``repro.comm.plan.CommPlan`` (the
+    halo-exchange row sets) — so the sharded mix and the store's fault-in
+    planner can never disagree about which rows an edge set touches.
+
+    A symmetric mixer samples the undirected matching family regardless of
+    ``cfg.kind`` (mirroring ``RoundProgram.mixing_matrix``), whose degree
+    bound is ``2 * k_out`` with multiplicity.
+    """
+    if mixer_kind == "symmetric" or cfg.kind == "symmetric":
+        return 2 * cfg.k_out
+    if cfg.kind == "two_tier":
+        return cfg.n_clients // cfg.n_pods - 1 + cfg.k_out
+    if cfg.kind in ("ring", "exponential"):
+        return 1
+    if cfg.kind == "full":
+        return cfg.n_clients - 1
+    if cfg.kind == "kout":
+        return cfg.k_out
+    raise ValueError(f"unknown topology kind: {cfg.kind}")
+
+
 def neighbor_k_max(cfg: TopologyConfig, mixer_kind: str = "directed") -> int:
     """Static ``k_max`` of the neighbor-list form for a topology family —
-    the number the density dispatch rule reasons about.  ``full`` has no
-    sparse form (k_max = n).  For ``two_tier`` it is the effective
-    in-degree pod_size + k_out (the dense intra block plus the cross-pod
-    gather slots)."""
-    if cfg.kind == "two_tier":
-        return cfg.n_clients // cfg.n_pods + cfg.k_out
-    if mixer_kind == "symmetric" or cfg.kind == "symmetric":
-        return 2 * cfg.k_out + 1
-    if cfg.kind in ("ring", "exponential"):
-        return 2
-    if cfg.kind == "full":
-        return cfg.n_clients
-    if cfg.kind == "kout":
-        return cfg.k_out + 1
-    raise ValueError(f"unknown topology kind: {cfg.kind}")
+    the number the density dispatch rule reasons about.  Always
+    ``family_k_in + 1``: the conventional slot-0 self-loop plus the
+    family's in-edges (``full`` has no sparse form, so its k_max is n)."""
+    return family_k_in(cfg, mixer_kind) + 1
 
 
 def sample_neighbors(
@@ -769,13 +787,11 @@ def active_k_in(cfg: TopologyConfig) -> int:
     """Static per-receiver in-degree of :func:`sample_active_picks` —
     the fault-in closure of a paged round is at most
     ``k_active * (active_k_in + 1)`` rows (each sampled client plus its
-    in-neighbors), which sizes the compact resident bank."""
-    if cfg.kind in ("ring", "exponential"):
-        return 1
-    if cfg.kind == "kout":
-        return cfg.k_out
-    if cfg.kind == "two_tier":
-        return cfg.n_clients // cfg.n_pods - 1 + cfg.k_out
+    in-neighbors), which sizes the compact resident bank.  The value is
+    :func:`family_k_in` (the shared table); only the family restriction
+    is paging-specific."""
+    if cfg.kind in ("ring", "exponential", "kout", "two_tier"):
+        return family_k_in(cfg)
     raise ValueError(
         f"topology kind {cfg.kind!r} has no active-set (paged) form: the "
         "symmetric family needs consistent masks on both endpoints and "

@@ -15,6 +15,13 @@ scalar-prefetch DMA variant is the natural next step for very large n.  Off
 TPU the single-block interpret fast path runs the same body as plain traced
 jnp (zero per-block slicing, fuses into the caller's jit), exactly like
 ``kernels/interpret.py`` documents.
+
+One kernel body, four executors — all sharing ``_kernel``'s slot-by-slot
+f32 accumulation order, selected by ``repro.comm.plan.resolve_backend``:
+``gossip_gather_pallas`` (Mosaic/TPU), ``gossip_gather_panels`` (CPU
+column panels), ``gossip_gather_xla`` (partitionable whole-bank form — the
+GSPMD all-gather lowering), and ``gossip_gather_halo`` (the ``shard_map``
+halo exchange shipping only each shard's plan rows).
 """
 from __future__ import annotations
 
@@ -23,9 +30,11 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec
 
 __all__ = ["gossip_gather_pallas", "gossip_gather_panels",
-           "gossip_gather_xla"]
+           "gossip_gather_xla", "gossip_gather_halo"]
 
 
 def _kernel(idx_ref, wgt_ref, x_ref, o_ref):
@@ -80,23 +89,132 @@ def gossip_gather_pallas(
 
 
 def gossip_gather_xla(idx: jax.Array, wgt: jax.Array, X: jax.Array):
-    """GSPMD executor for the same kernel body: the whole-bank single-block
-    form, i.e. plain traced jnp with no loop/slice structure.
+    """GSPMD *all-gather* executor for the same kernel body: the whole-bank
+    single-block form, i.e. plain traced jnp with no loop/slice structure.
 
     Under a row-sharded bank the partitioner sees ``k_max`` ordinary row
-    gathers and lowers them to one all-gather of ``X`` followed by
-    shard-local takes — the cross-shard edges of the neighbor list become
-    exactly one collective.  The panel executor's ``fori_loop`` +
-    ``dynamic_slice`` structure defeats that analysis (and the interpret
-    pallas_call grid cannot be partitioned at all), so sharded callers
-    route here.  The slot accumulation order is the kernel's own, so
-    results are bitwise identical to the other executors.
+    gathers and lowers them to one full all-gather of ``X`` followed by
+    shard-local takes — O(n · D) received per device per mix, regardless
+    of how sparse the neighbor lists are.  That is the baseline the
+    dispatch rule (``repro.comm.plan.resolve_backend``) falls back to for
+    dense operators and for sampled families when the halo executor is not
+    forced; :func:`gossip_gather_halo` is the O(k · D) replacement that
+    ships only the rows the plan says each shard reads.  The panel
+    executor's ``fori_loop`` + ``dynamic_slice`` structure defeats the
+    partitioner's analysis (and the interpret pallas_call grid cannot be
+    partitioned at all), so sharded all-gather callers route here.  The
+    slot accumulation order is the kernel's own, so results are bitwise
+    identical to the other executors.
     """
     from repro.kernels.interpret import run_single_block
 
     return run_single_block(
         _kernel, [idx, wgt.astype(jnp.float32), X], [X.dtype]
     )
+
+
+def _halo_accumulate(idx_s, wgt_s, x_s, halo, pos, me, m):
+    """The kernel body's slot-by-slot f32 accumulation, per shard: slot l
+    reads either the shard-local row or its halo slot (``pos`` maps
+    (source shard, source-local offset) -> halo row; zero-weight slots may
+    resolve to an arbitrary halo row — they contribute exactly 0.0).  The
+    accumulation order is ``_kernel``'s own, so per shard the result
+    matches the all-gather executor's float32 sequence."""
+    k_max = idx_s.shape[1]
+    src = idx_s // m
+    off = idx_s % m
+    acc = None
+    for l in range(k_max):
+        local = src[:, l] == me
+        v_local = jnp.take(x_s, off[:, l], axis=0)
+        v_halo = jnp.take(halo, pos[src[:, l], off[:, l]], axis=0)
+        v = jnp.where(local[:, None], v_local, v_halo).astype(jnp.float32)
+        term = wgt_s[:, l].astype(jnp.float32)[:, None] * v
+        acc = term if acc is None else acc + term
+    return acc.astype(x_s.dtype)
+
+
+def gossip_gather_halo(idx: jax.Array, wgt: jax.Array, X: jax.Array, *,
+                       mesh, axis: str, plan):
+    """Halo-exchange executor: the same mix under ``shard_map``, shipping
+    only the remote rows each shard's receivers actually read (the
+    ``repro.comm.plan.CommPlan``) instead of all-gathering the bank.
+
+    Static plans (ring / exponential / exponential-cycle) run one
+    ``ppermute`` per :class:`~repro.comm.plan.ShiftLeg` — exact O(k) rows
+    per shard, zero index traffic.  Dynamic plans (sampled families) run a
+    fixed-capacity request/response ``all_to_all`` pair: each shard
+    scatters the rows it needs into a per-source bitmap, ships the padded
+    request lists, serves the gathers, and ships the payload back; a
+    dropped / churned / delayed-away edge has weight 0 and requests
+    nothing.  Either way the per-shard accumulation is ``_kernel``'s
+    slot-by-slot f32 order, so the result matches the all-gather executor
+    per shard.
+    """
+    s, m = plan.n_shards, plan.m
+    if s == 1 or mesh is None or axis not in mesh.axis_names:
+        return gossip_gather_xla(idx, wgt, X)
+
+    if plan.static:
+
+        def body(idx_s, wgt_s, x_s):
+            me = jax.lax.axis_index(axis)
+            bufs = []
+            # pos[(src shard, src-local offset)] -> halo row; the extra
+            # column m absorbs nothing here (static offsets are exact).
+            pos = jnp.zeros((s, m + 1), jnp.int32)
+            base = 0
+            for leg in plan.legs:
+                offs = jnp.asarray(leg.offsets, jnp.int32)
+                payload = jnp.take(x_s, offs, axis=0)
+                bufs.append(jax.lax.ppermute(
+                    payload, axis,
+                    [(p, (p + leg.delta) % s) for p in range(s)],
+                ))
+                # The rows just received came from shard me - delta.
+                pos = pos.at[(me - leg.delta) % s, offs].set(
+                    base + jnp.arange(offs.shape[0], dtype=jnp.int32)
+                )
+                base += len(leg.offsets)
+            halo = (jnp.concatenate(bufs, axis=0) if bufs
+                    else jnp.zeros((1, x_s.shape[1]), x_s.dtype))
+            return _halo_accumulate(idx_s, wgt_s, x_s, halo, pos, me, m)
+
+    else:
+        H = plan.capacity
+
+        def body(idx_s, wgt_s, x_s):
+            me = jax.lax.axis_index(axis)
+            src = idx_s // m
+            off = idx_s % m
+            remote = (wgt_s != 0.0) & (src != me)
+            # Which of each source shard's m rows do my receivers read?
+            need = jnp.zeros((s, m), jnp.int32).at[src, off].add(
+                remote.astype(jnp.int32)) > 0
+            # Fixed-shape dedup: row p = the (padded) offsets I request
+            # from shard p; the fill value m marks an unused request slot.
+            req = jax.vmap(
+                lambda row: jnp.nonzero(row, size=H, fill_value=m)[0]
+            )(need).astype(jnp.int32)
+            req_in = jax.lax.all_to_all(req, axis, 0, 0, tiled=True)
+            payload = jnp.take(
+                x_s, jnp.clip(req_in, 0, m - 1).reshape(-1), axis=0
+            ).reshape(s, H, x_s.shape[1])
+            halo = jax.lax.all_to_all(payload, axis, 0, 0, tiled=True)
+            # Reverse map: fill-value writes land in the throwaway column
+            # m, real offsets get their flat halo row s*H-indexed.
+            pos = jnp.zeros((s, m + 1), jnp.int32).at[
+                jnp.arange(s, dtype=jnp.int32)[:, None], req
+            ].set(jnp.arange(s * H, dtype=jnp.int32).reshape(s, H))
+            return _halo_accumulate(
+                idx_s, wgt_s, x_s, halo.reshape(s * H, -1), pos, me, m
+            )
+
+    spec = PartitionSpec(axis)
+    return shard_map(
+        body, mesh=mesh, in_specs=(spec, spec, spec), out_specs=spec,
+        check_rep=False,
+    )(idx, wgt, X)
 
 
 @functools.partial(jax.jit, static_argnames=("panel",))

@@ -67,6 +67,17 @@ def use_sparse_gossip(n: int, k_max: int) -> bool:
     return n >= floor and k_max <= _SPARSE_GOSSIP_MAX_DENSITY * n
 
 
+def _is_halo(use_kernel) -> bool:
+    """Is this ``use_kernel`` a ``repro.comm.plan.HaloBackend``?  Lazy
+    import: the kernels layer must not depend on the comm layer at module
+    load (comm builds on topology, which the kernels never import)."""
+    if not isinstance(use_kernel, tuple):
+        return False
+    from repro.comm.plan import HaloBackend
+
+    return isinstance(use_kernel, HaloBackend)
+
+
 def gossip_mix(P, M, use_kernel: bool | None = None):
     """One mixing matmul ``M' = P @ M`` with centralized backend selection.
 
@@ -77,13 +88,14 @@ def gossip_mix(P, M, use_kernel: bool | None = None):
     each call site hard-coding its own boolean.  ``use_kernel="xla"``
     forces the plain-XLA einsum regardless of size: under GSPMD the
     partitioner must see ordinary HLO (no interpret-mode loop/slice
-    structure) to shard the mixing correctly.
+    structure) to shard the mixing correctly.  A halo backend degrades to
+    the einsum too — a dense operator has no sparse row set to ship.
     """
     import jax.numpy as jnp
 
     if use_kernel is None:
         use_kernel = on_tpu() or M.size >= _GOSSIP_KERNEL_MIN_ELEMS
-    elif use_kernel == "xla":
+    elif use_kernel == "xla" or _is_halo(use_kernel):
         use_kernel = False
     if use_kernel:
         return gossip_matmul(P.astype(jnp.float32), M)
@@ -104,7 +116,10 @@ def gossip_mix_sparse(idx, wgt, M, use_kernel: bool | None = None):
     :func:`~repro.kernels.gossip_gather.gossip_gather_xla` — the kernel
     body as plain traced jnp, same accumulation order, no loop/slice
     structure — so the GSPMD partitioner can turn the row gather into one
-    cross-shard collective."""
+    full-bank all-gather.  A :class:`repro.comm.plan.HaloBackend` routes
+    to :func:`~repro.kernels.gossip_gather.gossip_gather_halo` instead:
+    the ``shard_map`` halo exchange shipping only the plan's remote rows
+    per shard."""
     import jax.numpy as jnp
 
     if use_kernel is None:
@@ -113,6 +128,13 @@ def gossip_mix_sparse(idx, wgt, M, use_kernel: bool | None = None):
         from repro.kernels.gossip_gather import gossip_gather_xla
 
         return gossip_gather_xla(idx, wgt, M)
+    elif _is_halo(use_kernel):
+        from repro.kernels.gossip_gather import gossip_gather_halo
+
+        return gossip_gather_halo(
+            idx, wgt, M, mesh=use_kernel.mesh, axis=use_kernel.axis,
+            plan=use_kernel.plan,
+        )
     if use_kernel:
         return gossip_gather(idx, wgt.astype(jnp.float32), M)
     from repro.kernels.ref import gossip_gather_ref

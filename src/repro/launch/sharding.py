@@ -21,6 +21,7 @@ __all__ = [
     "use_mesh",
     "active_mesh",
     "constrain",
+    "in_manual_region",
     "spec_for",
     "sharding_for",
     "bank_row_pins",
@@ -147,8 +148,39 @@ def bank_row_pins(mesh: Optional[Mesh], axis: str):
     return pin, pin_link
 
 
+def in_manual_region(mesh: Optional[Mesh] = None) -> bool:
+    """Is the current trace inside a ``shard_map`` manual region over any
+    axis of ``mesh`` (the active mesh when ``None``)?
+
+    Inside such a region values are *per-shard* and GSPMD sharding
+    constraints do not apply — ``with_sharding_constraint`` would raise.
+    The probe is ``jax.lax.axis_index``: a mesh axis name is bound as a
+    collective axis exactly inside the manual region (a plain jit, and
+    ``vmap(spmd_axis_name=...)``, leave it unbound — constraints there are
+    valid and wanted).
+    """
+    if mesh is None:
+        mesh = active_mesh()
+    if mesh is None:
+        return False
+    for name in mesh.axis_names:
+        try:
+            jax.lax.axis_index(name)
+        except NameError:
+            continue
+        return True
+    return False
+
+
 def constrain(x, logical: tuple):
-    """Activation sharding constraint by logical names (no-op without mesh)."""
+    """Activation sharding constraint by logical names (no-op without mesh).
+
+    Inside a ``shard_map`` manual region (the halo gossip executor, or any
+    model code a caller maps manually) the value is already per-shard and
+    the constraint is explicitly skipped — detected by
+    :func:`in_manual_region`, not by swallowing errors, so a genuinely
+    malformed constraint (bad axis name, rank mismatch) still raises.
+    """
     if not _STATE:
         return x
     mesh, _ = _STATE[-1]
@@ -162,7 +194,6 @@ def constrain(x, logical: tuple):
         n = _axis_size(mesh, mesh_axis)
         if n and x.shape[i] % n == 0 and mesh_axis not in spec:
             spec[i] = mesh_axis
-    try:
-        return jax.lax.with_sharding_constraint(x, P(*spec))
-    except Exception:
-        return x  # inside shard_map manual region etc.
+    if in_manual_region(mesh):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*spec))

@@ -24,7 +24,8 @@ from repro.models.registry import ModelApi
 
 __all__ = ["StepConfig", "make_train_step", "make_round_step", "make_serve_step",
            "PersonalizedServe", "make_personalized_serve_step",
-           "pod_mixing_matrix", "pod_mixing_neighbors", "resolve_compressor",
+           "pod_mixing_matrix", "pod_mixing_neighbors", "pod_comm_plan",
+           "resolve_compressor",
            "init_pod_comp_state", "resolve_pod_mixer", "init_pod_link_state"]
 
 
@@ -195,6 +196,21 @@ def make_train_step(api: ModelApi, step_cfg: StepConfig) -> Callable:
     return train_step
 
 
+def pod_comm_plan(n_pods: int, n_shards: int):
+    """The pod runtime's :class:`~repro.comm.plan.CommPlan`: the pod graph
+    is the directed ring of :func:`pod_mixing_matrix`, so the plan is the
+    ring family's static shift plan over the "pod" axis — one ppermute of
+    the boundary rows per round instead of an all-gather of every pod's
+    replica."""
+    from repro.comm.plan import CommPlan
+    from repro.core.topology import TopologyConfig
+
+    return CommPlan.build(
+        TopologyConfig(kind="ring", n_clients=n_pods, k_out=1),
+        n_shards=n_shards,
+    )
+
+
 def make_round_step(
     api: ModelApi,
     step_cfg: StepConfig,
@@ -202,6 +218,7 @@ def make_round_step(
     mixer=None,
     compressor=None,
     link_model=None,
+    gossip: str = "auto",
 ) -> Callable:
     """Multi-pod DFL round: (stacked params, stacked v, w (n_pods,),
     comp, link, batch (n_pods, ...), P_pod) -> updated
@@ -231,6 +248,14 @@ def make_round_step(
     link-appropriate directed push-sum stage (``resolve_pod_mixer``); a
     ``SymmetricMixer`` swaps in doubly-stochastic gossip with fixed
     weights.
+
+    ``gossip`` is the executor knob of the same dispatch rule the
+    simulation engine uses (``repro.comm.plan.resolve_backend``), resolved
+    at trace time against the active mesh's "pod" axis: ``"auto"`` keeps
+    the size-based default, ``"xla"`` forces the partitionable all-gather
+    form, ``"halo"`` forces the ring halo exchange (requires a directed
+    mixer and ``P_pod = pod_mixing_neighbors(n_pods)`` — the pod graph the
+    runtime defines, whose static :func:`pod_comm_plan` the executor ships).
     """
     from repro.core.stages import IdentityCompressor
     from repro.core.topology import NeighborList
@@ -243,6 +268,17 @@ def make_round_step(
     if compressor is None:
         compressor = resolve_compressor(step_cfg)
     linked = link_model is not None or getattr(mixer, "link_stateful", False)
+    if gossip not in ("auto", "xla", "halo"):
+        raise ValueError(
+            f"pod gossip must be auto|xla|halo, got {gossip!r}"
+        )
+    if gossip == "halo" and mixer.kind != "directed":
+        raise ValueError(
+            "the pod halo executor ships the directed ring plan; "
+            f"mixer kind {mixer.kind!r} has no pod halo form"
+        )
+    if gossip == "halo" and not flat_mix:
+        raise ValueError("gossip='halo' requires flat_mix=True (bank layout)")
     if not flat_mix and not isinstance(compressor, IdentityCompressor):
         raise ValueError("compression requires flat_mix=True (bank layout)")
     if not flat_mix and linked:
@@ -282,9 +318,36 @@ def make_round_step(
         # the SPMD partitioner mis-propagates shardings through the ravel
         # reshape/concat chain and silently corrupts the mix (it also logs
         # "Involuntary full rematerialization" while doing so).
-        pin, pin_link = shlib.bank_row_pins(shlib.active_mesh(), "pod")
+        mesh = shlib.active_mesh()
+        pin, pin_link = shlib.bank_row_pins(mesh, "pod")
+        mx = mixer
+        if gossip != "auto" and mesh is not None and "pod" in mesh.axis_names:
+            # Same dispatch rule as the simulation engine: "xla" re-backs
+            # onto the partitionable all-gather twin; "halo" onto the pod
+            # ring's static shift plan (one boundary-row ppermute).
+            n_pods = jax.tree.leaves(params)[0].shape[0]
+            if gossip == "halo" and n_pods > 1 and mesh.shape["pod"] > 1:
+                if not isinstance(P_pod, NeighborList):
+                    raise ValueError(
+                        "gossip='halo' needs the neighbor-list pod ring "
+                        "(pod_mixing_neighbors), not a dense P_pod"
+                    )
+                from repro.comm.plan import HaloBackend
+
+                # mix_flat traces under jit: the plan build samples the
+                # ring neighbor list with jnp ops, which must evaluate
+                # eagerly (the plan is static host-side metadata, not part
+                # of the traced computation).
+                with jax.ensure_compile_time_eval():
+                    plan = pod_comm_plan(n_pods, mesh.shape["pod"])
+                backend = HaloBackend(mesh, "pod", plan)
+            else:
+                # A single pod (or a 1-wide pod axis) has no cross-shard
+                # halo to ship; the all-gather form is already local.
+                backend = "xla"
+            mx = dataclasses.replace(mixer, backend=backend)
         bank, w, comp, link, extras = comm_phase(
-            compressor, mixer, P_pod, bank, w, comp, link,
+            compressor, mx, P_pod, bank, w, comp, link,
             linked=linked, link_model=link_model,
             symmetric=mixer.kind == "symmetric",
             pin=pin, pin_link=pin_link,

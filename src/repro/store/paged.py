@@ -101,6 +101,12 @@ def make_plan(topo, k_active: int, c_max: int, key, t: int,
     """One round's host-side plan off the shared PRNG chain: sample the
     active set, its in-neighbor picks, and build the compact operator.
 
+    ``topo`` is a :class:`~repro.core.topology.TopologyConfig` or a
+    prebuilt :class:`~repro.comm.plan.CommPlan` — the pager is a thin
+    consumer of the same communication plan the sharded halo mix ships
+    rows from, so "which rows does a consumer read" has exactly one
+    definition.
+
     With a churn liveness vector ``live`` (codes of
     :data:`repro.core.topology.LIVE` etc.), dead clients leave the pool:
     the active set is the first ``k_active`` *live* ids of the same
@@ -108,6 +114,10 @@ def make_plan(topo, k_active: int, c_max: int, key, t: int,
     bit), and a pick landing on a dead sender is remapped to the
     receiver's own id — an inert edge ``build_plan`` voids, leaving the
     dead row's identity column (and its mass) untouched on disk."""
+    from repro.comm.plan import CommPlan
+
+    comm = topo if isinstance(topo, CommPlan) else CommPlan.build(topo)
+    topo = comm.topo
     key_next, akey, tkey, ckey_base = plan_keys(key)
     perm = np.asarray(jax.random.permutation(akey, topo.n_clients))
     if live is not None:
@@ -121,8 +131,8 @@ def make_plan(topo, k_active: int, c_max: int, key, t: int,
         active = alive[:k_active]
     else:
         active = perm[:k_active]
-    picks = np.asarray(topology.sample_active_picks(
-        tkey, jnp.asarray(active, jnp.int32), topo, t=t
+    picks = np.asarray(comm.in_neighbors(
+        tkey, jnp.asarray(active, jnp.int32), t=t
     ))
     if live is not None:
         picks = np.where(live[picks] == topology.LIVE,
@@ -178,8 +188,11 @@ class PagedRunner:
         self.topo = program.topo
         self.n = program.n
         self.k_active = int(k_active)
-        self.k_in = topology.active_k_in(self.topo)
-        self.c_max = paging.closure_bound(self.n, k_active, self.k_in)
+        from repro.comm.plan import CommPlan
+
+        self.comm = CommPlan.build(self.topo)
+        self.k_in = self.comm.k_in
+        self.c_max = self.comm.closure_bound(k_active)
         self.prefetch_enabled = bool(prefetch)
         self.stats = PagerStats()
         self._fields = bank_fields(program)
@@ -450,7 +463,7 @@ class PagedRunner:
         else:
             self._ensure_live(self._round)
             plan = make_plan(
-                self.topo, self.k_active, self.c_max, self._key,
+                self.comm, self.k_active, self.c_max, self._key,
                 self._round,
                 live=self._live if self._churn is not None else None,
             )
@@ -478,7 +491,7 @@ class PagedRunner:
         # so planning ahead sees exactly the liveness round t+1 will.
         self._ensure_live(plan.t + 1)
         next_plan = make_plan(
-            self.topo, self.k_active, self.c_max, plan.key_next,
+            self.comm, self.k_active, self.c_max, plan.key_next,
             plan.t + 1,
             live=self._live if self._churn is not None else None,
         )
@@ -703,8 +716,11 @@ class ResidentDriver:
         self.topo = program.topo
         self.n = program.n
         self.k_active = int(k_active)
-        self.k_in = topology.active_k_in(self.topo)
-        self.c_max = paging.closure_bound(self.n, k_active, self.k_in)
+        from repro.comm.plan import CommPlan
+
+        self.comm = CommPlan.build(self.topo)
+        self.k_in = self.comm.k_in
+        self.c_max = self.comm.closure_bound(k_active)
         self._churn = churn if churn is not None and churn.active else None
 
         key = jax.random.PRNGKey(seed)
@@ -804,7 +820,7 @@ class ResidentDriver:
         if self._churn is not None:
             self._advance_churn(self._round)
         plan = make_plan(
-            self.topo, self.k_active, self.c_max, self._key, self._round,
+            self.comm, self.k_active, self.c_max, self._key, self._round,
             live=self._live if self._churn is not None else None,
         )
         P = paging.dense_partial_operator(plan.active, plan.picks, self.n)

@@ -259,6 +259,56 @@ def test_round_step_threads_link_carry():
         resolve_pod_mixer(StepConfig()), None, params) == ()
 
 
+def test_pod_comm_plan_is_static_ring():
+    """The pod runtime's CommPlan: the directed pod ring has a static
+    shift plan — one boundary row per shard pair, zero index traffic."""
+    from repro.launch.steps import pod_comm_plan
+
+    plan = pod_comm_plan(8, 4)
+    assert plan.static and plan.k_in == 1
+    assert plan.halo_rows() == 1 and plan.request_ints() == 0
+    # a single-shard pod axis ships nothing
+    assert pod_comm_plan(8, 1).halo_rows() == 0
+
+
+def test_round_step_gossip_knob_validation():
+    from repro.core.stages import SymmetricMixer
+    from repro.launch.steps import StepConfig, make_round_step
+
+    api, *_ = _pod_setting()
+    with pytest.raises(ValueError, match="auto|xla|halo"):
+        make_round_step(api, StepConfig(), gossip="bogus")
+    with pytest.raises(ValueError, match="flat_mix"):
+        make_round_step(api, StepConfig(), flat_mix=False, gossip="halo")
+    with pytest.raises(ValueError, match="no pod halo form"):
+        make_round_step(api, StepConfig(), gossip="halo",
+                        mixer=SymmetricMixer())
+
+
+def test_round_step_gossip_forms_agree_without_mesh():
+    """Off-mesh the knob must be a pure executor choice: halo falls
+    through to the local form (nothing to ship) and xla re-backs onto the
+    traced-jnp twin — all three produce the same round."""
+    from repro.launch.steps import StepConfig, make_round_step, \
+        pod_mixing_neighbors
+
+    api, params, v, w, batches = _pod_setting()
+    nl = pod_mixing_neighbors(2)
+    outs = {}
+    for gossip in ("auto", "xla", "halo"):
+        step = jax.jit(make_round_step(api, StepConfig(lr=0.05, rho=0.0),
+                                       gossip=gossip))
+        outs[gossip] = step(params, v, w, (), (), batches, nl)
+    for gossip in ("xla", "halo"):
+        for a, b in zip(jax.tree.leaves(outs["auto"][0]),
+                        jax.tree.leaves(outs[gossip][0])):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=2e-4, atol=2e-5)
+        np.testing.assert_allclose(np.asarray(outs["auto"][2]),
+                                   np.asarray(outs[gossip][2]), rtol=1e-6)
+
+
 # ---------------------------------------------------------------------------
 # Multi-device pod gossip on a real (2,2,2) host mesh via subprocess.
 # ---------------------------------------------------------------------------
@@ -301,3 +351,66 @@ def test_multidevice_pod_gossip_consensus():
                        text=True, env=env, cwd="/root/repo", timeout=300)
     assert r.returncode == 0, r.stderr[-2000:]
     assert "OK consensus= 2.0" in r.stdout
+
+
+_SUBPROC_HALO = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs.registry import get_config, make_batch
+from repro.launch import sharding as shlib
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import StepConfig, make_round_step, \
+    pod_mixing_neighbors
+from repro.models.registry import get_model_api
+
+mesh = make_host_mesh((2, 2, 2), ("pod", "data", "model"))
+cfg = get_config("xlstm-350m", smoke=True)
+api = get_model_api(cfg)
+n_pods = 2
+params = jax.tree.map(lambda x: jnp.broadcast_to(x, (n_pods,) + x.shape),
+                      api.init(jax.random.PRNGKey(0)))
+v = jax.tree.map(jnp.zeros_like, params)
+w = jnp.ones((n_pods,))
+batch = make_batch(cfg, 4, 16, seed=0)
+batches = jax.tree.map(lambda x: jnp.broadcast_to(x, (n_pods, 1) + x.shape),
+                       batch)
+nl = pod_mixing_neighbors(n_pods)
+outs = {}
+with shlib.use_mesh(mesh):
+    pp = jax.device_put(params, jax.tree.map(
+        lambda x: NamedSharding(mesh, P("pod")), params))
+    for gossip in ("xla", "halo"):
+        # the halo branch builds pod_comm_plan at TRACE time; a regression
+        # that samples the neighbor list with traced jnp ops dies here
+        step = jax.jit(make_round_step(api, StepConfig(lr=0.05, rho=0.0),
+                                       gossip=gossip))
+        outs[gossip] = jax.device_get(step(pp, v, w, (), (), batches, nl))
+err = max(float(jnp.max(jnp.abs(jnp.asarray(a, jnp.float32)
+                                - jnp.asarray(b, jnp.float32))))
+          for a, b in zip(jax.tree.leaves(outs["xla"][0]),
+                          jax.tree.leaves(outs["halo"][0])))
+assert err < 1e-5, err
+np.testing.assert_allclose(np.asarray(outs["xla"][2]),
+                           np.asarray(outs["halo"][2]), rtol=1e-6)
+assert abs(float(outs["halo"][2].sum()) - n_pods) < 1e-4
+print("OK pod halo err=", err)
+"""
+
+
+def test_multidevice_pod_halo_matches_xla():
+    """The pod halo executor on a REAL (2,2,2) mesh: gossip='halo' runs
+    the ring's static shift plan over the "pod" axis and must match the
+    all-gather executor through a full round with exact pod mass.  Also
+    pins that ``pod_comm_plan`` builds eagerly inside the jit trace —
+    single-device equivalence checks cannot catch either failure."""
+    import os
+
+    env = {**os.environ, "PYTHONPATH": "src"}
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _SUBPROC_HALO],
+                       capture_output=True, text=True, env=env,
+                       cwd="/root/repo", timeout=540)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "OK pod halo err=" in r.stdout
